@@ -1,0 +1,91 @@
+"""Kernel micro-benchmarks (XLA path wall-clock on CPU; the Pallas kernels
+are TPU-target and validated under interpret mode — timing interpret mode is
+meaningless, so derived reports the oracle-match status instead)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_attention(quick=True):
+    shapes = [(1, 512, 8, 2, 64)] if quick else \
+        [(1, 512, 8, 2, 64), (2, 1024, 16, 4, 64), (1, 2048, 8, 8, 128)]
+    for (b, s, h, hkv, d) in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.bfloat16)
+        us = _time(lambda *a: ops.flash_attention(*a, backend="xla"), q, k, v)
+        flops = 4 * b * s * s * h * d / 2  # causal
+        yield (f"kernels/flash-b{b}s{s}h{h}d{d},"
+               f"{us:.1f},gflops_s={flops / us / 1e3:.2f}")
+
+
+def bench_paged_attention(quick=True):
+    shapes = [(8, 8, 2, 64, 128, 16, 16)] if quick else \
+        [(8, 8, 2, 64, 128, 16, 16), (32, 16, 4, 128, 512, 16, 64)]
+    for (b, h, hkv, d, npages_pool, page, npg) in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        q = jax.random.normal(ks[0], (b, h, d), jnp.bfloat16)
+        kp = jax.random.normal(ks[1], (npages_pool, page, hkv, d), jnp.bfloat16)
+        vp = jax.random.normal(ks[2], (npages_pool, page, hkv, d), jnp.bfloat16)
+        bt = jax.random.randint(ks[3], (b, npg), 0, npages_pool)
+        cl = jnp.full((b,), npg * page, jnp.int32)
+        us = _time(lambda *a: ops.paged_attention(*a, backend="xla"),
+                   q, kp, vp, bt, cl)
+        kv_bytes = b * npg * page * hkv * d * 2 * 2
+        yield (f"kernels/paged-b{b}h{h}ctx{npg * page},"
+               f"{us:.1f},gbps={kv_bytes / us / 1e3:.2f}")
+
+
+def bench_ssd(quick=True):
+    shapes = [(2, 512, 16, 64, 1, 64)] if quick else \
+        [(2, 512, 16, 64, 1, 64), (4, 2048, 32, 64, 1, 128)]
+    for (b, s, h, p, g, n) in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        x = jax.random.normal(ks[0], (b, s, h, p), jnp.bfloat16)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(jnp.bfloat16)
+        a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        bb = (jax.random.normal(ks[3], (b, s, g, n)) * 0.3).astype(jnp.bfloat16)
+        cc = (jax.random.normal(ks[4], (b, s, g, n)) * 0.3).astype(jnp.bfloat16)
+        us = _time(lambda *args: ops.ssd(*args, chunk=128)[0],
+                   x, dt, a, bb, cc)
+        yield f"kernels/ssd-b{b}s{s}h{h},{us:.1f},tok_us={b * s / us:.2f}"
+
+
+def bench_kernel_oracle_match():
+    """Interpret-mode kernels vs oracles (correctness as a 'benchmark row'
+    so the harness surfaces any drift)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    a = ops.flash_attention(q, k, v, backend="pallas_interpret",
+                            block_q=32, block_k=32)
+    b = ref.flash_attention_ref(q, k, v)
+    err = float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                b.astype(jnp.float32))))
+    yield f"kernels/pallas-oracle-maxerr,0.0,err={err:.2e}"
+
+
+ALL = {
+    "attention": bench_attention,
+    "paged": bench_paged_attention,
+    "ssd": bench_ssd,
+    "oracle": bench_kernel_oracle_match,
+}

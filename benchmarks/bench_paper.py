@@ -1,0 +1,114 @@
+"""Paper-figure benchmarks (§5 + appendix).
+
+One function per figure family; each yields CSV rows
+``name,us_per_call,derived``.  ``quick`` mode shrinks thread counts and
+durations for CI; ``--full`` approaches the paper's grid (within the GIL
+caveat recorded in DESIGN.md §2 — relative scheme ordering and mechanism
+counters are the reproducible signal, not absolute EPYC-scale Mops)."""
+
+from __future__ import annotations
+
+from repro.core.workload import run_workload
+
+SCHEMES = ["NR", "EBR", "HP", "HE", "IBR", "HLN"]
+SCOT_SCHEMES = ["HP", "HE", "IBR", "HLN"]
+
+
+def _row(name, result):
+    us = 1e6 / max(result.total_ops / result.duration_s, 1e-9)
+    return (f"{name},{us:.3f},"
+            f"mops={result.mops_per_s:.4f};"
+            f"unreclaimed={result.avg_not_reclaimed:.1f};"
+            f"restarts={result.ds_stats.get('restarts', 0)}")
+
+
+def fig7_recovery(quick=True):
+    """Figure 7: HList with vs without restart recovery (50r-50w)."""
+    threads = [2, 4] if quick else [1, 4, 8, 16]
+    ranges = [512] if quick else [512, 10000]
+    dur = 0.4 if quick else 3.0
+    for scheme in SCOT_SCHEMES:
+        for kr in ranges:
+            for t in threads:
+                for rec in (False, True):
+                    r = run_workload(
+                        structure="HList", scheme=scheme, threads=t,
+                        key_range=kr, workload="50r-50w", duration_s=dur,
+                        structure_kwargs={"recovery": rec})
+                    tag = "rec" if rec else "norec"
+                    yield _row(f"fig7/HList-{scheme}-k{kr}-t{t}-{tag}", r)
+
+
+def fig8_list_throughput(quick=True, workload="50r-50w"):
+    """Figure 8 (and Figs 12/14 via workload): HMList vs HList × schemes ×
+    key ranges × threads."""
+    threads = [2, 4] if quick else [1, 4, 8, 16]
+    ranges = [16, 512] if quick else [16, 512, 10000]
+    dur = 0.4 if quick else 3.0
+    for structure in ("HMList", "HList"):
+        for scheme in SCHEMES:
+            for kr in ranges:
+                for t in threads:
+                    r = run_workload(structure=structure, scheme=scheme,
+                                     threads=t, key_range=kr,
+                                     workload=workload, duration_s=dur)
+                    yield _row(
+                        f"fig8/{structure}-{scheme}-k{kr}-t{t}-{workload}", r)
+
+
+def fig9_tree_throughput(quick=True, workload="50r-50w"):
+    """Figure 9 (and Figs 13/15): NMTree × schemes × key ranges."""
+    threads = [2, 4] if quick else [1, 4, 8, 16]
+    ranges = [128] if quick else [128, 100000]
+    dur = 0.4 if quick else 3.0
+    for scheme in SCHEMES:
+        for kr in ranges:
+            for t in threads:
+                r = run_workload(structure="NMTree", scheme=scheme,
+                                 threads=t, key_range=kr,
+                                 workload=workload, duration_s=dur)
+                yield _row(f"fig9/NMTree-{scheme}-k{kr}-t{t}-{workload}", r)
+
+
+def fig10_11_memory(quick=True):
+    """Figures 10/11: avg not-yet-reclaimed objects (lower is better).
+    Hyaline omitted per the paper (global reclamation; no cheap local
+    count)."""
+    dur = 0.4 if quick else 3.0
+    t = 4
+    for structure, kr in (("HMList", 512), ("HList", 512), ("NMTree", 128)):
+        for scheme in ["EBR", "HP", "HE", "IBR"]:
+            r = run_workload(structure=structure, scheme=scheme, threads=t,
+                             key_range=kr, workload="50r-50w", duration_s=dur)
+            yield (f"fig10-11/{structure}-{scheme}-k{kr}-mem,"
+                   f"{r.avg_not_reclaimed:.1f},"
+                   f"max={r.max_not_reclaimed};mops={r.mops_per_s:.4f}")
+
+
+def scot_mechanism_counters(quick=True):
+    """Thread-count-independent mechanism evidence: HList's SCOT counters
+    and HMList's extra cleanup CASes (the cost Michael's approach pays)."""
+    dur = 0.4 if quick else 2.0
+    for scheme in SCOT_SCHEMES:
+        r = run_workload(structure="HList", scheme=scheme, threads=4,
+                         key_range=64, workload="0r-100w", duration_s=dur)
+        ds = r.ds_stats
+        yield (f"scot/HList-{scheme}-counters,"
+               f"{1e6 / max(r.total_ops / r.duration_s, 1e-9):.3f},"
+               f"validfail={ds['validation_failures']};"
+               f"recov={ds['recoveries']};ring={ds['ring_recoveries']};"
+               f"restarts={ds['restarts']}")
+    r = run_workload(structure="HMList", scheme="HP", threads=4,
+                     key_range=64, workload="0r-100w", duration_s=dur)
+    yield (f"scot/HMList-HP-cleanupcas,"
+           f"{1e6 / max(r.total_ops / r.duration_s, 1e-9):.3f},"
+           f"cleanup_cas={r.ds_stats['cleanup_cas']}")
+
+
+ALL_FIGS = {
+    "fig7": fig7_recovery,
+    "fig8": fig8_list_throughput,
+    "fig9": fig9_tree_throughput,
+    "fig10_11": fig10_11_memory,
+    "scot_counters": scot_mechanism_counters,
+}

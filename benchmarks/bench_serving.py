@@ -1,0 +1,49 @@
+"""Serving-engine benchmark: end-to-end continuous batching throughput with
+and without the SCOT prefix cache, across SMR schemes — the framework-level
+restatement of the paper's Harris-vs-HM comparison."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import PagedServingEngine, Request
+
+
+def bench_serving(quick=True):
+    cfg = get_config("tinyllama-1.1b").reduced().replace(dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(7))
+    schemes = ["EBR", "IBR"] if quick else ["EBR", "HP", "HE", "IBR", "HLN"]
+    n_reqs = 6 if quick else 24
+    for smr in schemes:
+        for optimistic in (True, False):
+            eng = PagedServingEngine(model, params, smr=smr, num_pages=128,
+                                     page_size=8, max_batch=4,
+                                     max_seq_len=64,
+                                     prefix_optimistic=optimistic)
+            rng = np.random.RandomState(0)
+            shared = list(rng.randint(1, 200, size=16))
+            reqs = [Request(prompt=shared + list(rng.randint(1, 200, size=4)),
+                            max_new_tokens=6) for _ in range(n_reqs)]
+            t = threading.Thread(target=eng.run, daemon=True)
+            t.start()
+            t0 = time.perf_counter()
+            for r in reqs:
+                eng.submit(r)
+            for r in reqs:
+                r.done.wait(timeout=300)
+            dt = time.perf_counter() - t0
+            eng.stop()
+            t.join(timeout=10)
+            toks = sum(len(r.out_tokens) for r in reqs)
+            stats = eng.stats()
+            tag = "harris" if optimistic else "hm"
+            yield (f"serving/{smr}-{tag},{dt / max(toks, 1) * 1e6:.1f},"
+                   f"tok_s={toks / dt:.1f};hits={stats['prefix_cache']['hits']};"
+                   f"unreclaimed={stats['pool']['awaiting_reclaim']}")

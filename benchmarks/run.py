@@ -1,0 +1,61 @@
+"""Benchmark harness: one function per paper table/figure (+ kernel and
+serving benches).  Prints ``name,us_per_call,derived`` CSV.
+
+Quick mode (default) sizes every bench for minutes-total on one CPU core;
+``--full`` approaches the paper's §5 grid.  GIL caveat: absolute Mops are
+not EPYC-scale — scheme ordering, SCOT speedup direction and mechanism
+counters are the reproducible signal (DESIGN.md §2/§9)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grid (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench families "
+                         "(paper,kernels,serving)")
+    ap.add_argument("--workload", default="50r-50w",
+                    choices=["50r-50w", "90r-10w", "0r-100w"],
+                    help="workload mix for fig8/fig9 (appendix figures)")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else \
+        {"paper", "kernels", "serving"}
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    if "paper" in only:
+        from . import bench_paper as bp
+        for name, fn in bp.ALL_FIGS.items():
+            kwargs = {"quick": quick}
+            if name in ("fig8", "fig9"):
+                kwargs["workload"] = args.workload
+            for row in fn(**kwargs):
+                print(row)
+                sys.stdout.flush()
+
+    if "kernels" in only:
+        from . import bench_kernels as bk
+        for name, fn in bk.ALL.items():
+            for row in (fn() if name == "oracle" else fn(quick=quick)):
+                print(row)
+                sys.stdout.flush()
+
+    if "serving" in only:
+        from .bench_serving import bench_serving
+        for row in bench_serving(quick=quick):
+            print(row)
+            sys.stdout.flush()
+
+    print(f"# total_wall_s={time.time() - t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Quickstart: the paper's technique in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import threading
+
+from repro.core import make_scheme, HarrisList, NMTree, UseAfterFreeError
+
+
+def demo_scot_traversals():
+    print("== SCOT: Harris' list under Hazard Pointers ==")
+    smr = make_scheme("HP", retire_scan_freq=1)
+    lst = HarrisList(smr)                       # SCOT on (the fix)
+    for k in [3, 1, 4, 1, 5, 9, 2, 6]:
+        lst.insert(k)
+    assert lst.search(4) and not lst.search(7)
+    lst.delete(4)
+    print("   list:", lst.snapshot())
+    print("   stats:", lst.stats(), smr.stats())
+
+
+def demo_figure1_bug():
+    print("== Figure 1: the pre-paper bug (scot=False) ==")
+    smr = make_scheme("HP", retire_scan_freq=1)
+    lst = HarrisList(smr, scot=False, recovery=False)  # the unsafe original
+    caught = []
+
+    def churn(i):
+        import random
+        r = random.Random(i)
+        try:
+            for _ in range(30000):
+                if caught:
+                    return
+                k = r.randrange(12)
+                (lst.insert if r.random() < 0.5 else lst.delete)(k)
+        except (UseAfterFreeError, AssertionError) as e:
+            caught.append(e)
+
+    ts = [threading.Thread(target=churn, args=(i,)) for i in range(4)]
+    import sys
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-6)
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    sys.setswitchinterval(old)
+    print(f"   use-after-free caught: {caught[:1]!r}"
+          if caught else "   (race did not fire this run — rerun)")
+
+
+def demo_robustness():
+    print("== Robustness: stalled thread, EBR vs IBR ==")
+    for scheme in ("EBR", "IBR"):
+        smr = make_scheme(scheme, retire_scan_freq=8, epoch_freq=8)
+        lst = HarrisList(smr)
+        smr.begin_op()          # main thread "stalls" inside an operation
+        smr.protect(lst.head.next_ref(), 0)
+
+        def churn():
+            for i in range(3000):
+                lst.insert(i % 256)
+                lst.delete(i % 256)
+
+        t = threading.Thread(target=churn)
+        t.start()
+        t.join()
+        print(f"   {scheme}: garbage while stalled = "
+              f"{smr.not_yet_reclaimed()} nodes")
+        smr.end_op()
+
+
+def demo_nm_tree():
+    print("== Natarajan-Mittal tree with SCOT (IBR) ==")
+    smr = make_scheme("IBR")
+    tree = NMTree(smr)
+    for k in range(1, 20, 2):
+        tree.insert(k)
+    tree.delete(7)
+    print("   tree:", tree.snapshot())
+    print("   stats:", tree.stats())
+
+
+if __name__ == "__main__":
+    demo_scot_traversals()
+    demo_nm_tree()
+    demo_robustness()
+    demo_figure1_bug()
+    print("done.")

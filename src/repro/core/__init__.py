@@ -1,0 +1,49 @@
+"""The paper's primary contribution: SCOT — Safe Concurrent Optimistic
+Traversals — and the SMR substrate it runs on.
+
+Host-side (pure Python) by design: hazard pointers have no on-device TPU
+analogue; the structures here govern the framework's *control plane*
+(KV block pool, prefix cache, membership registries) — see DESIGN.md §2.
+"""
+
+from .atomics import (
+    AtomicFlaggedRef,
+    AtomicInt,
+    AtomicMarkableRef,
+    AtomicRef,
+    Recycler,
+    SmrNode,
+    UseAfterFreeError,
+)
+from .smr import EBR, HE, HP, IBR, NR, SCHEMES, Hyaline1S, SmrScheme, make_scheme
+from .structures import (
+    HarrisList,
+    HarrisMichaelList,
+    LockFreeHashMap,
+    NMTree,
+    SkipList,
+)
+
+__all__ = [
+    "AtomicFlaggedRef",
+    "AtomicInt",
+    "AtomicMarkableRef",
+    "AtomicRef",
+    "Recycler",
+    "SmrNode",
+    "UseAfterFreeError",
+    "EBR",
+    "HE",
+    "HP",
+    "IBR",
+    "NR",
+    "Hyaline1S",
+    "SmrScheme",
+    "SCHEMES",
+    "make_scheme",
+    "HarrisList",
+    "HarrisMichaelList",
+    "NMTree",
+    "SkipList",
+    "LockFreeHashMap",
+]

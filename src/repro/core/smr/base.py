@@ -1,0 +1,254 @@
+"""Uniform SMR (safe memory reclamation) API — paper §2.2.
+
+Every scheme exposes the same surface so data structures are written once:
+
+* ``begin_op()/end_op()`` — operation scope (EBR-style schemes reserve here;
+  HP-style schemes clear hazard slots in ``end_op``).
+* ``protect(src, idx)`` — read a shared word and reserve its (unmarked)
+  target under slot ``idx``.  HP validates by re-reading the source; era
+  schemes publish/bump eras.  Returns the raw word (ref + mark bits).
+* ``dup(src_idx, dst_idx)`` — duplicate a reservation to a higher slot index
+  (paper §3.2: ascending order avoids the retire-scan race; cheaper than
+  index renaming).  No-op for cumulative schemes (IBR, Hyaline-1S).
+* ``retire(node)`` — node unlinked, hand to the scheme for eventual free.
+
+``cumulative_protection`` is the property the paper's *recovery optimization*
+dispatches on (§3.2.1): IBR/Hyaline-1S reservations are never cancelled by a
+later ``protect``, so SCOT may fall back through a ring buffer of predecessors;
+HP/HE get one-shot recovery only.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..atomics import (
+    AtomicFlaggedRef,
+    AtomicInt,
+    AtomicMarkableRef,
+    AtomicRef,
+    SmrNode,
+)
+
+__all__ = ["ThreadCtx", "SmrScheme", "Guard"]
+
+
+class ThreadCtx:
+    """Globally visible per-thread reservation state (paper §2.2)."""
+
+    __slots__ = (
+        "tid",
+        "slots",        # HP: node refs; HE: era ints
+        "lower",
+        "upper",        # IBR / Hyaline-1S interval reservation
+        "epoch",        # EBR entry-epoch reservation (None == quiescent)
+        "active",
+        "retired",      # local retired list
+        "retire_count",
+        "op_count",
+        "inbox",        # Hyaline: batches this thread must release
+        "inbox_lock",
+        # -- counters (thread-local, summed on demand; no contention) ------
+        "n_retired",
+        "n_reclaimed",
+        "n_barriers",   # publishing stores (≈ memory fences on real HW)
+        "n_scans",
+    )
+
+    def __init__(self, tid: int, num_slots: int):
+        self.tid = tid
+        self.slots: List[Optional[object]] = [None] * num_slots
+        self.lower = 0
+        self.upper = 0
+        self.epoch: Optional[int] = None
+        self.active = False
+        self.retired: List[SmrNode] = []
+        self.retire_count = 0
+        self.op_count = 0
+        self.inbox: List[object] = []
+        self.inbox_lock = threading.Lock()
+        self.n_retired = 0
+        self.n_reclaimed = 0
+        self.n_barriers = 0
+        self.n_scans = 0
+
+
+class Guard:
+    """``with smr.guard(): ...`` — an operation scope."""
+
+    __slots__ = ("_smr",)
+
+    def __init__(self, smr: "SmrScheme"):
+        self._smr = smr
+
+    def __enter__(self):
+        self._smr.begin_op()
+        return self._smr
+
+    def __exit__(self, *exc):
+        self._smr.end_op()
+        return False
+
+
+class SmrScheme:
+    """Base class; subclasses override the `_` hooks."""
+
+    name = "base"
+    robust = False                 # bounded garbage with stalled threads?
+    cumulative_protection = False  # protect() never cancels older reservations?
+
+    def __init__(
+        self,
+        num_slots: int = 8,
+        retire_scan_freq: int = 128,   # paper §5: amortize retire scans at 128
+        epoch_freq: int = 96,          # paper §5: threads*12; fixed default
+        free_fn: Optional[Callable[[SmrNode], None]] = None,
+    ):
+        self.num_slots = num_slots
+        self.retire_scan_freq = retire_scan_freq
+        self.epoch_freq = epoch_freq
+        self._free_fn = free_fn
+        self._ctxs: Dict[int, ThreadCtx] = {}
+        self._ctx_lock = threading.Lock()
+        self._local = threading.local()
+        self.era = AtomicInt(1)  # global epoch/era clock (unused by NR/HP)
+
+    # ------------------------------------------------------------------ ctx
+    def ctx(self) -> ThreadCtx:
+        c = getattr(self._local, "ctx", None)
+        if c is None:
+            tid = threading.get_ident()
+            c = ThreadCtx(tid, self.num_slots)
+            with self._ctx_lock:
+                self._ctxs[tid] = c
+            self._local.ctx = c
+        return c
+
+    def all_ctxs(self) -> List[ThreadCtx]:
+        with self._ctx_lock:
+            return list(self._ctxs.values())
+
+    def guard(self) -> Guard:
+        return Guard(self)
+
+    # ----------------------------------------------------------- op scope
+    def begin_op(self) -> None:
+        c = self.ctx()
+        c.active = True
+        c.op_count += 1
+        self._on_begin(c)
+
+    def end_op(self) -> None:
+        c = self.ctx()
+        self._on_end(c)
+        c.active = False
+
+    def _on_begin(self, c: ThreadCtx) -> None:  # pragma: no cover - overridden
+        pass
+
+    def _on_end(self, c: ThreadCtx) -> None:
+        # HP-style default: drop all reservations.
+        for i in range(self.num_slots):
+            c.slots[i] = None
+
+    # ----------------------------------------------------------- protect
+    # Default implementations are *plain loads* (NR / EBR); hazard- and
+    # era-based schemes override `_reserve`.
+
+    def protect(self, src: AtomicMarkableRef, idx: int) -> Tuple[Optional[SmrNode], bool]:
+        """Read (ref, mark) from ``src`` and reserve ``ref`` in slot ``idx``."""
+        return self._reserve_markable(self.ctx(), src, idx)
+
+    def protect_ref(self, src: AtomicRef, idx: int) -> Optional[SmrNode]:
+        node = self._reserve_plain(self.ctx(), src, idx)
+        return node
+
+    def protect_edge(
+        self, src: AtomicFlaggedRef, idx: int
+    ) -> Tuple[Optional[SmrNode], bool, bool]:
+        """NM-tree edge word: (ref, flag, tag)."""
+        return self._reserve_flagged(self.ctx(), src, idx)
+
+    def _reserve_markable(self, c, src, idx):
+        return src.get()
+
+    def _reserve_plain(self, c, src, idx):
+        return src.load()
+
+    def _reserve_flagged(self, c, src, idx):
+        return src.get()
+
+    def dup(self, src_idx: int, dst_idx: int) -> None:
+        """Duplicate reservation src→dst.  Paper §3.2 requires src < dst."""
+        assert src_idx < dst_idx, "dup must move to a higher slot index"
+        # default: no-op (NR/EBR/IBR/HLN)
+
+    def clear(self, idx: Optional[int] = None) -> None:
+        c = self.ctx()
+        if idx is None:
+            for i in range(self.num_slots):
+                c.slots[i] = None
+        else:
+            c.slots[idx] = None
+
+    # ------------------------------------------------------------- retire
+    def alloc_stamp(self, node: SmrNode) -> SmrNode:
+        """Stamp birth era at allocation (HE/IBR/HLN); advance era clock."""
+        node.birth_era = self.era.load()
+        return node
+
+    def retire(self, node: SmrNode) -> None:
+        assert node is not None
+        if node._retired:  # double-retire is a data-structure bug
+            raise AssertionError(f"double retire of node {node.node_id}")
+        node._retired = True
+        c = self.ctx()
+        c.n_retired += 1
+        self._on_retire(c, node)
+
+    def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
+        c.retired.append(node)
+        c.retire_count += 1
+        if c.retire_count % self.retire_scan_freq == 0:
+            self._scan(c)
+
+    def _scan(self, c: ThreadCtx) -> None:  # pragma: no cover - overridden
+        pass
+
+    def _free(self, c: ThreadCtx, node: SmrNode) -> None:
+        c.n_reclaimed += 1
+        if self._free_fn is not None:
+            self._free_fn(node)
+        else:
+            node.poison()
+
+    # maybe advance the global era/epoch clock (amortized, paper §5)
+    def _tick_era(self, c: ThreadCtx) -> None:
+        if (c.n_retired + c.op_count) % self.epoch_freq == 0:
+            self.era.fetch_add(1)
+
+    # -------------------------------------------------------------- stats
+    def not_yet_reclaimed(self) -> int:
+        return sum(c.n_retired - c.n_reclaimed for c in self.all_ctxs())
+
+    def stats(self) -> Dict[str, int]:
+        cs = self.all_ctxs()
+        return {
+            "retired": sum(c.n_retired for c in cs),
+            "reclaimed": sum(c.n_reclaimed for c in cs),
+            "not_yet_reclaimed": sum(c.n_retired - c.n_reclaimed for c in cs),
+            "barriers": sum(c.n_barriers for c in cs),
+            "scans": sum(c.n_scans for c in cs),
+            "ops": sum(c.op_count for c in cs),
+        }
+
+    def flush(self) -> None:
+        """Best-effort reclamation of everything reclaimable (test/teardown)."""
+        for c in self.all_ctxs():
+            self._scan(c)
+
+    def help_reclaim(self) -> None:
+        """Thread-safe, self-only reclamation assist (memory-pressure path:
+        e.g. the serving engine when the page pool runs dry)."""
+        self._scan(self.ctx())

@@ -1,0 +1,48 @@
+"""EBR — epoch-based reclamation (Fraser).  Fast, easy, NOT robust.
+
+Reservation = the global epoch observed at ``begin_op``.  A node retired at
+epoch *r* is freed once every active thread's entry epoch is > *r* (any thread
+that could still hold the node must have entered before the node was retired,
+hence published an epoch ≤ *r*).  A stalled thread freezes its entry epoch and
+blocks everything retired afterwards — unbounded garbage (paper §1, property A
+violation; demonstrated by tests/test_robustness.py).
+"""
+
+from __future__ import annotations
+
+from .base import SmrScheme, ThreadCtx
+from ..atomics import SmrNode
+
+
+class EBR(SmrScheme):
+    name = "EBR"
+    robust = False
+    cumulative_protection = True  # plain loads; no per-pointer reservations
+
+    def _on_begin(self, c: ThreadCtx) -> None:
+        c.epoch = self.era.load()
+        c.n_barriers += 1  # publishing the reservation is a fenced store
+        self._tick_era(c)
+
+    def _on_end(self, c: ThreadCtx) -> None:
+        c.epoch = None
+
+    def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
+        node.retire_era = self.era.load()
+        c.retired.append(node)
+        c.retire_count += 1
+        self._tick_era(c)
+        if c.retire_count % self.retire_scan_freq == 0:
+            self._scan(c)
+
+    def _scan(self, c: ThreadCtx) -> None:
+        c.n_scans += 1
+        active = [t.epoch for t in self.all_ctxs() if t.epoch is not None]
+        min_epoch = min(active) if active else self.era.load() + 1
+        keep = []
+        for node in c.retired:
+            if node.retire_era < min_epoch:
+                self._free(c, node)
+            else:
+                keep.append(node)
+        c.retired = keep

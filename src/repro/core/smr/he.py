@@ -1,0 +1,71 @@
+"""HE — hazard eras (Ramalhete & Correia 2017).  Robust.
+
+Hazard *slots hold eras*, not pointers: ``protect`` publishes the current
+global era to slot ``idx`` and loops until the era is stable across the read.
+A retired node [birth_era, retire_era] is freed when no published slot era
+falls inside its lifetime interval.  Same index discipline as HP, so SCOT's
+``dup`` (copy the era) and one-shot recovery apply unchanged.
+"""
+
+from __future__ import annotations
+
+from .base import SmrScheme, ThreadCtx
+from ..atomics import AtomicFlaggedRef, AtomicMarkableRef, AtomicRef, SmrNode
+
+
+class HE(SmrScheme):
+    name = "HE"
+    robust = True
+    cumulative_protection = False  # protect(idx) replaces the slot's era
+
+    def _publish_read(self, c: ThreadCtx, idx: int, read):
+        prev_era = c.slots[idx]
+        while True:
+            value = read()
+            era_now = self.era.load()
+            if era_now == prev_era:
+                return value
+            c.slots[idx] = era_now
+            c.n_barriers += 1
+            prev_era = era_now
+
+    def _reserve_markable(self, c, src: AtomicMarkableRef, idx: int):
+        return self._publish_read(c, idx, src.get)
+
+    def _reserve_plain(self, c, src: AtomicRef, idx: int):
+        return self._publish_read(c, idx, src.load)
+
+    def _reserve_flagged(self, c, src: AtomicFlaggedRef, idx: int):
+        return self._publish_read(c, idx, src.get)
+
+    def dup(self, src_idx: int, dst_idx: int) -> None:
+        assert src_idx < dst_idx
+        c = self.ctx()
+        c.slots[dst_idx] = c.slots[src_idx]
+        c.n_barriers += 1
+
+    def _on_begin(self, c: ThreadCtx) -> None:
+        self._tick_era(c)
+
+    def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
+        node.retire_era = self.era.load()
+        c.retired.append(node)
+        c.retire_count += 1
+        self._tick_era(c)
+        if c.retire_count % self.retire_scan_freq == 0:
+            self._scan(c)
+
+    def _scan(self, c: ThreadCtx) -> None:
+        c.n_scans += 1
+        eras = []
+        for t in self.all_ctxs():
+            for s in t.slots:
+                if s is not None:
+                    eras.append(s)
+        keep = []
+        for node in c.retired:
+            if any(node.birth_era <= e <= node.retire_era for e in eras):
+                keep.append(node)
+            else:
+                self._free(c, node)
+        c.retired = keep

@@ -1,0 +1,71 @@
+"""HP — hazard pointers (Michael 2004).  Robust, per-pointer reservations.
+
+``protect`` publishes the target pointer into a per-thread slot, then
+re-reads the source word to validate the pointer is still installed there
+(the paper's §2.4 discussion: validation succeeds iff the *source edge* is
+intact, which is exactly the property SCOT's dangerous-zone check extends to
+whole chains).  ``retire`` scans all threads' slots every ``retire_scan_freq``
+retirements and frees nodes not present in any slot.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from .base import SmrScheme, ThreadCtx
+from ..atomics import AtomicFlaggedRef, AtomicMarkableRef, AtomicRef, SmrNode
+
+
+class HP(SmrScheme):
+    name = "HP"
+    robust = True
+    cumulative_protection = False  # protect(idx) cancels the old slot content
+
+    # ------------------------------------------------------------ protect
+    def _reserve_markable(self, c: ThreadCtx, src: AtomicMarkableRef, idx: int):
+        while True:
+            ref, mark = src.get()
+            c.slots[idx] = ref
+            c.n_barriers += 1
+            ref2, mark2 = src.get()      # validate: source edge intact
+            if ref is ref2 and mark == mark2:
+                return ref, mark
+
+    def _reserve_plain(self, c: ThreadCtx, src: AtomicRef, idx: int):
+        while True:
+            ref = src.load()
+            c.slots[idx] = ref
+            c.n_barriers += 1
+            if src.load() is ref:
+                return ref
+
+    def _reserve_flagged(self, c: ThreadCtx, src: AtomicFlaggedRef, idx: int):
+        while True:
+            word = src.get()
+            c.slots[idx] = word[0]
+            c.n_barriers += 1
+            if src.get() == word:
+                return word
+
+    def dup(self, src_idx: int, dst_idx: int) -> None:
+        assert src_idx < dst_idx
+        c = self.ctx()
+        c.slots[dst_idx] = c.slots[src_idx]
+        c.n_barriers += 1
+
+    # ------------------------------------------------------------- retire
+    def _scan(self, c: ThreadCtx) -> None:
+        c.n_scans += 1
+        hazards = set()
+        for t in self.all_ctxs():
+            # ascending slot order — pairs with the ascending `dup` rule
+            for s in t.slots:
+                if s is not None:
+                    hazards.add(id(s))
+        keep = []
+        for node in c.retired:
+            if id(node) in hazards:
+                keep.append(node)
+            else:
+                self._free(c, node)
+        c.retired = keep

@@ -1,0 +1,72 @@
+"""IBR — interval-based reclamation (Wen et al. 2018), 2GE-IBR flavour.
+
+Each thread reserves one era *interval* [lower, upper]: ``begin_op`` sets both
+to the current era, every ``protect`` bumps ``upper`` to the current era
+(cumulative — earlier reservations are never cancelled, which is why SCOT's
+ring-buffer recovery applies, paper §3.2.1).  A retired node [birth, retire]
+is freed when no thread interval overlaps it.  Robust: a stalled thread's
+frozen upper bound only pins nodes *born before* its stall.
+"""
+
+from __future__ import annotations
+
+from .base import SmrScheme, ThreadCtx
+from ..atomics import AtomicFlaggedRef, AtomicMarkableRef, AtomicRef, SmrNode
+
+
+class IBR(SmrScheme):
+    name = "IBR"
+    robust = True
+    cumulative_protection = True
+
+    def _on_begin(self, c: ThreadCtx) -> None:
+        e = self.era.load()
+        c.lower = e
+        c.upper = e
+        c.n_barriers += 1
+        self._tick_era(c)
+
+    def _on_end(self, c: ThreadCtx) -> None:
+        c.lower = 0
+        c.upper = 0
+
+    def _bump(self, c: ThreadCtx, read):
+        while True:
+            value = read()
+            e = self.era.load()
+            if e == c.upper:
+                return value
+            c.upper = e          # publish wider interval, re-read
+            c.n_barriers += 1
+
+    def _reserve_markable(self, c, src: AtomicMarkableRef, idx: int):
+        return self._bump(c, src.get)
+
+    def _reserve_plain(self, c, src: AtomicRef, idx: int):
+        return self._bump(c, src.load)
+
+    def _reserve_flagged(self, c, src: AtomicFlaggedRef, idx: int):
+        return self._bump(c, src.get)
+
+    def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
+        node.retire_era = self.era.load()
+        c.retired.append(node)
+        c.retire_count += 1
+        self._tick_era(c)
+        if c.retire_count % self.retire_scan_freq == 0:
+            self._scan(c)
+
+    def _scan(self, c: ThreadCtx) -> None:
+        c.n_scans += 1
+        intervals = [
+            (t.lower, t.upper)
+            for t in self.all_ctxs()
+            if t.active and t.lower > 0
+        ]
+        keep = []
+        for node in c.retired:
+            if any(lo <= node.retire_era and hi >= node.birth_era for lo, hi in intervals):
+                keep.append(node)
+            else:
+                self._free(c, node)
+        c.retired = keep

@@ -1,0 +1,19 @@
+"""Non-blocking data structures (paper Table 1)."""
+
+from .harris_list import HarrisList
+from .hashmap import LockFreeHashMap
+from .hm_list import HarrisMichaelList
+from .nm_tree import NMTree
+from .node import ListNode, TowerNode, TreeNode
+from .skiplist import SkipList
+
+__all__ = [
+    "HarrisList",
+    "HarrisMichaelList",
+    "NMTree",
+    "SkipList",
+    "LockFreeHashMap",
+    "ListNode",
+    "TowerNode",
+    "TreeNode",
+]

@@ -1,0 +1,285 @@
+"""Harris' lock-free linked list with **SCOT** optimistic traversals.
+
+Faithful implementation of the paper's Figure 4 (SCOT `Do_Find`) on top of the
+uniform SMR API, plus the §3.2.1 recovery optimization:
+
+* hazard slot layout (paper L42-45)::
+
+      Hp0 — next        Hp1 — curr
+      Hp2 — last safe node (prev)       Hp3 — first unsafe node
+
+* two-phase traversal: Phase 1 iterates the *safe zone* (unmarked nodes,
+  Harris-Michael-style slot shifting); on meeting a logically deleted node the
+  traversal duplicates ``Hp1→Hp3`` once and enters the *dangerous zone*,
+  where after each ``protect`` it validates that the last safe node still
+  points at the first unsafe node (``*prev == prev_next``).  Chains are only
+  unlinked from their head (ordered node removal, Lemma 1), so this single
+  check proves every chain node up to ``curr`` is still physically linked —
+  hence unreclaimed (Theorem 1).
+
+* recovery (§3.2.1): on validation failure, if the last safe node is itself
+  still unmarked, escape the dangerous zone and resume from it (one-shot —
+  all schemes).  If it was deleted: schemes with *cumulative* protection
+  (IBR, Hyaline-1S) fall back through a ring buffer of up to
+  ``recovery_depth`` predecessors (Figure 6); HP/HE must restart from the
+  head (extra hazard slots would cost barriers).
+
+``scot=False`` reproduces the **pre-paper buggy behaviour** (optimistic
+traversal without validation) so tests can demonstrate Figure 1's
+use-after-free: the shim raises :class:`UseAfterFreeError` where real
+hardware would SEGFAULT or silently corrupt.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from ..atomics import AtomicInt, Recycler, UseAfterFreeError
+from ..smr.base import SmrScheme
+from .node import ListNode
+
+HP_NEXT = 0   # Hp0
+HP_CURR = 1   # Hp1
+HP_PREV = 2   # Hp2 — last safe node
+HP_UNSAFE = 3  # Hp3 — first unsafe node (SCOT's extra slot)
+
+_RESTART = object()  # sentinel: full restart requested
+
+
+class HarrisList:
+    """Lock-free ordered set with optimistic (read-only) search."""
+
+    HP_SLOTS = 4
+
+    def __init__(
+        self,
+        smr: SmrScheme,
+        scot: Optional[bool] = None,
+        recovery: bool = True,
+        recovery_depth: int = 8,   # paper §3.2.1: ring of 8 is ~optimal
+        recycle: bool = False,
+    ):
+        self.smr = smr
+        # SCOT is required exactly by the robust schemes (HP/HE/IBR/HLN);
+        # NR/EBR traverse safely without per-pointer validation (paper §5).
+        self.scot = smr.robust if scot is None else scot
+        self.recovery = recovery
+        self.recovery_depth = recovery_depth
+        self.head = ListNode(float("-inf"))  # sentinel, never retired
+        self.recycler = Recycler(ListNode) if recycle else None
+        if recycle:
+            # route scheme frees through the recycler so ABA is exercisable
+            smr._free_fn = self.recycler.free
+        # mechanism counters (paper-relevant: restarts ⇒ lock-freedom argument)
+        self.n_restarts = AtomicInt()
+        self.n_recoveries = AtomicInt()
+        self.n_ring_recoveries = AtomicInt()
+        self.n_validation_failures = AtomicInt()
+
+    # ------------------------------------------------------------------ API
+    def insert(self, key, value=None) -> bool:
+        smr = self.smr
+        new = None
+        with smr.guard():
+            while True:
+                prev, curr, found = self._find(key, srch=False)
+                if found:
+                    return False
+                if new is None:
+                    if self.recycler is not None:
+                        new = self.recycler.alloc(key, value)
+                    else:
+                        new = ListNode(key, value)
+                    smr.alloc_stamp(new)
+                new.next_ref().set(curr, False)
+                if prev.next_ref().compare_exchange(curr, False, new, False):
+                    return True
+                # CAS failed — someone raced; re-find and retry with same node
+
+    def delete(self, key) -> bool:
+        smr = self.smr
+        with smr.guard():
+            while True:
+                prev, curr, found = self._find(key, srch=False)
+                if not found:
+                    return False
+                nxt, nmark = curr.next_ref().get()
+                if nmark:
+                    continue  # concurrently deleted; re-find (helps unlink)
+                # logical deletion (paper Fig 2 L25)
+                if not curr.next_ref().compare_exchange(nxt, False, nxt, True):
+                    continue
+                # one physical-unlink attempt (Fig 2 L26); else leave to others
+                if prev.next_ref().compare_exchange(curr, False, nxt, False):
+                    smr.retire(curr)
+                return True
+
+    def search(self, key) -> bool:
+        """Read-only optimistic search — zero CAS (the Harris-vs-HM win)."""
+        with self.smr.guard():
+            _, _, found = self._find(key, srch=True)
+            return found
+
+    contains = search
+
+    # ------------------------------------------------------- SCOT Do_Find
+    def _find(self, key, srch: bool) -> Tuple[ListNode, Optional[ListNode], bool]:
+        while True:
+            out = self._find_attempt(key, srch)
+            if out is not _RESTART:
+                return out
+            self.n_restarts.fetch_add(1)
+
+    def _find_attempt(self, key, srch: bool):
+        smr = self.smr
+        cumulative = smr.cumulative_protection
+        ring = [] if (self.recovery and cumulative) else None
+
+        prev: ListNode = self.head
+        curr, _ = smr.protect(self.head.next_ref(), HP_CURR)
+        prev_next = curr  # value last read from prev.next (chain start marker)
+
+        while True:
+            # ---------------- Phase 1: safe zone (paper Fig 4 L7-17) -------
+            while True:
+                if curr is None:
+                    return self._finish(prev, prev_next, None, srch, key)
+                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+                if nmark:
+                    break  # curr is logically deleted → dangerous zone
+                if curr.key >= key:
+                    return self._finish(prev, prev_next, curr, srch, key)
+                if ring is not None:
+                    ring.append(curr)
+                    if len(ring) > self.recovery_depth:
+                        ring.pop(0)
+                smr.dup(HP_CURR, HP_PREV)   # Hp1[curr] → Hp2 (prev)
+                prev = curr
+                smr.dup(HP_NEXT, HP_CURR)   # Hp0[next] → Hp1 (curr)
+                prev_next = nxt
+                curr = nxt
+
+            # -------------- Phase 2: dangerous zone (Fig 4 L18-25) ---------
+            # curr = first unsafe node == prev_next (the word in prev.next)
+            if self.scot:
+                smr.dup(HP_CURR, HP_UNSAFE)  # Hp1[curr] → Hp3 (first unsafe)
+            chain_start = curr
+            while True:
+                curr = nxt  # advance into the chain (unmarked ref part)
+                if curr is None:
+                    # chain runs to the end of the list (Fig 4 L21 goto 27)
+                    return self._finish(prev, chain_start, None, srch, key)
+                smr.dup(HP_NEXT, HP_CURR)    # Hp0 → Hp1
+                if self.scot:
+                    # THE validation (paper Thm 1 inductive step): *before*
+                    # dereferencing the just-reserved chain node, check the
+                    # last safe node still points at the first unsafe node
+                    # (unmarked).  Chains unlink only from their head
+                    # (Lemma 1), so an intact prev→chain_start edge proves
+                    # `curr` is still linked — hence unretired at this
+                    # instant — and its reservation (published by the
+                    # previous protect) now pins it.
+                    if prev.next_ref().get() != (chain_start, False):
+                        self.n_validation_failures.fetch_add(1)
+                        resumed = self._recover(prev, ring)
+                        if resumed is _RESTART:
+                            return _RESTART
+                        prev, curr, nxt, nmark = resumed
+                        prev_next = curr
+                        if curr is None:
+                            return self._finish(prev, prev_next, None, srch, key)
+                        if not nmark:
+                            break  # resumed in the safe zone
+                        smr.dup(HP_CURR, HP_UNSAFE)
+                        chain_start = curr
+                        continue
+                # deref of `curr` — made safe by the validation above (SCOT)
+                # or unprotected (scot=False: the Figure-1 bug, surfaced to
+                # tests as UseAfterFreeError where HW would SEGFAULT)
+                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+                if not nmark:
+                    break  # end of chain: curr is not logically deleted
+            # Exited dangerous zone at unmarked `curr` (or resumed).  Check
+            # position; if key not reached, resume Phase 1 — prev advances
+            # past the (skipped) chain, which is the optimistic-traversal win.
+            if curr.key >= key:
+                return self._finish(prev, prev_next, curr, srch, key)
+            if ring is not None:
+                ring.append(curr)
+                if len(ring) > self.recovery_depth:
+                    ring.pop(0)
+            smr.dup(HP_CURR, HP_PREV)
+            prev = curr
+            prev_next = nxt
+            curr = nxt
+            # loop back into Phase 1
+
+    # ---------------------------------------------------------- recovery
+    def _recover(self, prev: ListNode, ring):
+        """§3.2.1: escape the dangerous zone instead of a full restart."""
+        if not self.recovery:
+            return _RESTART
+        smr = self.smr
+        # one-shot recovery: last safe node still unmarked → continue from it.
+        # protect() re-publishes; the returned mark tells us whether `prev`
+        # got logically deleted meanwhile (marked edge ⇒ unsafe to resume).
+        curr, pmark = smr.protect(prev.next_ref(), HP_CURR)
+        if not pmark:
+            self.n_recoveries.fetch_add(1)
+            if curr is None:
+                return (prev, None, None, False)
+            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+            return (prev, curr, nxt, nmark)
+        # prev itself got deleted.  Cumulative schemes (IBR/HLN) may fall
+        # back through still-protected predecessors (Figure 6); HP/HE restart
+        # (extra hazard slots would cost barriers — paper §3.2.1).
+        if ring is None:
+            return _RESTART
+        while ring:
+            cand = ring.pop()
+            # ring nodes stay protected under cumulative schemes ⇒ deref safe
+            curr, cmark = smr.protect(cand.next_ref(), HP_CURR)
+            if cmark:
+                continue  # this predecessor was deleted too; fall further back
+            self.n_ring_recoveries.fetch_add(1)
+            if curr is None:
+                return (cand, None, None, False)
+            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+            return (cand, curr, nxt, nmark)
+        return _RESTART
+
+    # ------------------------------------------------------------ finish
+    def _finish(self, prev, prev_next, curr, srch: bool, key):
+        """Paper Fig 4 L26-40: optional chain unlink + position return."""
+        smr = self.smr
+        if not srch and prev_next is not curr:
+            # unlink the whole chain [prev_next .. curr) with ONE CAS
+            if not prev.next_ref().compare_exchange(prev_next, False, curr, False):
+                return _RESTART
+            node = prev_next
+            while node is not curr:
+                nxt = node.next_ref().get_ref()  # we unlinked it: safe
+                smr.retire(node)
+                node = nxt
+        found = curr is not None and curr.key == key
+        return (prev, curr, found)
+
+    # --------------------------------------------------------- debug utils
+    def snapshot(self):
+        """Single-threaded: list of live keys (skips marked nodes)."""
+        out = []
+        node = self.head.next_ref_unsafe().get_ref()
+        while node is not None:
+            nxt, mark = node.next_ref_unsafe().get()
+            if not mark:
+                out.append(node._key)
+            node = nxt
+        return out
+
+    def stats(self):
+        return {
+            "restarts": self.n_restarts.load(),
+            "recoveries": self.n_recoveries.load(),
+            "ring_recoveries": self.n_ring_recoveries.load(),
+            "validation_failures": self.n_validation_failures.load(),
+        }

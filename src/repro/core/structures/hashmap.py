@@ -1,0 +1,57 @@
+"""Lock-free hash map (Michael 2002) — an array of lock-free lists.
+
+The paper §3.4: "Hash Maps are based on linked lists directly" — SCOT applies
+bucket-wise.  Both flavours are offered so the Harris-vs-HM difference is
+visible through the map layer too (benchmarked in the serving prefix cache,
+see ``repro/runtime/prefix_cache.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..smr.base import SmrScheme
+from .harris_list import HarrisList
+from .hm_list import HarrisMichaelList
+
+
+class LockFreeHashMap:
+    def __init__(self, smr: SmrScheme, num_buckets: int = 64,
+                 optimistic: bool = True, scot: Optional[bool] = None,
+                 recovery: bool = True):
+        self.smr = smr
+        self.num_buckets = num_buckets
+        if optimistic:
+            self.buckets = [
+                HarrisList(smr, scot=scot, recovery=recovery)
+                for _ in range(num_buckets)
+            ]
+        else:
+            self.buckets = [HarrisMichaelList(smr) for _ in range(num_buckets)]
+
+    def _bucket(self, key):
+        return self.buckets[hash(key) % self.num_buckets]
+
+    def insert(self, key, value=None) -> bool:
+        return self._bucket(key).insert(key, value)
+
+    def delete(self, key) -> bool:
+        return self._bucket(key).delete(key)
+
+    def search(self, key) -> bool:
+        return self._bucket(key).search(key)
+
+    contains = search
+
+    def get(self, key):
+        """Optimistic read-only lookup returning the stored value."""
+        bucket = self._bucket(key)
+        with self.smr.guard():
+            _, curr, found = bucket._find(key, srch=True)
+            return curr.value if found else None
+
+    def snapshot(self):
+        out = []
+        for b in self.buckets:
+            out.extend(b.snapshot())
+        return sorted(out)

@@ -1,0 +1,135 @@
+"""Harris-Michael lock-free list (Michael 2002) — the paper's baseline.
+
+Logically deleted nodes are unlinked *immediately* on encounter, one CAS per
+node, so physical removal always changes the incoming edge and plain HP
+validation suffices (paper §2.4).  The costs SCOT removes: extra CAS traffic
+under contention, and **no read-only search** (search may CAS too).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from ..atomics import AtomicInt, Recycler
+from ..smr.base import SmrScheme
+from .node import ListNode
+
+HP_NEXT = 0
+HP_CURR = 1
+HP_PREV = 2
+
+_RESTART = object()
+
+
+class HarrisMichaelList:
+    HP_SLOTS = 3
+
+    def __init__(self, smr: SmrScheme, recycle: bool = False):
+        self.smr = smr
+        self.head = ListNode(float("-inf"))
+        self.recycler = Recycler(ListNode) if recycle else None
+        if recycle:
+            smr._free_fn = self.recycler.free
+        self.n_restarts = AtomicInt()
+        self.n_cleanup_cas = AtomicInt()  # unlink CASes issued by traversals
+
+    # ------------------------------------------------------------------ API
+    def insert(self, key, value=None) -> bool:
+        smr = self.smr
+        new = None
+        with smr.guard():
+            while True:
+                prev, curr, found = self._find(key)
+                if found:
+                    return False
+                if new is None:
+                    if self.recycler is not None:
+                        new = self.recycler.alloc(key, value)
+                    else:
+                        new = ListNode(key, value)
+                    smr.alloc_stamp(new)
+                new.next_ref().set(curr, False)
+                if prev.next_ref().compare_exchange(curr, False, new, False):
+                    return True
+
+    def delete(self, key) -> bool:
+        smr = self.smr
+        with smr.guard():
+            while True:
+                prev, curr, found = self._find(key)
+                if not found:
+                    return False
+                nxt, nmark = curr.next_ref().get()
+                if nmark:
+                    continue
+                if not curr.next_ref().compare_exchange(nxt, False, nxt, True):
+                    continue
+                if prev.next_ref().compare_exchange(curr, False, nxt, False):
+                    smr.retire(curr)
+                else:
+                    self._find(key)  # help physical removal
+                return True
+
+    def search(self, key) -> bool:
+        # NOT read-only: _find may unlink marked nodes (Michael's approach).
+        with self.smr.guard():
+            _, _, found = self._find(key)
+            return found
+
+    contains = search
+
+    # ----------------------------------------------------------- Michael find
+    def _find(self, key, srch: bool = False
+              ) -> Tuple[ListNode, Optional[ListNode], bool]:
+        # `srch` accepted for API parity with HarrisList; Michael's find is
+        # never read-only (it unlinks marked nodes even during search).
+        while True:
+            out = self._find_attempt(key)
+            if out is not _RESTART:
+                return out
+            self.n_restarts.fetch_add(1)
+
+    def _find_attempt(self, key):
+        smr = self.smr
+        prev: ListNode = self.head
+        curr, _ = smr.protect(prev.next_ref(), HP_CURR)
+        while True:
+            if curr is None:
+                return (prev, None, False)
+            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+            # re-validate the incoming edge (Michael's check): curr still
+            # linked after we protected its next word
+            if prev.next_ref().get() != (curr, False):
+                return _RESTART
+            if nmark:
+                # immediate physical removal — the extra CAS SCOT avoids
+                self.n_cleanup_cas.fetch_add(1)
+                if not prev.next_ref().compare_exchange(curr, False, nxt, False):
+                    return _RESTART
+                smr.retire(curr)
+                smr.dup(HP_NEXT, HP_CURR)
+                curr = nxt
+                continue
+            if curr.key >= key:
+                return (prev, curr, curr.key == key)
+            smr.dup(HP_CURR, HP_PREV)
+            prev = curr
+            smr.dup(HP_NEXT, HP_CURR)
+            curr = nxt
+
+    # --------------------------------------------------------- debug utils
+    def snapshot(self):
+        out = []
+        node = self.head.next_ref_unsafe().get_ref()
+        while node is not None:
+            nxt, mark = node.next_ref_unsafe().get()
+            if not mark:
+                out.append(node._key)
+            node = nxt
+        return out
+
+    def stats(self):
+        return {
+            "restarts": self.n_restarts.load(),
+            "cleanup_cas": self.n_cleanup_cas.load(),
+        }

@@ -1,0 +1,276 @@
+"""Natarajan-Mittal lock-free external BST with **SCOT** traversals (§3.3).
+
+First *correct* implementation for HP/HE/IBR/Hyaline-1S per the paper (prior
+ports were buggy — leaked or touched freed memory during optimistic
+traversals; see paper footnote 3).
+
+Layout (paper §2.5): keys live in leaves; internal nodes route.  Child edges
+carry (flag, tag) bits: *flag* marks a leaf edge for logical deletion, *tag*
+freezes the kept-sibling edge during cleanup.  A chain of consecutively
+tagged edges is removed with ONE CAS at the ancestor (Figure 3) — the
+optimistic-traversal property that breaks naive HP usage and that SCOT fixes.
+
+SCOT here (paper §3.3): five hazard slots — current, parent, successor,
+ancestor, leaf.  After each reservation of the current node, *if the edge
+into it is flagged or tagged*, validate that ``ancestor``'s child field still
+points at ``successor`` untagged; otherwise restart from the root (the paper
+found ring-buffer recovery unhelpful for trees — on divergence the tree has
+usually changed too much).
+
+Safety argument (paper Theorem 4): removed-chain edges are permanently
+non-clean (monotone flag/tag bits) and cleanup CASes expect *clean* words, so
+(a) a traversal observing a clean edge cannot be inside a removed chain, and
+(b) two cleanups can never both succeed on overlapping chains (no double
+retire — additionally policed by ``SmrScheme.retire``'s assertion).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+from ..atomics import AtomicInt
+from ..smr.base import SmrScheme
+from .node import TreeNode
+
+# hazard slot indices — dup() requires ascending moves (paper §3.2)
+S_CURR = 0
+S_PARENT = 1
+S_SUCC = 2
+S_ANC = 3
+S_LEAF = 4
+
+# sentinel keys: all user keys must be < INF0
+INF0 = float("inf")
+
+
+class _SeekRecord(NamedTuple):
+    ancestor: TreeNode
+    successor: TreeNode
+    parent: TreeNode
+    leaf: TreeNode
+
+
+_RESTART = object()
+
+
+class NMTree:
+    """Lock-free external BST (set interface)."""
+
+    HP_SLOTS = 5
+
+    def __init__(self, smr: SmrScheme, scot: Optional[bool] = None):
+        self.smr = smr
+        self.scot = smr.robust if scot is None else scot
+        # R(inf2) / S(inf1) sentinel skeleton; sentinels are never retired.
+        #        R(inf2)
+        #       /      \
+        #     S(inf1)  leaf(inf2)
+        #    /    \
+        # leaf(inf1) leaf(inf2)
+        self.S = TreeNode(INF0, is_leaf=False,
+                          left=TreeNode(INF0, is_leaf=True),
+                          right=TreeNode(INF0, is_leaf=True))
+        self.R = TreeNode(INF0, is_leaf=False,
+                          left=self.S,
+                          right=TreeNode(INF0, is_leaf=True))
+        self.n_restarts = AtomicInt()
+        self.n_validation_failures = AtomicInt()
+        self.n_unlink_cas = AtomicInt()
+
+    # ------------------------------------------------------------------ API
+    def search(self, key) -> bool:
+        """Read-only optimistic search — no CAS (SCOT makes this legal)."""
+        with self.smr.guard():
+            sr = self._seek(key)
+            return sr.leaf.key == key
+
+    contains = search
+
+    def insert(self, key, value=None) -> bool:
+        smr = self.smr
+        new_leaf = None
+        with smr.guard():
+            while True:
+                sr = self._seek(key)
+                leaf, parent = sr.leaf, sr.parent
+                if leaf.key == key:
+                    return False
+                child_field = parent.child_ref(key < parent.key)
+                cref, cflag, ctag = child_field.get()
+                if cref is not leaf:
+                    continue  # stale; re-seek
+                if cflag or ctag:
+                    self._cleanup(key, sr)  # help the pending delete, retry
+                    continue
+                if new_leaf is None:
+                    new_leaf = TreeNode(key, value, is_leaf=True)
+                    smr.alloc_stamp(new_leaf)
+                # new internal routes between the two leaves
+                if key < leaf.key:
+                    internal = TreeNode(leaf.key, is_leaf=False,
+                                        left=new_leaf, right=leaf)
+                else:
+                    internal = TreeNode(key, is_leaf=False,
+                                        left=leaf, right=new_leaf)
+                smr.alloc_stamp(internal)
+                if child_field.compare_exchange(leaf, False, False,
+                                                internal, False, False):
+                    return True
+                # failed: if a delete flagged/tagged this edge, help it
+                cref, cflag, ctag = child_field.get()
+                if cref is leaf and (cflag or ctag):
+                    self._cleanup(key, sr)
+
+    def delete(self, key) -> bool:
+        smr = self.smr
+        with smr.guard():
+            injected = False
+            target_leaf: Optional[TreeNode] = None
+            while True:
+                sr = self._seek(key)
+                if not injected:
+                    leaf = sr.leaf
+                    if leaf.key != key:
+                        return False
+                    parent = sr.parent
+                    child_field = parent.child_ref(key < parent.key)
+                    # flag the leaf edge (logical deletion)
+                    if child_field.compare_exchange(leaf, False, False,
+                                                    leaf, True, False):
+                        injected = True
+                        target_leaf = leaf
+                        if self._cleanup(key, sr):
+                            return True
+                    else:
+                        cref, cflag, ctag = child_field.get()
+                        if cref is leaf and (cflag or ctag):
+                            self._cleanup(key, sr)  # help whoever is there
+                else:
+                    # cleanup mode: our leaf is flagged; finish the removal.
+                    # NOTE: tree nodes are never recycled (DESIGN.md) so the
+                    # identity test below cannot be fooled by ABA.
+                    if sr.leaf is not target_leaf:
+                        return True  # somebody physically removed it
+                    if self._cleanup(key, sr):
+                        return True
+
+    # ------------------------------------------------------------- seek
+    def _seek(self, key) -> _SeekRecord:
+        while True:
+            out = self._seek_attempt(key)
+            if out is not _RESTART:
+                return out
+            self.n_restarts.fetch_add(1)
+
+    def _seek_attempt(self, key):
+        smr = self.smr
+        ancestor: TreeNode = self.R
+        successor: TreeNode = self.S
+        parent: TreeNode = self.S
+        curr, cflag, ctag = smr.protect_edge(self.S.left_ref(), S_CURR)
+        while curr is not None and not curr.is_leaf:
+            if not ctag:
+                # edge into curr is untagged → curr is the new successor
+                smr.dup(S_PARENT, S_ANC)
+                ancestor = parent
+                smr.dup(S_CURR, S_SUCC)
+                successor = curr
+            smr.dup(S_CURR, S_PARENT)
+            parent = curr
+            go_left = key < curr.key
+            child, f, t = smr.protect_edge(curr.child_ref(go_left), S_CURR)
+            if self.scot and (f or t):
+                # SCOT validation (paper §3.3): the ancestor→successor edge
+                # must be intact and untagged, else the path may be a removed
+                # chain → restart before dereferencing `child`.
+                aref, aflag, atag = ancestor.child_ref(
+                    key < ancestor.key).get()
+                if aref is not successor or atag:
+                    self.n_validation_failures.fetch_add(1)
+                    return _RESTART
+            curr, cflag, ctag = child, f, t
+        smr.dup(S_CURR, S_LEAF)
+        return _SeekRecord(ancestor, successor, parent, curr)
+
+    # ------------------------------------------------------------ cleanup
+    def _cleanup(self, key, sr: _SeekRecord) -> bool:
+        """Physically remove the flagged leaf (and the tagged chain above it)
+        with one CAS at the ancestor.  Returns True iff our CAS did it."""
+        ancestor, successor, parent, leaf = sr
+        successor_field = ancestor.child_ref(key < ancestor.key)
+        if key < parent.key:
+            child_field, sibling_field = parent.left_ref(), parent.right_ref()
+        else:
+            child_field, sibling_field = parent.right_ref(), parent.left_ref()
+        cref, cflag, ctag = child_field.get()
+        if not cflag:
+            # the flag is on the other side (helping someone else's delete):
+            # keep the key side, remove the sibling side
+            child_field, sibling_field = sibling_field, child_field
+        # freeze the kept edge so nothing can slip underneath (fetch-and-or)
+        sibling_field.fetch_or(tag=True)
+        kref, kflag, _ = sibling_field.get()
+        self.n_unlink_cas.fetch_add(1)
+        ok = successor_field.compare_exchange(
+            successor, False, False,   # expected: clean edge to successor
+            kref, kflag, False,        # new: kept child (flag preserved)
+        )
+        if ok:
+            self._retire_chain(key, successor, parent, kept=kref)
+        return ok
+
+    def _retire_chain(self, key, successor: TreeNode, parent: TreeNode,
+                      kept: Optional[TreeNode]) -> None:
+        """Retire the unlinked chain: internal nodes successor..parent along
+        the routing path plus their off-path flagged leaves (all edges in the
+        removed set are permanently flagged/tagged — reads are on nodes only
+        we can retire, cf. class docstring)."""
+        smr = self.smr
+        node = successor
+        while node is not None and node is not kept:
+            if node.is_leaf:
+                smr.retire(node)
+                break
+            l_ref = node.left_ref_unsafe().get_ref()
+            r_ref = node.right_ref_unsafe().get_ref()
+            go_left = key < node._key
+            nxt = l_ref if go_left else r_ref
+            off = r_ref if go_left else l_ref
+            smr.retire(node)
+            if node is parent:
+                # off-path side here is the *kept* subtree — not ours.
+                # continue into the flagged leaf (routing side), unless the
+                # kept side was the routing side (helping case).
+                node = nxt if nxt is not kept else off
+            else:
+                # middle chain node: off-path child is a flagged leaf that
+                # the winning unlinker (us) retires
+                if off is not None and off is not kept:
+                    smr.retire(off)
+                node = nxt
+        # (node is kept) → done; kept subtree was relinked by the CAS
+
+    # --------------------------------------------------------- debug utils
+    def snapshot(self):
+        """Single-threaded: sorted list of live keys."""
+        out = []
+
+        def rec(node):
+            if node is None:
+                return
+            if node.is_leaf:
+                if node._key != INF0:
+                    out.append(node._key)
+                return
+            rec(node.left_ref_unsafe().get_ref())
+            rec(node.right_ref_unsafe().get_ref())
+
+        rec(self.R)
+        return out
+
+    def stats(self):
+        return {
+            "restarts": self.n_restarts.load(),
+            "validation_failures": self.n_validation_failures.load(),
+            "unlink_cas": self.n_unlink_cas.load(),
+        }

@@ -1,0 +1,241 @@
+"""Fraser-style lock-free skip list with SCOT optimistic traversals.
+
+The paper (§3.4, Table 1) notes Fraser's skip list has *exactly* the Harris
+optimistic-traversal structure per level, so SCOT applies verbatim level-wise:
+each level is traversed with the dangerous-zone validation of
+``harris_list.py``.  The paper does not evaluate skip lists ("Harris' vs
+Harris-Michael lists ... capture the differences already"); we provide the
+structure for completeness with the same SMR-safety discipline.
+
+Deletion protocol: logical delete marks the tower's next pointers top-down
+(level-0 mark is the linearization point).  Physical unlink happens per level
+by traversals (Harris one-CAS chain removal).  The level-0 marker *owns*
+retirement: it re-traverses all levels until the node is unlinked everywhere
+and no insert is mid-way through linking upper levels (``link_pending``),
+then retires the tower exactly once.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+from typing import List, Optional, Tuple
+
+from ..atomics import AtomicInt
+from ..smr.base import SmrScheme
+from .node import TowerNode
+
+HP_NEXT = 0
+HP_CURR = 1
+HP_PREV = 2
+HP_UNSAFE = 3
+
+_RESTART = object()
+
+
+class SkipList:
+    HP_SLOTS = 4
+
+    def __init__(self, smr: SmrScheme, max_height: int = 12,
+                 scot: Optional[bool] = None, seed: Optional[int] = None):
+        self.smr = smr
+        self.scot = smr.robust if scot is None else scot
+        self.max_height = max_height
+        self.head = TowerNode(float("-inf"), max_height)
+        self._rng = random.Random(seed)
+        self._rng_lock = threading.Lock()
+        self.n_restarts = AtomicInt()
+
+    def _random_height(self) -> int:
+        with self._rng_lock:
+            h = 1
+            while h < self.max_height and self._rng.random() < 0.5:
+                h += 1
+            return h
+
+    # ------------------------------------------------------------------ API
+    def insert(self, key, value=None) -> bool:
+        smr = self.smr
+        height = self._random_height()
+        node = TowerNode(key, height, value)
+        smr.alloc_stamp(node)
+        with smr.guard():
+            # link_pending is raised BEFORE the node becomes reachable so the
+            # deletion owner can never retire a tower with an in-flight link.
+            node.link_pending.fetch_add(1)
+            try:
+                while True:
+                    prev, curr, found = self._find_level(key, 0, srch=False)
+                    if found:
+                        return False
+                    node.next_ref(0).set(curr, False)  # unpublished yet: plain set
+                    if prev.next_ref(0).compare_exchange(curr, False,
+                                                         node, False):
+                        break
+                # link upper levels; node's own next pointers are updated via
+                # CAS-from-unmarked so a concurrent delete's mark is never lost
+                aborted = False
+                for lvl in range(1, height):
+                    while True:
+                        if node.next_ref(0).get_mark():
+                            aborted = True
+                            break
+                        prev, curr, _ = self._find_level(key, lvl, srch=False)
+                        old, omark = node.next_ref(lvl).get()
+                        if omark:
+                            aborted = True
+                            break
+                        if not node.next_ref(lvl).compare_exchange(
+                                old, False, curr, False):
+                            aborted = True  # marked under us
+                            break
+                        if curr is node:  # defensive
+                            break
+                        if prev.next_ref(lvl).compare_exchange(
+                                curr, False, node, False):
+                            break
+                    if aborted:
+                        break
+                # repair: if we were marked while linking, help unlink any
+                # levels we may have extended after the mark
+                if node.next_ref(0).get_mark():
+                    for lvl in range(height - 1, -1, -1):
+                        self._find_level(key, lvl, srch=False)
+            finally:
+                node.link_pending.fetch_add(-1)
+            return True
+
+    def delete(self, key) -> bool:
+        smr = self.smr
+        with smr.guard():
+            while True:
+                prev, curr, found = self._find_level(key, 0, srch=False)
+                if not found:
+                    return False
+                node = curr
+                # mark top-down; marking level 0 linearizes the delete and
+                # makes us the *owner* who retires
+                for lvl in range(node.height - 1, 0, -1):
+                    while True:
+                        nxt, mark = node.next_ref(lvl).get()
+                        if mark:
+                            break
+                        if node.next_ref(lvl).compare_exchange(
+                                nxt, False, nxt, True):
+                            break
+                nxt, mark = node.next_ref(0).get()
+                if mark:
+                    continue  # somebody else owns the deletion; retry find
+                if not node.next_ref(0).compare_exchange(nxt, False, nxt, True):
+                    continue
+                # we own it: unlink everywhere, then retire exactly once
+                self._unlink_all(key, node)
+                return True
+
+    def search(self, key) -> bool:
+        smr = self.smr
+        with smr.guard():
+            lvl = self.max_height - 1
+            prev = self.head
+            while lvl > 0:
+                prev, _, found = self._find_level(key, lvl, srch=True,
+                                                  start=prev)
+                if found:
+                    return True
+                lvl -= 1
+            _, _, found = self._find_level(key, 0, srch=True, start=prev)
+            return found
+
+    contains = search
+
+    # --------------------------------------------------------------- internals
+    def _unlink_all(self, key, node: TowerNode) -> None:
+        smr = self.smr
+        while True:
+            present = False
+            for lvl in range(node.height - 1, -1, -1):
+                _, curr, found_at = self._find_level(key, lvl, srch=False)
+                if curr is node:
+                    present = True
+            if not present and node.link_pending.load() == 0:
+                break
+        smr.retire(node)
+
+    def _find_level(self, key, lvl: int, srch: bool,
+                    start: Optional[TowerNode] = None
+                    ) -> Tuple[TowerNode, Optional[TowerNode], bool]:
+        """Harris find restricted to one level, with SCOT validation."""
+        while True:
+            out = self._find_level_attempt(key, lvl, srch, start)
+            if out is not _RESTART:
+                return out
+            self.n_restarts.fetch_add(1)
+            start = None  # restarts go back to the head
+
+    def _find_level_attempt(self, key, lvl, srch, start):
+        smr = self.smr
+        prev: TowerNode = start if start is not None else self.head
+        curr, _ = smr.protect(prev.next_ref(lvl), HP_CURR)
+        prev_next = curr
+        while True:
+            # phase 1 — safe zone
+            while True:
+                if curr is None:
+                    return self._finish_level(prev, prev_next, None, srch,
+                                              key, lvl)
+                nxt, nmark = smr.protect(curr.next_ref(lvl), HP_NEXT)
+                if nmark:
+                    break
+                if curr.key >= key:
+                    return self._finish_level(prev, prev_next, curr, srch,
+                                              key, lvl)
+                smr.dup(HP_CURR, HP_PREV)
+                prev = curr
+                prev_next = nxt
+                smr.dup(HP_NEXT, HP_CURR)
+                curr = nxt
+            # phase 2 — dangerous zone
+            if self.scot:
+                smr.dup(HP_CURR, HP_UNSAFE)
+            chain_start = curr
+            while True:
+                curr = nxt
+                if curr is None:
+                    return self._finish_level(prev, chain_start, None, srch,
+                                              key, lvl)
+                smr.dup(HP_NEXT, HP_CURR)
+                # validate BEFORE dereferencing the reserved node (Thm 1)
+                if self.scot and prev.next_ref(lvl).get() != (chain_start, False):
+                    self.n_restarts.fetch_add(0)  # counted by caller
+                    return _RESTART
+                nxt, nmark = smr.protect(curr.next_ref(lvl), HP_NEXT)
+                if not nmark:
+                    break
+            if curr.key >= key:
+                return self._finish_level(prev, chain_start, curr, srch,
+                                          key, lvl)
+            smr.dup(HP_CURR, HP_PREV)
+            prev = curr
+            prev_next = nxt
+            curr = nxt
+
+    def _finish_level(self, prev, prev_next, curr, srch, key, lvl):
+        if not srch and prev_next is not curr:
+            if not prev.next_ref(lvl).compare_exchange(prev_next, False,
+                                                       curr, False):
+                return _RESTART
+            # NOTE: unlike the flat list, the unlinker does NOT retire here —
+            # towers are retired once by the level-0 deletion owner.
+        found = curr is not None and curr.key == key and \
+            not curr.next_ref(lvl).get_mark()
+        return (prev, curr, found)
+
+    def snapshot(self):
+        out = []
+        node = self.head.next_ref_unsafe(0).get_ref()
+        while node is not None:
+            nxt, mark = node.next_ref_unsafe(0).get()
+            if not mark:
+                out.append(node._key)
+            node = nxt
+        return out

@@ -1,0 +1,146 @@
+"""The paper's §5 benchmark driver.
+
+Prefill the structure with 50% of the key range, then run N threads for a
+fixed duration issuing a read/insert/delete mix.  Reports throughput
+(Mops/s), memory overhead (average not-yet-reclaimed objects, sampled
+periodically as in the paper), and the mechanism counters that are
+thread-count independent (restarts, validation failures, barriers).
+
+Workloads match the paper: ``50r-50w`` (50% read, 25% ins, 25% del),
+``90r-10w`` (90/5/5), ``0r-100w`` (0/50/50).
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .smr import SCHEMES, SmrScheme, make_scheme
+from .structures.harris_list import HarrisList
+from .structures.hm_list import HarrisMichaelList
+from .structures.nm_tree import NMTree
+from .structures.hashmap import LockFreeHashMap
+from .structures.skiplist import SkipList
+
+WORKLOADS = {
+    "50r-50w": (0.50, 0.25, 0.25),
+    "90r-10w": (0.90, 0.05, 0.05),
+    "0r-100w": (0.00, 0.50, 0.50),
+}
+
+STRUCTURES: Dict[str, Callable] = {
+    "HList": lambda smr, **kw: HarrisList(smr, **kw),
+    "HMList": lambda smr, **kw: HarrisMichaelList(
+        smr, **{k: v for k, v in kw.items() if k in ("recycle",)}),
+    "NMTree": lambda smr, **kw: NMTree(
+        smr, **{k: v for k, v in kw.items() if k in ("scot",)}),
+    "HashMap": lambda smr, **kw: LockFreeHashMap(smr, **kw),
+    "SkipList": lambda smr, **kw: SkipList(
+        smr, **{k: v for k, v in kw.items() if k in ("scot",)}),
+}
+
+
+@dataclass
+class WorkloadResult:
+    structure: str
+    scheme: str
+    threads: int
+    key_range: int
+    workload: str
+    duration_s: float
+    total_ops: int
+    mops_per_s: float
+    avg_not_reclaimed: float
+    max_not_reclaimed: int
+    smr_stats: Dict[str, int] = field(default_factory=dict)
+    ds_stats: Dict[str, int] = field(default_factory=dict)
+
+    def row(self) -> str:
+        return (
+            f"{self.structure},{self.scheme},{self.threads},{self.key_range},"
+            f"{self.workload},{self.total_ops},{self.mops_per_s:.4f},"
+            f"{self.avg_not_reclaimed:.1f},{self.max_not_reclaimed}"
+        )
+
+
+def run_workload(
+    structure: str = "HList",
+    scheme: str = "EBR",
+    threads: int = 4,
+    key_range: int = 512,
+    workload: str = "50r-50w",
+    duration_s: float = 1.0,
+    seed: int = 0,
+    sample_interval_s: float = 0.05,
+    structure_kwargs: Optional[dict] = None,
+    scheme_kwargs: Optional[dict] = None,
+) -> WorkloadResult:
+    read_p, ins_p, _ = WORKLOADS[workload]
+    smr: SmrScheme = make_scheme(scheme, **(scheme_kwargs or {}))
+    ds = STRUCTURES[structure](smr, **(structure_kwargs or {}))
+
+    # prefill with 50% of the key range (paper §5)
+    rng = random.Random(seed)
+    keys = list(range(key_range))
+    rng.shuffle(keys)
+    for k in keys[: key_range // 2]:
+        ds.insert(k)
+
+    stop = threading.Event()
+    ready = threading.Barrier(threads + 1)
+    ops = [0] * threads
+
+    def worker(idx: int) -> None:
+        r = random.Random(seed * 7919 + idx)
+        local_ops = 0
+        ready.wait()
+        while not stop.is_set():
+            k = r.randrange(key_range)
+            p = r.random()
+            if p < read_p:
+                ds.search(k)
+            elif p < read_p + ins_p:
+                ds.insert(k)
+            else:
+                ds.delete(k)
+            local_ops += 1
+        ops[idx] = local_ops
+
+    ts = [threading.Thread(target=worker, args=(i,), daemon=True)
+          for i in range(threads)]
+    for t in ts:
+        t.start()
+    ready.wait()
+    t0 = time.perf_counter()
+    samples: List[int] = []
+    deadline = t0 + duration_s
+    while time.perf_counter() < deadline:
+        time.sleep(min(sample_interval_s, max(0.0, deadline - time.perf_counter())))
+        samples.append(smr.not_yet_reclaimed())
+    stop.set()
+    for t in ts:
+        t.join()
+    elapsed = time.perf_counter() - t0
+
+    total = sum(ops)
+    return WorkloadResult(
+        structure=structure,
+        scheme=scheme,
+        threads=threads,
+        key_range=key_range,
+        workload=workload,
+        duration_s=elapsed,
+        total_ops=total,
+        mops_per_s=total / elapsed / 1e6,
+        avg_not_reclaimed=(sum(samples) / len(samples)) if samples else 0.0,
+        max_not_reclaimed=max(samples) if samples else 0,
+        smr_stats=smr.stats(),
+        ds_stats=ds.stats() if hasattr(ds, "stats") else {},
+    )
+
+
+CSV_HEADER = ("structure,scheme,threads,key_range,workload,total_ops,"
+              "mops_per_s,avg_not_reclaimed,max_not_reclaimed")

@@ -1,0 +1,113 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Tiling: grid (B, H, n_q_blocks, n_kv_blocks); the kv dimension is innermost,
+so the fp32 online-softmax accumulators live in VMEM scratch and persist
+across kv iterations (TPU grid execution is sequential).  Block shapes are
+MXU-aligned (block_q × head_dim and block_k × head_dim tiles, default
+128×128).  Causal blocks that are fully masked are skipped (no MXU work).
+
+GQA is folded into the index maps: the kv-head index is q_head // group, so
+no KV duplication is materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip blocks entirely above the diagonal
+    q_end = (qi + 1) * block_q
+    k_start = ki * block_k
+    live = (not causal) or (q_end > k_start)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,D) → (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    scale = 1.0 / math.sqrt(d)
+
+    qt = q.transpose(0, 2, 1, 3)   # (B,H,Sq,D)
+    kt = k.transpose(0, 2, 1, 3)   # (B,Hkv,Sk,D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, n_kv=sk // block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,76 @@
+"""Jit'd dispatch wrappers: the public kernel API used by the models and the
+serving engine.
+
+``backend``:
+  * "xla"      — pure-jnp path (ref.py / blockwise-jnp): the CPU default.
+  * "pallas"   — the Pallas kernels (Mosaic on TPU; interpret=True on CPU —
+                 correct but slow, used by tests).
+
+The model zoo calls these wrappers so a single config flag flips the whole
+stack onto the TPU kernels."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .paged_attention import paged_attention as _paged_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+_DEFAULT_BACKEND = "xla"
+
+
+def default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("xla", "pallas", "pallas_interpret")
+    _DEFAULT_BACKEND = name
+
+
+def _resolve(backend: Optional[str]):
+    b = backend or _DEFAULT_BACKEND
+    interpret = b == "pallas_interpret" or (
+        b == "pallas" and jax.default_backend() != "tpu")
+    return ("pallas" if b.startswith("pallas") else "xla"), interpret
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    backend: Optional[str] = None):
+    kind, interpret = _resolve(backend)
+    if kind == "pallas" and q.shape[1] % min(block_q, q.shape[1]) == 0:
+        return _flash_pallas(q, k, v, causal=causal,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
+                    backend: Optional[str] = None):
+    kind, interpret = _resolve(backend)
+    if kind == "pallas":
+        return _paged_pallas(q, k_pages, v_pages, block_tables, context_lens,
+                             interpret=interpret)
+    return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   context_lens)
+
+
+def ssd(x, dt, a, b, c, *, chunk=128, d_skip=None,
+        backend: Optional[str] = None):
+    kind, interpret = _resolve(backend)
+    if kind == "pallas" and x.shape[1] % min(chunk, x.shape[1]) == 0:
+        y, final = _ssd_pallas(x, dt, a, b, c, chunk=chunk,
+                               interpret=interpret)
+        if d_skip is not None:
+            y = y + (x.astype(jnp.float32) *
+                     d_skip.astype(jnp.float32)[None, None, :, None]
+                     ).astype(y.dtype)
+        return y, final
+    return ref.ssd_chunked_ref(x, dt, a, b, c, chunk=chunk, d_skip=d_skip)

@@ -1,0 +1,112 @@
+"""Paged-attention decode — Pallas TPU kernel.
+
+This is the device half of the paper's integration: the block tables this
+kernel consumes are produced by the SMR-managed block pool
+(repro/runtime/block_pool.py) — a page must not be reused while any
+scheduler thread still traverses an index entry that references it, which is
+exactly the SCOT/SMR guarantee.
+
+Tiling: grid (B, Hkv, n_pages).  Page indirection goes through
+``PrefetchScalarGridSpec``: the block-table entry selects which physical
+page is DMA'd into VMEM for each grid step (no gather materialization).
+All G = H/Hkv query heads of a kv head are processed together as a (G, D)
+tile; fp32 online-softmax accumulators persist in VMEM scratch across the
+(innermost, sequential) page dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(block_tables, context_lens, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page_size: int, n_pages: int,
+                  scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = context_lens[b]
+    live = pi * page_size < ctx  # trailing pages beyond ctx are skipped
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, page)
+        pos = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < ctx, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        v = v_ref[0, :, 0].astype(jnp.float32)             # (page, D)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
+                    interpret: bool = False):
+    """q (B,H,D); k/v_pages (P,page,Hkv,D); block_tables (B,n_pages) int32;
+    context_lens (B,) int32 → (B,H,D)."""
+    b, h, d = q.shape
+    n_phys, page_size, hkv, _ = k_pages.shape
+    group = h // hkv
+    n_pages = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    # (B, Hkv, G, D) query tile layout
+    qt = q.reshape(b, hkv, group, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda bi, hi, pi, bt, cl: (bi, hi, 0, 0)),
+            # the physical page for logical page pi comes from the
+            # SMR-managed block table (scalar-prefetched)
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda bi, hi, pi, bt, cl: (bt[bi, pi], 0, hi, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda bi, hi, pi, bt, cl: (bt[bi, pi], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda bi, hi, pi, bt, cl: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, page_size=page_size,
+                               n_pages=n_pages, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qt, k_pages, v_pages)
+    return out.reshape(b, h, d)

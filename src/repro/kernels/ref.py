@@ -1,0 +1,165 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function is the straightforward (memory-naive where acceptable)
+implementation; tests sweep shapes/dtypes asserting the Pallas kernels
+(interpret=True on CPU, Mosaic on real TPU) match these."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ attention
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, softmax_scale=None):
+    """q (B,Sq,H,D), k/v (B,Sk,Hkv,D) → (B,Sq,H,D); fp32 softmax."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    scale = softmax_scale or 1.0 / math.sqrt(d)
+    qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens,
+                        softmax_scale=None):
+    """Decode attention over a paged KV pool.
+
+    q:            (B, H, D)           — one query token per sequence
+    k/v_pages:    (P, page_size, Hkv, D) — the global page pool
+    block_tables: (B, pages_per_seq) int32 — page ids per sequence
+    context_lens: (B,) int32          — valid token count per sequence
+    """
+    b, h, d = q.shape
+    npages, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    scale = softmax_scale or 1.0 / math.sqrt(d)
+    max_len = block_tables.shape[1] * page_size
+
+    # gather each sequence's pages into a contiguous view
+    k_seq = k_pages[block_tables]          # (B, pages, page, Hkv, D)
+    v_seq = v_pages[block_tables]
+    k_seq = k_seq.reshape(b, max_len, hkv, d).astype(jnp.float32)
+    v_seq = v_seq.reshape(b, max_len, hkv, d).astype(jnp.float32)
+
+    qf = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_seq)
+    mask = jnp.arange(max_len)[None, :] < context_lens[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_seq)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ SSD
+
+
+def ssd_ref(x, dt, a, b, c, chunk: int = 128, d_skip=None, initial_state=None):
+    """Mamba2 SSD (state-space dual) — sequential reference recurrence.
+
+    x: (B,S,H,P); dt: (B,S,H); a: (H,) (negative); b,c: (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    hg = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = jnp.repeat(b.astype(jnp.float32), hg, axis=2)  # (B,S,H,N)
+    cf = jnp.repeat(c.astype(jnp.float32), hg, axis=2)
+    da = jnp.exp(dtf * a[None, None, :])               # (B,S,H)
+
+    if initial_state is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, dat, bt, ct = inp
+        state = state * dat[..., None, None] + \
+            (dtt[..., None, None] * xt[..., None]) * bt[:, :, None, :]
+        yt = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, yt
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(da, 1, 0), jnp.moveaxis(bf, 1, 0),
+          jnp.moveaxis(cf, 1, 0))
+    final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                         # (B,S,H,P)
+    if d_skip is not None:
+        y = y + xf * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_chunked_ref(x, dt, a, b, c, chunk: int = 128, d_skip=None,
+                    initial_state=None):
+    """Chunked (dual) form — the parallel algorithm the Pallas kernel tiles.
+
+    Mathematically identical to ssd_ref; used as the model's default train
+    path and as the kernel's structural template."""
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    hg = h // g
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = jnp.repeat(b.astype(jnp.float32), hg, axis=2).reshape(
+        bsz, nc, chunk, h, n)
+    cf = jnp.repeat(c.astype(jnp.float32), hg, axis=2).reshape(
+        bsz, nc, chunk, h, n)
+
+    da = dtf * a[None, None, None, :]                   # (B,nc,Q,H) log-decay
+    da_cs = jnp.cumsum(da, axis=2)                      # within-chunk cumsum
+    da_total = da_cs[:, :, -1]                          # (B,nc,H)
+
+    # intra-chunk (dual/attention-like) term
+    seg = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihs,bcjhs->bcijh", cf, bf)   # C_i · B_j
+    y_diag = jnp.einsum("bcijh,bcijh,bcjh,bcjhp->bcihp",
+                        scores, l_mat, dtf, xf)
+
+    # chunk-local end states
+    decay_to_end = jnp.exp(da_total[:, :, None, :] - da_cs)     # (B,nc,Q,H)
+    states = jnp.einsum("bcqhs,bcqh,bcqh,bcqhp->bchps",
+                        bf, decay_to_end, dtf, xf)
+
+    # inter-chunk recurrence
+    if initial_state is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def carry(state, inp):
+        st, tot = inp
+        prev = state
+        state = state * jnp.exp(tot)[:, :, None, None] + st
+        return state, prev
+
+    (final, prevs) = jax.lax.scan(
+        carry, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(da_total, 1, 0)))
+    prev_states = jnp.moveaxis(prevs, 0, 1)             # (B,nc,H,P,N)
+
+    # inter-chunk contribution
+    y_off = jnp.einsum("bcqhs,bcqh,bchps->bcqhp",
+                       cf, jnp.exp(da_cs), prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    if d_skip is not None:
+        y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final

@@ -1,0 +1,109 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+Grid (B, H, n_chunks); the chunk dimension is innermost and sequential, so
+the (P, N) recurrent state lives in fp32 VMEM scratch and is carried across
+chunk iterations — the inter-chunk recurrence costs no HBM round-trips.
+Within a chunk the dual (matmul) form runs on the MXU: the (chunk × chunk)
+decay-masked score matrix and the (chunk × N) state outer products are all
+MXU-shaped (chunk defaults to 128).
+
+The group-to-head mapping of B/C (G groups broadcast over H heads) is folded
+into the index maps, like GQA in the flash kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # (Q,)
+    a = a_ref[0].astype(jnp.float32)              # scalar
+    bmat = b_ref[0, :, 0].astype(jnp.float32)     # (Q, N)
+    cmat = c_ref[0, :, 0].astype(jnp.float32)     # (Q, N)
+
+    da = dt * a                                    # (Q,) log-decay
+    da_cs = jnp.cumsum(da)                         # within-chunk cumsum
+    da_total = da_cs[-1]
+
+    # intra-chunk dual form (MXU): scores C_i · B_j, decay-masked
+    seg = da_cs[:, None] - da_cs[None, :]
+    q_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    q_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.where(q_i >= q_j, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())))
+    y = jax.lax.dot_general(scores * l_mat * dt[None, :], x,
+                            (((1,), (0,)), ((), ())))          # (Q, P)
+
+    # inter-chunk: contribution of the carried state
+    state = state_scr[...]                                     # (P, N)
+    y = y + jnp.exp(da_cs)[:, None] * jax.lax.dot_general(
+        cmat, state, (((1,), (1,)), ((), ())))                 # (Q, P)
+
+    # state update: decay old state, add this chunk's outer products
+    decay_to_end = jnp.exp(da_total - da_cs) * dt              # (Q,)
+    state_scr[...] = state * jnp.exp(da_total) + \
+        jax.lax.dot_general(x, bmat * decay_to_end[:, None],
+                            (((0,), (0,)), ((), ())))          # (P, N)
+
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        state_out_ref[0, 0] = state_scr[...].astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = False):
+    """x (B,S,H,P); dt (B,S,H); a (H,); b/c (B,S,G,N)
+    → (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    hg = h // g
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    grid = (bsz, h, n_chunks)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1),
+                         lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda bi, hi, ci: (bi, ci, hi // hg, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda bi, hi, ci: (bi, ci, hi // hg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n),
+                         lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, final

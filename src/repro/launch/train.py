@@ -1,0 +1,49 @@
+"""Production training launcher.
+
+On this CPU container it runs reduced configs end-to-end; on a real fleet
+the same entry point lowers the full config onto the production mesh (the
+dry-run proves every (arch × shape × mesh) compiles — launch/dryrun.py).
+
+XLA flags that matter on real TPU (latency-hiding/overlap; recorded for
+deployment, no effect on CPU):
+    --xla_tpu_enable_async_collective_fusion=true
+    --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
+    --xla_tpu_overlap_compute_collective_tc=true
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from ..configs import ALL_ARCHS, get_config
+from ..train.loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ALL_ARCHS)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced config (CPU container default)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().replace(dtype="float32", remat="none")
+    tr = Trainer(cfg, global_batch=args.global_batch, seq_len=args.seq_len,
+                 microbatches=args.microbatches,
+                 checkpoint_dir=args.ckpt_dir, total_steps=args.steps)
+    state = tr.restore_or_init() if args.resume else tr.init_state()
+    state = tr.train(state, args.steps)
+    print(f"[train] {cfg.name}: step={state.step} "
+          f"loss={tr.losses[-1]:.4f} watchdog={tr.watchdog.stats()}")
+    tr.close()
+
+
+if __name__ == "__main__":
+    main()

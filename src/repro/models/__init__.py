@@ -1,0 +1,5 @@
+"""Model zoo (10 assigned architectures; see repro/configs)."""
+
+from .registry import build_model
+
+__all__ = ["build_model"]

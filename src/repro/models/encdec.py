@@ -1,0 +1,265 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, enc_seq, d_model).  Positions are
+sinusoidal (computed on the fly) so parameter shapes are independent of the
+dry-run sequence lengths (deviation from Whisper's learned decoder positions
+recorded in DESIGN.md)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .layers import (
+    blockwise_attention,
+    cross_entropy_loss,
+    decode_attention,
+    layer_norm,
+    sinusoidal_positions,
+    update_kv_cache,
+)
+from .params import ParamCollector, stack_abstract, stack_layer_params, \
+    stack_layer_specs
+
+
+def _init_attn(col, cfg, prefix=""):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    col.add(prefix + "wq", (d, h * hd), ("embed", "heads"))
+    col.add(prefix + "wk", (d, h * hd), ("embed", "heads"))
+    col.add(prefix + "wv", (d, h * hd), ("embed", "heads"))
+    col.add(prefix + "wo", (h * hd, d), ("heads", "embed"))
+
+
+def _init_enc_block(col, cfg):
+    d = cfg.d_model
+    col.add("ln1_s", (d,), ("embed_no_fsdp",), init="ones")
+    col.add("ln1_b", (d,), ("embed_no_fsdp",), init="zeros")
+    col.add("ln2_s", (d,), ("embed_no_fsdp",), init="ones")
+    col.add("ln2_b", (d,), ("embed_no_fsdp",), init="zeros")
+    _init_attn(col.sub("attn"), cfg)
+    ffn = col.sub("ffn")
+    ffn.add("wi", (d, cfg.d_ff), ("embed", "mlp"))
+    ffn.add("bi", (cfg.d_ff,), ("mlp",), init="zeros")
+    ffn.add("wo", (cfg.d_ff, d), ("mlp", "embed"))
+    ffn.add("bo", (d,), ("embed_no_fsdp",), init="zeros")
+
+
+def _init_dec_block(col, cfg):
+    _init_enc_block(col, cfg)
+    col.add("ln3_s", (cfg.d_model,), ("embed_no_fsdp",), init="ones")
+    col.add("ln3_b", (cfg.d_model,), ("embed_no_fsdp",), init="zeros")
+    _init_attn(col.sub("cross"), cfg)
+
+
+def _mha(p, cfg, xq, xkv, causal):
+    b, s, _ = xq.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (xq @ p["wq"]).reshape(b, s, h, hd)
+    k = (xkv @ p["wk"]).reshape(b, xkv.shape[1], h, hd)
+    v = (xkv @ p["wv"]).reshape(b, xkv.shape[1], h, hd)
+    out = blockwise_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def _ffn(p, x):
+    h = jax.nn.gelu(x @ p["wi"] + p["bi"])
+    h = constrain(h, "batch", "seq", "act_mlp")
+    return h @ p["wo"] + p["bo"]
+
+
+class WhisperEncDec:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def _build(self, col: ParamCollector):
+        cfg = self.cfg
+        col.add("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+        col.add("lm_head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        col.add("enc_norm_s", (cfg.d_model,), ("embed_no_fsdp",), init="ones")
+        col.add("enc_norm_b", (cfg.d_model,), ("embed_no_fsdp",), init="zeros")
+        col.add("dec_norm_s", (cfg.d_model,), ("embed_no_fsdp",), init="ones")
+        col.add("dec_norm_b", (cfg.d_model,), ("embed_no_fsdp",), init="zeros")
+
+        for stack, n, initfn in (("enc_blocks", cfg.enc_layers, _init_enc_block),
+                                 ("dec_blocks", cfg.dec_layers, _init_dec_block)):
+            per_layer = []
+            count = n if not col.abstract else 1
+            for _ in range(count):
+                sub = ParamCollector(None if col.abstract else col.next_key(),
+                                     col.dtype, abstract=col.abstract)
+                initfn(sub, cfg)
+                per_layer.append(sub)
+            if col.abstract:
+                col.params[stack] = stack_abstract(per_layer[0].params, n)
+            else:
+                col.params[stack] = stack_layer_params(
+                    [s.params for s in per_layer])
+            col.specs[stack] = stack_layer_specs(per_layer[0].specs)
+
+    def init(self, rng):
+        col = ParamCollector(rng, dtype=getattr(jnp, self.cfg.dtype))
+        self._build(col)
+        return col.build()
+
+    def abstract_params(self):
+        col = ParamCollector(abstract=True,
+                             dtype=getattr(jnp, self.cfg.dtype))
+        self._build(col)
+        return col.build()
+
+    # -------------------------------------------------------------- paths
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(getattr(jnp, cfg.dtype)) + \
+            sinusoidal_positions(frames.shape[1], cfg.d_model).astype(getattr(jnp, cfg.dtype))
+        x = constrain(x, "batch", "seq", "act_embed")
+
+        def body(h, p):
+            a = layer_norm(h, p["ln1_s"], p["ln1_b"])
+            h = h + _mha(p["attn"], cfg, a, a, causal=False)
+            a = layer_norm(h, p["ln2_s"], p["ln2_b"])
+            h = h + _ffn(p["ffn"], a)
+            return h, None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        else:
+            for i in range(cfg.enc_layers):
+                layer = jax.tree_util.tree_map(lambda p: p[i],
+                                               params["enc_blocks"])
+                x, _ = body(x, layer)
+        return layer_norm(x, params["enc_norm_s"], params["enc_norm_b"])
+
+    def logits_fn(self, params, batch):
+        cfg = self.cfg
+        memory = self._encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+        x = constrain(x, "batch", "seq", "act_embed")
+
+        def body(h, p):
+            a = layer_norm(h, p["ln1_s"], p["ln1_b"])
+            h = h + _mha(p["attn"], cfg, a, a, causal=True)
+            a = layer_norm(h, p["ln3_s"], p["ln3_b"])
+            h = h + _mha(p["cross"], cfg, a, memory, causal=False)
+            a = layer_norm(h, p["ln2_s"], p["ln2_b"])
+            h = h + _ffn(p["ffn"], a)
+            return h, None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        else:
+            for i in range(cfg.dec_layers):
+                layer = jax.tree_util.tree_map(lambda p: p[i],
+                                               params["dec_blocks"])
+                x, _ = body(x, layer)
+        x = layer_norm(x, params["dec_norm_s"], params["dec_norm_b"])
+        logits = x @ params["lm_head"]
+        logits = constrain(logits, "batch", "seq", "act_vocab")
+        return logits, tokens
+
+    def loss_fn(self, params, batch):
+        logits, tokens = self.logits_fn(params, batch)
+        shifted = jnp.where(
+            jnp.arange(tokens.shape[1])[None, :] < tokens.shape[1] - 1,
+            jnp.roll(tokens, -1, axis=1), -1)
+        loss, _ = cross_entropy_loss(logits, shifted)
+        return loss
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        kv = (cfg.dec_layers, batch_size, max_len, cfg.n_heads, cfg.head_dim)
+        cross = (cfg.dec_layers, batch_size, cfg.enc_seq, cfg.n_heads,
+                 cfg.head_dim)
+        axes = ("layers", "batch", "decode_seq", "act_kv_heads", "head_dim")
+        caxes = ("layers", "batch", None, "act_kv_heads", "head_dim")
+        shapes = {
+            "k": jax.ShapeDtypeStruct(kv, getattr(jnp, cfg.dtype)),
+            "v": jax.ShapeDtypeStruct(kv, getattr(jnp, cfg.dtype)),
+            "cross_k": jax.ShapeDtypeStruct(cross, getattr(jnp, cfg.dtype)),
+            "cross_v": jax.ShapeDtypeStruct(cross, getattr(jnp, cfg.dtype)),
+        }
+        specs = {"k": axes, "v": axes, "cross_k": caxes, "cross_v": caxes}
+        return shapes, specs
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        cache_len = batch["cache_len"]
+        b = batch["tokens"].shape[0]
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        # sinusoidal position of the new token
+        half = cfg.d_model // 2
+        pos = (cache_len - 1).astype(jnp.float32)[:, None]
+        i = jnp.arange(half, dtype=jnp.float32)[None, :]
+        ang = pos / (10000.0 ** (2 * i / cfg.d_model))
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe[:, None, :].astype(x.dtype)
+
+        def body(h, xs):
+            p, kc, vc, ck, cv = xs
+            a = layer_norm(h, p["ln1_s"], p["ln1_b"])
+            hd = cfg.head_dim
+            q = (a @ p["attn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+            k = (a @ p["attn"]["wk"]).reshape(b, 1, cfg.n_heads, hd)
+            v = (a @ p["attn"]["wv"]).reshape(b, 1, cfg.n_heads, hd)
+            kc, vc = update_kv_cache(kc, vc, k, v, cache_len - 1)
+            out = decode_attention(q[:, 0], kc, vc, cache_len)
+            h = h + out.reshape(b, 1, -1) @ p["attn"]["wo"]
+            # cross attention against the precomputed memory K/V
+            a = layer_norm(h, p["ln3_s"], p["ln3_b"])
+            q = (a @ p["cross"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+            full = jnp.full((b,), ck.shape[1], jnp.int32)
+            out = decode_attention(q[:, 0], ck, cv, full)
+            h = h + out.reshape(b, 1, -1) @ p["cross"]["wo"]
+            a = layer_norm(h, p["ln2_s"], p["ln2_b"])
+            h = h + _ffn(p["ffn"], a)
+            return h, (kc, vc)
+
+        if cfg.scan_layers:
+            x, (k2, v2) = jax.lax.scan(
+                body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                          cache["cross_k"], cache["cross_v"]))
+        else:
+            k2, v2 = cache["k"], cache["v"]
+            for i in range(cfg.dec_layers):
+                layer = jax.tree_util.tree_map(lambda p: p[i],
+                                               params["dec_blocks"])
+                x, (ki, vi) = body(x, (layer, cache["k"][i], cache["v"][i],
+                                       cache["cross_k"][i],
+                                       cache["cross_v"][i]))
+                k2 = k2.at[i].set(ki)
+                v2 = v2.at[i].set(vi)
+        x = layer_norm(x, params["dec_norm_s"], params["dec_norm_b"])
+        logits = x[:, 0] @ params["lm_head"]
+        logits = constrain(logits, "batch", "act_vocab")
+        new_cache = dict(cache)
+        new_cache["k"] = k2
+        new_cache["v"] = v2
+        return logits, new_cache
+
+    # --------------------------------------------------------------- I/O
+    def input_specs(self, shape, dtype=jnp.int32):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            return {
+                "frames": jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                               getattr(jnp, cfg.dtype)),
+                "tokens": jax.ShapeDtypeStruct((b, s), dtype),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), dtype),
+                "cache_len": jax.ShapeDtypeStruct((b,), dtype)}
+
+    def input_axes(self, shape):
+        if shape.kind in ("train", "prefill"):
+            return {"frames": ("batch", "seq", None),
+                    "tokens": ("batch", "seq")}
+        return {"tokens": ("batch", None), "cache_len": ("batch",)}

@@ -1,0 +1,253 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block whose
+weights are reused at every application site (every ``shared_attn_every``
+layers).  Each site keeps its own KV cache (same weights, different
+activations)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .layers import (
+    apply_rope,
+    blockwise_attention,
+    cross_entropy_loss,
+    decode_attention,
+    rms_norm,
+    rope_angles,
+    update_kv_cache,
+)
+from .params import ParamCollector, stack_abstract, stack_layer_params, \
+    stack_layer_specs
+from .ssm import (
+    _conv_channels,
+    init_mamba_block,
+    mamba_block_decode,
+    mamba_block_train,
+)
+from .transformer import init_attention, _qkv
+
+
+def _slice_tree(tree, start, size):
+    return jax.tree_util.tree_map(
+        lambda p: jax.lax.slice_in_dim(p, start, start + size, axis=0), tree)
+
+
+class Zamba2LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        every = cfg.shared_attn_every
+        # group layout: site i covers layers [i*every, min((i+1)*every, L))
+        self.groups = []
+        off = 0
+        while off < cfg.n_layers:
+            size = min(every, cfg.n_layers - off)
+            self.groups.append((off, size))
+            off += size
+        self.n_sites = len(self.groups)
+
+    # ------------------------------------------------------------- params
+    def _build(self, col: ParamCollector):
+        cfg = self.cfg
+        col.add("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+        col.add("final_norm", (cfg.d_model,), ("embed_no_fsdp",), init="ones")
+        col.add("lm_head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        # the single shared attention block
+        shared = col.sub("shared")
+        shared.add("ln1", (cfg.d_model,), ("embed_no_fsdp",), init="ones")
+        shared.add("ln2", (cfg.d_model,), ("embed_no_fsdp",), init="ones")
+        init_attention(shared.sub("attn"), cfg)
+        ffn = shared.sub("ffn")
+        ffn.add("wi_gate", (cfg.d_model, cfg.d_ff), ("embed", "mlp"))
+        ffn.add("wi_up", (cfg.d_model, cfg.d_ff), ("embed", "mlp"))
+        ffn.add("wo", (cfg.d_ff, cfg.d_model), ("mlp", "embed"))
+        # mamba backbone (stacked)
+        per_layer = []
+        n = cfg.n_layers if not col.abstract else 1
+        for _ in range(n):
+            sub = ParamCollector(None if col.abstract else col.next_key(),
+                                 col.dtype, abstract=col.abstract)
+            init_mamba_block(sub, cfg)
+            per_layer.append(sub)
+        if col.abstract:
+            col.params["blocks"] = stack_abstract(per_layer[0].params,
+                                                  cfg.n_layers)
+        else:
+            col.params["blocks"] = stack_layer_params(
+                [s.params for s in per_layer])
+        col.specs["blocks"] = stack_layer_specs(per_layer[0].specs)
+
+    def init(self, rng):
+        col = ParamCollector(rng, dtype=getattr(jnp, self.cfg.dtype))
+        self._build(col)
+        return col.build()
+
+    def abstract_params(self):
+        col = ParamCollector(abstract=True,
+                             dtype=getattr(jnp, self.cfg.dtype))
+        self._build(col)
+        return col.build()
+
+    # -------------------------------------------------------- shared attn
+    def _shared_train(self, p, x, angles):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"])
+        q, k, v = _qkv(p["attn"], cfg, h)
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+        out = blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        b, s, _, _ = out.shape
+        x = x + out.reshape(b, s, -1) @ p["attn"]["wo"]
+        h = rms_norm(x, p["ln2"])
+        ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
+        ff = constrain(ff, "batch", "seq", "act_mlp")
+        return x + ff @ p["ffn"]["wo"]
+
+    def _shared_decode(self, p, x, k_cache, v_cache, cache_len, angles):
+        cfg = self.cfg
+        b = x.shape[0]
+        h = rms_norm(x, p["ln1"])
+        q, k, v = _qkv(p["attn"], cfg, h)
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+        k_cache, v_cache = update_kv_cache(k_cache, v_cache, k, v,
+                                           cache_len - 1)
+        out = decode_attention(q[:, 0], k_cache, v_cache, cache_len)
+        x = x + out.reshape(b, 1, -1) @ p["attn"]["wo"]
+        h = rms_norm(x, p["ln2"])
+        ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
+        return x + ff @ p["ffn"]["wo"], k_cache, v_cache
+
+    # -------------------------------------------------------------- train
+    def logits_fn(self, params, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = constrain(x, "batch", "seq", "act_embed")
+        positions = jnp.arange(x.shape[1])[None, :]
+        angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+        def body(h, layer_params):
+            return mamba_block_train(layer_params, cfg, h), None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+            shared_fn = jax.checkpoint(
+                lambda p, h: self._shared_train(p, h, angles),
+                prevent_cse=False)
+        else:
+            shared_fn = lambda p, h: self._shared_train(p, h, angles)  # noqa: E731
+
+        for (off, size) in self.groups:
+            x = shared_fn(params["shared"], x)
+            group = _slice_tree(params["blocks"], off, size)
+            if cfg.scan_layers:
+                x, _ = jax.lax.scan(body, x, group)
+            else:
+                for i in range(size):
+                    layer = jax.tree_util.tree_map(lambda p: p[i], group)
+                    x, _ = body(x, layer)
+        x = rms_norm(x, params["final_norm"])
+        logits = x @ params["lm_head"]
+        logits = constrain(logits, "batch", "seq", "act_vocab")
+        return logits, batch["tokens"]
+
+    def loss_fn(self, params, batch):
+        logits, labels = self.logits_fn(params, batch)
+        shifted = jnp.where(
+            jnp.arange(labels.shape[1])[None, :] < labels.shape[1] - 1,
+            jnp.roll(labels, -1, axis=1), -1)
+        loss, _ = cross_entropy_loss(logits, shifted)
+        return loss
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        shapes = {
+            "ssm": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_n_heads,
+                 cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_conv_width - 1,
+                 _conv_channels(cfg)), getattr(jnp, cfg.dtype)),
+            "attn_k": jax.ShapeDtypeStruct(
+                (self.n_sites, batch_size, max_len, cfg.n_kv_heads,
+                 cfg.head_dim), getattr(jnp, cfg.dtype)),
+            "attn_v": jax.ShapeDtypeStruct(
+                (self.n_sites, batch_size, max_len, cfg.n_kv_heads,
+                 cfg.head_dim), getattr(jnp, cfg.dtype)),
+        }
+        specs = {
+            # heads sharded over 'model': keeps the recurrent state co-located
+            # with the TP-sharded inner activations (§Perf H2: unsharded-head
+            # state cost an 800 MB/step reshard at decode)
+            "ssm": ("layers", "batch", "act_heads", None, None),
+            "conv": ("layers", "batch", None, "conv_dim"),
+            "attn_k": ("layers", "batch", "decode_seq", "act_kv_heads",
+                       "head_dim"),
+            "attn_v": ("layers", "batch", "decode_seq", "act_kv_heads",
+                       "head_dim"),
+        }
+        return shapes, specs
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        cache_len = batch["cache_len"]
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = constrain(x, "batch", None, "act_embed")
+        angles = rope_angles((cache_len - 1)[:, None], cfg.head_dim,
+                             cfg.rope_theta)
+
+        def body(h, xs):
+            layer_params, ssm_state, conv_state = xs
+            h, s2, c2 = mamba_block_decode(layer_params, cfg, h,
+                                           ssm_state, conv_state)
+            return h, (s2, c2.astype(getattr(jnp, cfg.dtype)))
+
+        new_k, new_v, new_ssm, new_conv = [], [], [], []
+        for i, (off, size) in enumerate(self.groups):
+            x, kc, vc = self._shared_decode(
+                params["shared"], x, cache["attn_k"][i], cache["attn_v"][i],
+                cache_len, angles)
+            new_k.append(kc)
+            new_v.append(vc)
+            group = _slice_tree(params["blocks"], off, size)
+            g_ssm = jax.lax.slice_in_dim(cache["ssm"], off, off + size, axis=0)
+            g_conv = jax.lax.slice_in_dim(cache["conv"], off, off + size,
+                                          axis=0)
+            if cfg.scan_layers:
+                x, (s2, c2) = jax.lax.scan(body, x, (group, g_ssm, g_conv))
+            else:
+                outs_s, outs_c = [], []
+                for i in range(size):
+                    layer = jax.tree_util.tree_map(lambda p: p[i], group)
+                    x, (si, ci) = body(x, (layer, g_ssm[i], g_conv[i]))
+                    outs_s.append(si)
+                    outs_c.append(ci)
+                s2 = jnp.stack(outs_s, axis=0)
+                c2 = jnp.stack(outs_c, axis=0)
+            new_ssm.append(s2)
+            new_conv.append(c2)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = x[:, 0] @ params["lm_head"]
+        logits = constrain(logits, "batch", "act_vocab")
+        new_cache = {
+            "ssm": jnp.concatenate(new_ssm, axis=0),
+            "conv": jnp.concatenate(new_conv, axis=0),
+            "attn_k": jnp.stack(new_k, axis=0),
+            "attn_v": jnp.stack(new_v, axis=0),
+        }
+        return logits, new_cache
+
+    def input_specs(self, shape, dtype=jnp.int32):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": jax.ShapeDtypeStruct((b, s), dtype)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), dtype),
+                "cache_len": jax.ShapeDtypeStruct((b,), dtype)}
+
+    def input_axes(self, shape):
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": ("batch", "seq")}
+        return {"tokens": ("batch", None), "cache_len": ("batch",)}

@@ -1,0 +1,114 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+KV is compressed to a ``kv_lora_rank`` latent (plus one shared rope head),
+which is all the decode cache stores — the serving-memory win that makes
+MLA's 32k-decode cell fit.  Prefill/train use the expanded form; decode uses
+the *absorbed* form (W_uk folded into the query, W_uv applied after the
+latent-space attention) so per-step FLOPs scale with rank, not heads×dim."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, blockwise_attention, rope_angles
+from .params import ParamCollector
+
+
+def init_mla(col: ParamCollector, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    nope, rope, vdim = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    rank, qrank = cfg.kv_lora_rank, cfg.q_lora_rank
+    col.add("w_dq", (d, qrank), ("embed", "q_lora"))
+    col.add("q_norm", (qrank,), ("q_lora",), init="ones")
+    col.add("w_uq", (qrank, h * (nope + rope)), ("q_lora", "heads"))
+    col.add("w_dkv", (d, rank + rope), ("embed", "kv_lora"))
+    col.add("kv_norm", (rank,), ("kv_lora",), init="ones")
+    col.add("w_uk", (rank, h * nope), ("kv_lora", "heads"))
+    col.add("w_uv", (rank, h * vdim), ("kv_lora", "heads"))
+    col.add("wo", (h * vdim, d), ("heads", "embed"))
+
+
+def _project_q(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, nope, rope = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    from .layers import rms_norm
+    q_lat = rms_norm(x @ p["w_dq"], p["q_norm"])
+    q = (q_lat @ p["w_uq"]).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ang = rope_angles(positions, rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, ang)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, cfg, x, positions):
+    from .layers import rms_norm
+    rank, rope = cfg.kv_lora_rank, cfg.rope_head_dim
+    lat = x @ p["w_dkv"]
+    c_kv = rms_norm(lat[..., :rank], p["kv_norm"])
+    k_rope = lat[..., rank:]                      # one shared rope head
+    ang = rope_angles(positions, rope, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], ang)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention_train(p, cfg, x, positions, chunk=512):
+    """Expanded form for train/prefill: full multi-head attention with
+    k = [W_uk·c_kv, k_rope(broadcast)], v = W_uv·c_kv."""
+    b, s, _ = x.shape
+    h, nope, rope, vdim = (cfg.n_heads, cfg.nope_head_dim,
+                           cfg.rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv, k_rope = _project_kv_latent(p, cfg, x, positions)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, nope)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, vdim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope))],
+        axis=-1)
+    # pad V up to the QK head dim so the blockwise kernel is reusable
+    scale = 1.0 / math.sqrt(nope + rope)
+    out = blockwise_attention(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                                (0, nope + rope - vdim))),
+                              causal=True, chunk=chunk, softmax_scale=scale)
+    out = out[..., :vdim].reshape(b, s, h * vdim)
+    return out @ p["wo"], (c_kv, k_rope)
+
+
+def mla_attention_decode(p, cfg, x, cache_ckv, cache_krope, cache_len,
+                         positions):
+    """Absorbed decode: scores and values live in the rank-dim latent space.
+
+    cache_ckv: (B, S, rank); cache_krope: (B, S, rope)."""
+    b, _, _ = x.shape
+    h, nope, rope, vdim = (cfg.n_heads, cfg.nope_head_dim,
+                           cfg.rope_head_dim, cfg.v_head_dim)
+    rank = cfg.kv_lora_rank
+    q_nope, q_rope = _project_q(p, cfg, x, positions)       # (B,1,H,·)
+    c_new, kr_new = _project_kv_latent(p, cfg, x, positions)
+    bidx = jnp.arange(b)
+    pos = cache_len - 1                                      # write slot
+    cache_ckv = cache_ckv.at[bidx, pos].set(c_new[:, 0].astype(cache_ckv.dtype))
+    cache_krope = cache_krope.at[bidx, pos].set(kr_new[:, 0].astype(cache_krope.dtype))
+
+    w_uk = p["w_uk"].reshape(rank, h, nope)
+    # absorb: q' = q_nope · W_uk  → (B, H, rank)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(nope + rope)
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat,
+                       cache_ckv.astype(jnp.float32)) * scale
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        cache_krope.astype(jnp.float32)) * scale
+    scores = s_lat + s_rope
+    mask = jnp.arange(cache_ckv.shape[1])[None, :] < cache_len[:, None]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    pvals = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pvals, cache_ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(rank, h, vdim)
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * vdim).astype(x.dtype)
+    return out @ p["wo"], cache_ckv, cache_krope

@@ -1,0 +1,74 @@
+"""Mixture-of-Experts FFN with capacity-based dropless-ish dispatch.
+
+Tokens are routed top-k, positions within each expert assigned by masked
+cumsum, then scatter/gather through an (E·C, D) buffer.  Under the mesh,
+experts shard over 'model' (EP) and tokens over ('pod','data') — XLA SPMD
+materializes the all-to-all.  Shared experts (DeepSeek-V2) are a plain MLP
+added to the routed output."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .params import ParamCollector
+
+
+def init_moe_ffn(col: ParamCollector, cfg, d_ff: int):
+    e = cfg.n_experts
+    d = cfg.d_model
+    col.add("router", (d, e), ("embed_no_fsdp", "experts"))
+    col.add("wi_gate", (e, d, d_ff), ("experts", "embed", "expert_mlp"))
+    col.add("wi_up", (e, d, d_ff), ("experts", "embed", "expert_mlp"))
+    col.add("wo", (e, d_ff, d), ("experts", "expert_mlp", "embed"))
+    if cfg.n_shared_experts:
+        sd = d_ff * cfg.n_shared_experts
+        col.add("shared_wi_gate", (d, sd), ("embed", "mlp"))
+        col.add("shared_wi_up", (d, sd), ("embed", "mlp"))
+        col.add("shared_wo", (sd, d), ("mlp", "embed"))
+
+
+def apply_moe_ffn(p, cfg, x):
+    """x: (B, S, D) → (B, S, D)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    cap = max(int(t * k * cfg.capacity_factor / e), 1)
+
+    xf = x.reshape(t, d)
+    gates = jax.nn.softmax(
+        (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)), axis=-1)
+    topw, tope = jax.lax.top_k(gates, k)            # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert via masked cumsum
+    onehot = jax.nn.one_hot(tope, e, dtype=jnp.int32)        # (T, k, E)
+    flat_oh = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=0) * flat_oh         # (T*k, E)
+    pos = (pos_in_e.sum(-1) - 1).reshape(t, k)               # (T, k)
+    keep = (pos < cap) & (pos >= 0)
+
+    slot = tope * cap + jnp.where(keep, pos, 0)              # (T, k)
+    # scatter tokens into the (E*C, D) dispatch buffer
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    contrib = jnp.repeat(xf[:, None, :], k, axis=1) * keep[..., None].astype(x.dtype)
+    buf = buf.at[slot.reshape(-1)].add(contrib.reshape(t * k, d))
+    buf = buf.reshape(e, cap, d)
+    buf = constrain(buf, "act_experts", None, None)
+
+    # expert MLPs (einsum over the expert dim → EP sharding)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out = constrain(out, "act_experts", None, None)
+    out = out.reshape(e * cap, d)
+
+    # gather back with gate weights
+    y = out[slot.reshape(-1)].reshape(t, k, d)
+    y = (y * (topw * keep).astype(y.dtype)[..., None]).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        sh = jax.nn.silu(xf @ p["shared_wi_gate"]) * (xf @ p["shared_wi_up"])
+        y = y + sh @ p["shared_wo"]
+    return y.reshape(b, s, d)

@@ -1,0 +1,110 @@
+"""Parameter-tree helpers: every leaf carries a *logical axis* spec so the
+distribution layer (``repro.parallel.sharding``) can map params to the mesh
+without the model code knowing about devices (MaxText-style).
+
+A model's ``init`` returns ``(params, specs)`` — two pytrees of identical
+structure; ``specs`` leaves are tuples of logical axis names (or None)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, dtype, scale: float):
+    unit = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (unit * scale).astype(dtype)
+
+
+def make_param(key, shape, axes, dtype=jnp.bfloat16, scale: Optional[float] = None):
+    """Standard fan-in scaled init; returns (array, logical-axes)."""
+    if scale is None:
+        fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+        scale = 1.0 / np.sqrt(fan_in)
+    return truncated_normal_init(key, shape, dtype, scale), axes
+
+
+def zeros_param(shape, axes, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype), axes
+
+
+def ones_param(shape, axes, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype), axes
+
+
+class ParamCollector:
+    """Builds the (params, specs) pair incrementally.
+
+    >>> col = ParamCollector(rng)
+    >>> col.add("wq", (d, n*h), ("embed", "heads"))
+
+    ``abstract=True`` records jax.ShapeDtypeStruct leaves instead of real
+    arrays — the dry-run path (405B params are never materialized)."""
+
+    def __init__(self, key=None, dtype=jnp.bfloat16, abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract or key is None
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+
+    def next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def add(self, name, shape, axes, scale=None, dtype=None, init="normal"):
+        dtype = dtype or self.dtype
+        if self.abstract:
+            arr, ax = jax.ShapeDtypeStruct(tuple(shape), dtype), axes
+        elif init == "normal":
+            arr, ax = make_param(self.next_key(), shape, axes, dtype, scale)
+        elif init == "zeros":
+            arr, ax = zeros_param(shape, axes, dtype)
+        elif init == "ones":
+            arr, ax = ones_param(shape, axes, dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = arr
+        self.specs[name] = ax
+        return arr
+
+    def sub(self, name):
+        child = ParamCollector(None if self.abstract else self.next_key(),
+                               self.dtype, abstract=self.abstract)
+        self.params[name] = child.params
+        self.specs[name] = child.specs
+        return child
+
+    def build(self) -> Tuple[Dict, Dict]:
+        return self.params, self.specs
+
+
+def stack_abstract(per_layer_shape, n_layers: int):
+    """Abstract analogue of stack_layer_params for ShapeDtypeStruct trees."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n_layers,) + tuple(s.shape), s.dtype),
+        per_layer_shape,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def stack_layer_params(per_layer):
+    """Stack a list of identical-structure param trees along a new leading
+    'layers' axis (for lax.scan over blocks)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def stack_layer_specs(spec):
+    """Prepend the 'layers' logical axis to every leaf spec."""
+    return jax.tree_util.tree_map(
+        lambda ax: ("layers",) + tuple(ax),
+        spec,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))

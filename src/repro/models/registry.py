@@ -1,0 +1,21 @@
+"""Model factory: config → model instance (the --arch entry point)."""
+
+from __future__ import annotations
+
+from ..configs.base import ModelConfig
+from .encdec import WhisperEncDec
+from .hybrid import Zamba2LM
+from .ssm import Mamba2LM
+from .transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        return Zamba2LM(cfg)
+    if cfg.family == "encdec":
+        return WhisperEncDec(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

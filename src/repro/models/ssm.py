@@ -1,0 +1,239 @@
+"""Mamba2 (SSD — state-space duality) blocks and model.
+
+Train path uses the chunked dual form (kernels/ref.ssd_chunked_ref, mirrored
+by the Pallas ssd_scan kernel); decode keeps an O(1) recurrent state — which
+is why the SSM archs run the long_500k cell that full attention can't."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ref import ssd_chunked_ref
+from ..parallel.sharding import constrain
+from .layers import cross_entropy_loss, rms_norm
+from .params import ParamCollector, stack_abstract, stack_layer_params, \
+    stack_layer_specs
+
+
+def _conv_channels(cfg):
+    return cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+
+
+def init_mamba_block(col: ParamCollector, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_n_heads
+    conv_ch = _conv_channels(cfg)
+    col.add("ln", (d,), ("embed_no_fsdp",), init="ones")
+    # in_proj → [z (di), conv-in (di + 2GN), dt (H)]
+    col.add("in_proj", (d, 2 * di + 2 * cfg.ssm_n_groups * cfg.ssm_state + h),
+            ("embed", "mlp"))
+    col.add("conv_w", (cfg.ssm_conv_width, conv_ch), (None, "conv_dim"))
+    col.add("conv_b", (conv_ch,), ("conv_dim",), init="zeros")
+    col.add("dt_bias", (h,), (None,), init="zeros")
+    col.add("a_log", (h,), (None,), init="zeros")
+    col.add("d_skip", (h,), (None,), init="zeros")
+    col.add("out_norm", (di,), ("mlp",), init="ones")
+    col.add("out_proj", (di, d), ("mlp", "embed"))
+
+
+def _split_in_proj(cfg, proj):
+    di = cfg.d_inner
+    gn = cfg.ssm_n_groups * cfg.ssm_state
+    z = proj[..., :di]
+    conv_in = proj[..., di:di + di + 2 * gn]
+    dt = proj[..., di + di + 2 * gn:]
+    return z, conv_in, dt
+
+
+def _causal_conv_train(conv_in, w, b):
+    """Depthwise causal conv over seq: conv_in (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(conv_in, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + conv_in.shape[1]] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba_block_train(p, cfg, x):
+    b, s, _ = x.shape
+    h = rms_norm(x, p["ln"])
+    proj = h @ p["in_proj"]
+    z, conv_in, dt = _split_in_proj(cfg, proj)
+    conv_out = _causal_conv_train(conv_in, p["conv_w"], p["conv_b"])
+    di = cfg.d_inner
+    gn = cfg.ssm_n_groups * cfg.ssm_state
+    xs = conv_out[..., :di].reshape(b, s, cfg.ssm_n_heads, cfg.ssm_head_dim)
+    bmat = conv_out[..., di:di + gn].reshape(b, s, cfg.ssm_n_groups,
+                                             cfg.ssm_state)
+    cmat = conv_out[..., di + gn:].reshape(b, s, cfg.ssm_n_groups,
+                                           cfg.ssm_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, _ = ssd_chunked_ref(xs, dt, a, bmat, cmat, chunk=cfg.ssm_chunk,
+                           d_skip=p["d_skip"])
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    out = y @ p["out_proj"]
+    return constrain(x + out, "batch", "seq", "act_embed")
+
+
+def mamba_block_decode(p, cfg, x, ssm_state, conv_state):
+    """x (B,1,D); ssm_state (B,H,P,N) fp32; conv_state (B,W-1,C)."""
+    bsz = x.shape[0]
+    h = rms_norm(x, p["ln"])
+    proj = (h @ p["in_proj"])[:, 0]                      # (B, ·)
+    z, conv_in, dt = _split_in_proj(cfg, proj)
+    # causal conv with cached history
+    window = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv_state = window[:, 1:]
+    di = cfg.d_inner
+    gn = cfg.ssm_n_groups * cfg.ssm_state
+    hg = cfg.ssm_n_heads // cfg.ssm_n_groups
+    xs = conv_out[..., :di].reshape(bsz, cfg.ssm_n_heads, cfg.ssm_head_dim)
+    bmat = jnp.repeat(conv_out[..., di:di + gn].reshape(
+        bsz, cfg.ssm_n_groups, cfg.ssm_state), hg, axis=1)   # (B,H,N)
+    cmat = jnp.repeat(conv_out[..., di + gn:].reshape(
+        bsz, cfg.ssm_n_groups, cfg.ssm_state), hg, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None, :])                            # (B,H)
+    xf = xs.astype(jnp.float32)
+    new_state = ssm_state * da[..., None, None] + \
+        (dt[..., None, None] * xf[..., None]) * bmat[:, :, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cmat.astype(jnp.float32))
+    y = y + xf * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), p["out_norm"])
+    out = y @ p["out_proj"]
+    return x + out, new_state, new_conv_state
+
+
+class Mamba2LM:
+    """Attention-free SSD language model (mamba2-1.3b)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def _build(self, col: ParamCollector):
+        cfg = self.cfg
+        col.add("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+        col.add("final_norm", (cfg.d_model,), ("embed_no_fsdp",), init="ones")
+        col.add("lm_head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        per_layer = []
+        n = cfg.n_layers if not col.abstract else 1
+        for _ in range(n):
+            sub = ParamCollector(None if col.abstract else col.next_key(),
+                                 col.dtype, abstract=col.abstract)
+            init_mamba_block(sub, cfg)
+            per_layer.append(sub)
+        if col.abstract:
+            col.params["blocks"] = stack_abstract(per_layer[0].params,
+                                                  cfg.n_layers)
+        else:
+            col.params["blocks"] = stack_layer_params(
+                [s.params for s in per_layer])
+        col.specs["blocks"] = stack_layer_specs(per_layer[0].specs)
+
+    def init(self, rng):
+        col = ParamCollector(rng, dtype=getattr(jnp, self.cfg.dtype))
+        self._build(col)
+        return col.build()
+
+    def abstract_params(self):
+        col = ParamCollector(abstract=True,
+                             dtype=getattr(jnp, self.cfg.dtype))
+        self._build(col)
+        return col.build()
+
+    def logits_fn(self, params, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = constrain(x, "batch", "seq", "act_embed")
+
+        def body(h, layer_params):
+            return mamba_block_train(layer_params, cfg, h), None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        else:
+            for i in range(cfg.n_layers):
+                layer = jax.tree_util.tree_map(lambda p: p[i],
+                                               params["blocks"])
+                x, _ = body(x, layer)
+        x = rms_norm(x, params["final_norm"])
+        logits = x @ params["lm_head"]
+        logits = constrain(logits, "batch", "seq", "act_vocab")
+        return logits, batch["tokens"]
+
+    def loss_fn(self, params, batch):
+        logits, labels = self.logits_fn(params, batch)
+        shifted = jnp.where(
+            jnp.arange(labels.shape[1])[None, :] < labels.shape[1] - 1,
+            jnp.roll(labels, -1, axis=1), -1)
+        loss, _ = cross_entropy_loss(logits, shifted)
+        return loss
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        shapes = {
+            "ssm": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_n_heads,
+                 cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch_size, cfg.ssm_conv_width - 1,
+                 _conv_channels(cfg)), getattr(jnp, cfg.dtype)),
+        }
+        specs = {
+            # heads sharded over 'model': keeps the recurrent state co-located
+            # with the TP-sharded inner activations (§Perf H2: unsharded-head
+            # state cost an 800 MB/step reshard at decode)
+            "ssm": ("layers", "batch", "act_heads", None, None),
+            "conv": ("layers", "batch", None, "conv_dim"),
+        }
+        return shapes, specs
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = constrain(x, "batch", None, "act_embed")
+
+        def body(h, xs):
+            layer_params, ssm_state, conv_state = xs
+            h, s2, c2 = mamba_block_decode(layer_params, cfg, h,
+                                           ssm_state, conv_state)
+            return h, (s2, c2.astype(getattr(jnp, cfg.dtype)))
+
+        if cfg.scan_layers:
+            x, (ssm2, conv2) = jax.lax.scan(
+                body, x, (params["blocks"], cache["ssm"], cache["conv"]))
+        else:
+            ssm2, conv2 = cache["ssm"], cache["conv"]
+            for i in range(cfg.n_layers):
+                layer = jax.tree_util.tree_map(lambda p: p[i],
+                                               params["blocks"])
+                x, (s2, c2) = body(x, (layer, cache["ssm"][i],
+                                       cache["conv"][i]))
+                ssm2 = ssm2.at[i].set(s2)
+                conv2 = conv2.at[i].set(c2)
+        x = rms_norm(x, params["final_norm"])
+        logits = x[:, 0] @ params["lm_head"]
+        logits = constrain(logits, "batch", "act_vocab")
+        return logits, {"ssm": ssm2, "conv": conv2}
+
+    def input_specs(self, shape, dtype=jnp.int32):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": jax.ShapeDtypeStruct((b, s), dtype)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), dtype),
+                "cache_len": jax.ShapeDtypeStruct((b,), dtype)}
+
+    def input_axes(self, shape):
+        if shape.kind in ("train", "prefill"):
+            return {"tokens": ("batch", "seq")}
+        return {"tokens": ("batch", None), "cache_len": ("batch",)}

@@ -1,0 +1,395 @@
+"""Unified decoder-only LM covering the dense / moe / mla / vlm families.
+
+Layers are stacked and driven by ``jax.lax.scan`` (small HLO, fast compiles
+even at 126 layers); activation checkpointing wraps the scanned block per the
+config's remat policy.  Attention is blockwise (no O(S²) buffer).  The decode
+path updates a (L, B, S, …) KV cache carried through the scan as scan-inputs/
+outputs."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .layers import (
+    apply_rope,
+    blockwise_attention,
+    cross_entropy_loss,
+    decode_attention,
+    mrope_angles,
+    rms_norm,
+    rope_angles,
+    update_kv_cache,
+)
+from .mla import init_mla, mla_attention_decode, mla_attention_train
+from .moe import apply_moe_ffn, init_moe_ffn
+from .params import ParamCollector, stack_layer_params, stack_layer_specs
+
+
+# ------------------------------------------------------------ block params
+
+
+def init_attention(col: ParamCollector, cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    col.add("wq", (d, h * hd), ("embed", "heads"))
+    col.add("wk", (d, kv * hd), ("embed", "kv_heads"))
+    col.add("wv", (d, kv * hd), ("embed", "kv_heads"))
+    col.add("wo", (h * hd, d), ("heads", "embed"))
+    if cfg.qk_norm:
+        col.add("q_norm", (hd,), ("head_dim",), init="ones")
+        col.add("k_norm", (hd,), ("head_dim",), init="ones")
+
+
+def init_block(col: ParamCollector, cfg, layer_kind: str):
+    """layer_kind: dense | moe | mla_dense | mla_moe."""
+    d = cfg.d_model
+    col.add("ln1", (d,), ("embed_no_fsdp",), init="ones")
+    col.add("ln2", (d,), ("embed_no_fsdp",), init="ones")
+    attn = col.sub("attn")
+    if layer_kind.startswith("mla"):
+        init_mla(attn, cfg)
+    else:
+        init_attention(attn, cfg)
+    ffn = col.sub("ffn")
+    if layer_kind.endswith("moe"):
+        init_moe_ffn(ffn, cfg, cfg.expert_d_ff)
+    else:
+        ffn.add("wi_gate", (d, cfg.d_ff), ("embed", "mlp"))
+        ffn.add("wi_up", (d, cfg.d_ff), ("embed", "mlp"))
+        ffn.add("wo", (cfg.d_ff, d), ("mlp", "embed"))
+
+
+# ------------------------------------------------------------ block apply
+
+
+def _qkv(p, cfg, x):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def attention_train(p, cfg, x, angles):
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    q = constrain(q, "batch", "seq", "act_heads", None)
+    out = blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attention_decode(p, cfg, x, k_cache, v_cache, cache_len, angles):
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    k_cache, v_cache = update_kv_cache(k_cache, v_cache, k, v, cache_len - 1)
+    out = decode_attention(q[:, 0], k_cache, v_cache, cache_len)
+    return out.reshape(b, 1, -1) @ p["wo"], k_cache, v_cache
+
+
+def ffn_apply(p, cfg, x, layer_kind: str):
+    if layer_kind.endswith("moe"):
+        return apply_moe_ffn(p, cfg, x)
+    h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    h = constrain(h, "batch", "seq", "act_mlp")
+    return h @ p["wo"]
+
+
+def block_train(p, cfg, x, angles, layer_kind: str):
+    h = rms_norm(x, p["ln1"])
+    if layer_kind.startswith("mla"):
+        attn_out, _ = mla_attention_train(p["attn"], cfg, h, angles,
+                                          chunk=cfg.attn_chunk)
+    else:
+        attn_out = attention_train(p["attn"], cfg, h, angles)
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"])
+    x = x + ffn_apply(p["ffn"], cfg, h, layer_kind)
+    return constrain(x, "batch", "seq", "act_embed")
+
+
+def block_decode(p, cfg, x, cache_slice, cache_len, angles, layer_kind: str):
+    h = rms_norm(x, p["ln1"])
+    if layer_kind.startswith("mla"):
+        out, ckv, krope = mla_attention_decode(
+            p["attn"], cfg, h, cache_slice["c_kv"], cache_slice["k_rope"],
+            cache_len, angles)
+        new_cache = {"c_kv": ckv, "k_rope": krope}
+    else:
+        out, kc, vc = attention_decode(
+            p["attn"], cfg, h, cache_slice["k"], cache_slice["v"],
+            cache_len, angles)
+        new_cache = {"k": kc, "v": vc}
+    x = x + out
+    h = rms_norm(x, p["ln2"])
+    x = x + ffn_apply(p["ffn"], cfg, h, layer_kind)
+    return x, new_cache
+
+
+# ------------------------------------------------------------------ model
+
+
+class DecoderLM:
+    """dense / moe / mla+moe / vlm decoder LM."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.n_tail = cfg.n_layers - cfg.first_dense_layers
+        self.tail_kind = self._layer_kinds()[-1]
+
+    # ------------------------------------------------------------- params
+    def _layer_kinds(self):
+        cfg = self.cfg
+        kinds = []
+        for i in range(cfg.n_layers):
+            moe = cfg.n_experts > 0 and i >= cfg.first_dense_layers
+            mla = cfg.use_mla
+            kinds.append(("mla_" if mla else "") + ("moe" if moe else "dense"))
+        return kinds
+
+    def _build(self, col: ParamCollector):
+        cfg = self.cfg
+        col.add("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+        if cfg.family == "vlm":
+            col.add("vision_proj", (cfg.vision_embed_dim, cfg.d_model),
+                    ("embed_no_fsdp", "embed"))
+        col.add("final_norm", (cfg.d_model,), ("embed_no_fsdp",), init="ones")
+        col.add("lm_head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+
+        kinds = self._layer_kinds()
+        # head (unscanned) layers: the first_dense_layers prefix
+        n_head = self.cfg.first_dense_layers
+        for i in range(n_head):
+            init_block(col.sub(f"head_block_{i}"), cfg, kinds[i])
+        # scanned tail: identical kind per layer
+        assert len(set(kinds[n_head:])) == 1, kinds
+        per_layer = []
+        for _ in range(self.n_tail if not col.abstract else 1):
+            sub = ParamCollector(None if col.abstract else col.next_key(),
+                                 col.dtype, abstract=col.abstract)
+            init_block(sub, cfg, self.tail_kind)
+            per_layer.append(sub)
+        if col.abstract:
+            from .params import stack_abstract
+            col.params["blocks"] = stack_abstract(per_layer[0].params,
+                                                  self.n_tail)
+        else:
+            col.params["blocks"] = stack_layer_params(
+                [s.params for s in per_layer])
+        col.specs["blocks"] = stack_layer_specs(per_layer[0].specs)
+
+    def init(self, rng):
+        col = ParamCollector(rng, dtype=getattr(jnp, self.cfg.dtype))
+        self._build(col)
+        return col.build()
+
+    def abstract_params(self):
+        col = ParamCollector(abstract=True,
+                             dtype=getattr(jnp, self.cfg.dtype))
+        self._build(col)
+        return col.build()
+
+    # -------------------------------------------------------------- embed
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            text = jnp.take(params["embed"], batch["tokens"], axis=0)
+            vis = batch["patch_embeds"].astype(text.dtype) @ params["vision_proj"]
+            x = jnp.concatenate([vis, text], axis=1)
+            angles = mrope_angles(batch["positions_thw"], cfg.head_dim,
+                                  cfg.mrope_sections, cfg.rope_theta)
+            s_vis = vis.shape[1]
+            labels = jnp.concatenate(
+                [jnp.full((text.shape[0], s_vis), -1, jnp.int32),
+                 batch["tokens"]], axis=1)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            positions = jnp.arange(x.shape[1])[None, :]
+            if cfg.use_mla:
+                angles = positions  # MLA applies its own decoupled rope
+            else:
+                angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+            labels = batch["tokens"]
+        return constrain(x, "batch", "seq", "act_embed"), angles, labels
+
+    # -------------------------------------------------------------- train
+    def logits_fn(self, params, batch):
+        """Full-sequence forward → (logits (B,S,V), labels)."""
+        cfg = self.cfg
+        x, angles, labels = self._embed_inputs(params, batch)
+
+        for i in range(cfg.first_dense_layers):
+            x = block_train(params[f"head_block_{i}"], cfg, x, angles,
+                            self._layer_kinds()[i])
+
+        def body(h, layer_params):
+            h = block_train(layer_params, cfg, h, angles, self.tail_kind)
+            return h, None
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        else:  # unrolled: full-fidelity HLO cost analysis (dry-run)
+            for i in range(self.n_tail):
+                layer = jax.tree_util.tree_map(lambda p: p[i],
+                                               params["blocks"])
+                x, _ = body(x, layer)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = x @ params["lm_head"]
+        logits = constrain(logits, "batch", "seq", "act_vocab")
+        return logits, labels
+
+    def loss_fn(self, params, batch):
+        logits, labels = self.logits_fn(params, batch)
+        shifted = jnp.where(
+            jnp.arange(labels.shape[1])[None, :] < labels.shape[1] - 1,
+            jnp.roll(labels, -1, axis=1), -1)
+        loss, _ = cross_entropy_loss(logits, shifted)
+        return loss
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch_size: int, max_len: int):
+        """Returns (cache shapes via zeros-builder fn, logical specs)."""
+        cfg = self.cfg
+        if cfg.use_mla:
+            shapes = {
+                "c_kv": ((self.n_tail, batch_size, max_len, cfg.kv_lora_rank),
+                         ("layers", "batch", "decode_seq", "kv_lora")),
+                "k_rope": ((self.n_tail, batch_size, max_len,
+                            cfg.rope_head_dim),
+                           ("layers", "batch", "decode_seq", None)),
+            }
+            head_shapes = {
+                "c_kv": ((cfg.first_dense_layers, batch_size, max_len,
+                          cfg.kv_lora_rank),
+                         ("layers", "batch", "decode_seq", "kv_lora")),
+                "k_rope": ((cfg.first_dense_layers, batch_size, max_len,
+                            cfg.rope_head_dim),
+                           ("layers", "batch", "decode_seq", None)),
+            } if cfg.first_dense_layers else None
+        else:
+            kv_shape = (self.cfg.n_layers - self.cfg.first_dense_layers,
+                        batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+            axes = ("layers", "batch", "decode_seq", "act_kv_heads",
+                    "head_dim")
+            shapes = {"k": (kv_shape, axes), "v": (kv_shape, axes)}
+            head_shapes = None
+            if cfg.first_dense_layers:
+                hshape = (cfg.first_dense_layers,) + kv_shape[1:]
+                head_shapes = {"k": (hshape, axes), "v": (hshape, axes)}
+        out_shapes, out_specs = {}, {}
+        for k, (sh, ax) in shapes.items():
+            out_shapes[k] = jax.ShapeDtypeStruct(sh, getattr(jnp, cfg.dtype))
+            out_specs[k] = ax
+        if head_shapes:
+            for k, (sh, ax) in head_shapes.items():
+                out_shapes["head_" + k] = jax.ShapeDtypeStruct(sh, getattr(jnp, cfg.dtype))
+                out_specs["head_" + k] = ax
+        return out_shapes, out_specs
+
+    def decode_step(self, params, cache, batch):
+        """One token for every sequence. batch: tokens (B,1), cache_len (B,)
+        (+ positions_thw (B,1,3) for vlm).  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        cache_len = batch["cache_len"]
+        if cfg.family == "vlm":
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            angles = mrope_angles(batch["positions_thw"], cfg.head_dim,
+                                  cfg.mrope_sections, cfg.rope_theta)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            positions = (cache_len - 1)[:, None]
+            if cfg.use_mla:
+                angles = positions
+            else:
+                angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        x = constrain(x, "batch", None, "act_embed")
+
+        new_cache = dict(cache)
+        head_keys = [k[len("head_"):] for k in cache if k.startswith("head_")]
+        for i in range(cfg.first_dense_layers):
+            sl = {k: new_cache["head_" + k][i] for k in head_keys}
+            x, upd = block_decode(params[f"head_block_{i}"], cfg, x, sl,
+                                  cache_len, angles, self._layer_kinds()[i])
+            for k, v in upd.items():
+                new_cache["head_" + k] = new_cache["head_" + k].at[i].set(v)
+
+        tail_cache = {k: v for k, v in cache.items()
+                      if not k.startswith("head_")}
+
+        def body(h, xs):
+            layer_params, cache_slice = xs
+            h, upd = block_decode(layer_params, cfg, h, cache_slice,
+                                  cache_len, angles, self.tail_kind)
+            return h, upd
+
+        if cfg.scan_layers:
+            x, updated = jax.lax.scan(body, x, (params["blocks"], tail_cache))
+            for k, v in updated.items():
+                new_cache[k] = v
+        else:
+            for i in range(self.n_tail):
+                layer = jax.tree_util.tree_map(lambda p: p[i],
+                                               params["blocks"])
+                sl = {k: v[i] for k, v in tail_cache.items()}
+                x, upd = block_decode(layer, cfg, x, sl, cache_len, angles,
+                                      self.tail_kind)
+                for k, v in upd.items():
+                    new_cache[k] = new_cache[k].at[i].set(v)
+
+        x = rms_norm(x, params["final_norm"])
+        logits = x[:, 0] @ params["lm_head"]
+        logits = constrain(logits, "batch", "act_vocab")
+        return logits, new_cache
+
+    # --------------------------------------------------------------- I/O
+    def input_specs(self, shape, dtype=jnp.int32):
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                s_vis = int(s * cfg.vision_frac)
+                s_text = s - s_vis
+                return {
+                    "tokens": jax.ShapeDtypeStruct((b, s_text), dtype),
+                    "patch_embeds": jax.ShapeDtypeStruct(
+                        (b, s_vis, cfg.vision_embed_dim), getattr(jnp, cfg.dtype)),
+                    "positions_thw": jax.ShapeDtypeStruct((b, s, 3), dtype),
+                }
+            return {"tokens": jax.ShapeDtypeStruct((b, s), dtype)}
+        # decode: one new token against a KV cache of length s
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), dtype),
+            "cache_len": jax.ShapeDtypeStruct((b,), dtype),
+        }
+        if cfg.family == "vlm":
+            out["positions_thw"] = jax.ShapeDtypeStruct((b, 1, 3), dtype)
+        return out
+
+    def input_axes(self, shape):
+        cfg = self.cfg
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                return {"tokens": ("batch", "seq"),
+                        "patch_embeds": ("batch", "seq", None),
+                        "positions_thw": ("batch", "seq", None)}
+            return {"tokens": ("batch", "seq")}
+        out = {"tokens": ("batch", None), "cache_len": ("batch",)}
+        if cfg.family == "vlm":
+            out["positions_thw"] = ("batch", None, None)
+        return out

@@ -1,0 +1,96 @@
+"""GPipe-style pipeline parallelism over the 'pod' axis.
+
+For cross-pod scaling where DCI bandwidth makes FSDP/TP impractical, the
+layer stack is split into ``n_stages`` contiguous stages (one per pod) and
+microbatches stream through with ``jax.lax.ppermute`` boundary transfers
+inside ``shard_map``.  Schedule: GPipe (fill-drain); bubble fraction
+(S-1)/(M+S-1) — with the assignment's 2 pods and ≥8 microbatches ≤ 11 %.
+
+This is an *optional* alternative to the default hierarchical-DP pod axis
+(EXPERIMENTS.md §Perf discusses when each wins); exposed as a building
+block + reference wiring for a stacked-layer forward."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def split_stages(stacked_params, n_stages: int):
+    """Split a stacked (L, ...) param tree into (S, L/S, ...) — the leading
+    stage axis is what shard_map partitions over 'pod'."""
+    def rs(p):
+        l = p.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return p.reshape(n_stages, l // n_stages, *p.shape[1:])
+    return jax.tree_util.tree_map(rs, stacked_params)
+
+
+def gpipe_forward(block_fn: Callable, mesh: Mesh, *, n_microbatches: int,
+                  stage_axis: str = "pod"):
+    """Returns fn(stage_params, x) running a GPipe forward inside shard_map.
+
+    ``block_fn(layer_params, h) -> h`` is the per-layer body; stage_params
+    leaves are (S, L/S, ...) (see split_stages) and x is (M, mb, S, D) —
+    microbatched activations, fully replicated entering the shard_map.
+    """
+    n_stages = mesh.shape[stage_axis]
+
+    def stage_body(stage_params, x_mb):
+        """Runs this stage's layers over one microbatch."""
+        def layer(h, lp):
+            return block_fn(lp, h), None
+        out, _ = jax.lax.scan(layer, x_mb, stage_params)
+        return out
+
+    def pipelined(stage_params, x):
+        # inside shard_map: stage_params have the local stage's layers
+        # (leading singleton stage dim), x is the full microbatch stack
+        stage_params = jax.tree_util.tree_map(lambda p: p[0], stage_params)
+        stage_id = jax.lax.axis_index(stage_axis)
+        m = x.shape[0]
+        n_ticks = m + n_stages - 1
+        buf = jnp.zeros_like(x[0])
+        outputs = jnp.zeros_like(x)
+
+        def tick(carry, t):
+            buf, outputs = carry
+            # stage 0 ingests microbatch t (when valid); others use the
+            # value ppermuted from the previous stage last tick
+            mb_idx = jnp.clip(t, 0, m - 1)
+            inject = jnp.where(stage_id == 0,
+                               jnp.ones((), jnp.bool_), False)
+            h_in = jnp.where(inject & (t < m), x[mb_idx], buf)
+            h_out = stage_body(stage_params, h_in)
+            # forward the activation to the next stage
+            nxt = jax.lax.ppermute(
+                h_out, stage_axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            # last stage emits microbatch (t - (S-1)) when in range
+            out_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
+            emit = (stage_id == n_stages - 1) & (t >= n_stages - 1)
+            outputs = jnp.where(
+                emit,
+                outputs.at[out_idx].set(h_out),
+                outputs)
+            return (nxt, outputs), None
+
+        (_, outputs), _ = jax.lax.scan(
+            tick, (buf, outputs), jnp.arange(n_ticks))
+        # only the last stage ever emits; all other stages hold zeros, so a
+        # psum across the stage axis broadcasts the real outputs
+        outputs = jax.lax.psum(outputs, stage_axis)
+        return outputs
+
+    spec_params = jax.tree_util.tree_map(lambda _: P(stage_axis), {})
+    return shard_map(
+        pipelined, mesh=mesh,
+        in_specs=(P(stage_axis), P()),   # params split by stage; x replicated
+        out_specs=P(),
+        check_rep=False,
+    )

@@ -1,0 +1,174 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates params and activations with *logical* axis names
+("embed", "heads", "mlp", "batch", …).  A rule table maps logical names to
+mesh axes.  ``resolve`` drops a mesh axis when the dimension is not divisible
+by the mesh-axis size (replicate-fallback) — recorded so the roofline report
+can show where TP/FSDP could not apply.
+
+The rule table is the primary hillclimbing surface for §Perf: alternative
+sharding schemes are just alternative rule tables (see PRESETS).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# Default logical→mesh rules.  ('pod', 'data') both act as the DP/FSDP axes;
+# 'model' is the TP/EP/SP axis.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # --- weights ---
+    "vocab": "model",            # embedding/output vocab dim (TP)
+    "embed": ("data",),          # FSDP: shard d_model dim of weights over DP
+    "embed_no_fsdp": None,
+    "heads": "model",            # attention heads (TP)
+    "kv_heads": "model",         # GQA KV heads (TP; falls back if indivisible)
+    "head_dim": None,
+    "mlp": "model",              # FFN hidden (TP)
+    "experts": "model",          # MoE expert dim (EP)
+    "expert_mlp": None,          # per-expert hidden (kept local under EP)
+    "kv_lora": None,             # MLA compressed dim (small; replicated)
+    "q_lora": None,
+    "ssm_state": None,
+    "conv_dim": "model",
+    "layers": None,              # scan axis — never sharded
+    # --- activations ---
+    "batch": ("pod", "data"),
+    "seq": None,
+    # KV-cache length dim: sequence-parallel by default — this is what makes
+    # e.g. llama3-405b's 2.2 TB decode cache fit (kv_heads=8 cannot split
+    # over model=16, but seq can); preset "kv_tp" flips it for hillclimbing.
+    "decode_seq": "model",
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+}
+
+# Alternative schemes for hillclimbing (§Perf) — deltas over DEFAULT_RULES.
+PRESETS: Dict[str, Dict[str, MeshAxes]] = {
+    "baseline": {},
+    # shard weights' embed over BOTH pod and data (deeper FSDP; less memory,
+    # more all-gather)
+    "fsdp_pod": {"embed": ("pod", "data")},
+    # megatron-pure: no FSDP, pure TP (more memory, fewer collectives)
+    "tp_only": {"embed": None},
+    # TP over KV heads instead of sequence-parallel cache
+    "kv_tp": {"decode_seq": None},
+    # sequence-parallel TP (Korthikanti et al.): activations between TP
+    # regions shard over 'model' along seq — Megatron's 4.3 GB/layer
+    # all-reduces become reduce-scatter+all-gather pairs at half the bytes
+    "sp_act": {"seq": "model"},
+    # expert+data mixed EP (experts over both axes when divisible)
+    "ep_wide": {"experts": ("data", "model")},
+    # inference-replicated weights: no FSDP/TP all-gathers on the decode
+    # path (params are read-only at serve time; small models fit per-chip).
+    # Experts stay EP — MoE weights are the exception that doesn't fit.
+    "serve_replicated": {
+        "vocab": None, "embed": None, "heads": None, "kv_heads": None,
+        "mlp": None, "conv_dim": None, "kv_lora": None, "q_lora": None,
+        "act_heads": None, "act_kv_heads": None, "act_mlp": None,
+        "act_vocab": None,
+    },
+}
+
+_local = threading.local()
+
+
+def _current() -> Tuple[Optional[Mesh], Dict[str, MeshAxes]]:
+    return (getattr(_local, "mesh", None),
+            getattr(_local, "rules", DEFAULT_RULES))
+
+
+@contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None,
+               preset: str = "baseline"):
+    """Activate a mesh + logical rule table for model tracing."""
+    table = dict(DEFAULT_RULES)
+    table.update(PRESETS.get(preset, {}))
+    if rules:
+        table.update(rules)
+    prev = (getattr(_local, "mesh", None), getattr(_local, "rules", None))
+    _local.mesh, _local.rules = mesh, table
+    try:
+        yield table
+    finally:
+        _local.mesh, _local.rules = prev
+
+
+def resolve(logical_axes: Sequence[Optional[str]],
+            shape: Optional[Sequence[int]] = None,
+            mesh: Optional[Mesh] = None,
+            rules: Optional[Dict[str, MeshAxes]] = None) -> P:
+    """Logical axes → PartitionSpec, dropping indivisible mesh axes."""
+    cmesh, crules = _current()
+    mesh = mesh or cmesh
+    rules = rules or crules
+    parts = []
+    used = set()
+    for i, name in enumerate(logical_axes):
+        entry: MeshAxes = rules.get(name) if name else None
+        if entry is None:
+            parts.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        # drop axes not present in the mesh or already used or indivisible
+        good = []
+        size = 1
+        for a in axes:
+            if mesh is None or a not in mesh.shape or a in used:
+                continue
+            size *= mesh.shape[a]
+            good.append(a)
+        if shape is not None and good:
+            total = 1
+            for a in good:
+                total *= mesh.shape[a]
+            if shape[i] % total != 0:
+                # replicate-fallback (recorded by callers if they care)
+                good = []
+        for a in good:
+            used.add(a)
+        parts.append(tuple(good) if len(good) > 1 else (good[0] if good else None))
+    return P(*parts)
+
+
+def constrain(x, *logical_axes):
+    """Sharding-constraint an activation by logical axis names (no-op when no
+    mesh is active — keeps model code runnable on a single CPU device)."""
+    mesh, rules = _current()
+    if mesh is None:
+        return x
+    spec = resolve(logical_axes, shape=x.shape, mesh=mesh, rules=rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding(specs, mesh: Optional[Mesh] = None,
+                   rules: Optional[Dict[str, MeshAxes]] = None,
+                   shapes=None):
+    """Map a spec tree (tuples of logical names) to NamedSharding tree.
+
+    ``shapes``: matching tree of jax.ShapeDtypeStruct (for divisibility
+    fallback); optional."""
+    cmesh, crules = _current()
+    mesh = mesh or cmesh
+    rules = rules or crules
+    is_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+
+    if shapes is None:
+        return jax.tree_util.tree_map(
+            lambda ax: NamedSharding(mesh, resolve(ax, None, mesh, rules)),
+            specs, is_leaf=is_leaf)
+    return jax.tree_util.tree_map(
+        lambda ax, sh: NamedSharding(
+            mesh, resolve(ax, sh.shape, mesh, rules)),
+        specs, shapes, is_leaf=is_leaf)

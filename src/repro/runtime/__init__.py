@@ -1,0 +1,5 @@
+"""SMR-managed device-resource control plane (DESIGN.md §2)."""
+from .block_pool import BlockPool, OutOfPagesError, PageNode
+from .prefix_cache import PrefixCache
+
+__all__ = ["BlockPool", "PageNode", "OutOfPagesError", "PrefixCache"]

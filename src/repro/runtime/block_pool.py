@@ -1,0 +1,140 @@
+"""SMR-managed KV page pool — the paper's technique as a serving feature.
+
+Pages of the paged KV cache are represented by :class:`PageNode`s whose
+lifecycle is governed by a pluggable SMR scheme (EBR/HP/HE/IBR/Hyaline-1S):
+
+* a page is *retired* when its owning sequence completes (and it is not
+  pinned by the prefix cache);
+* the page id returns to the free list only when no concurrent scheduler /
+  worker thread still holds a protected reference — the exact guarantee SCOT
+  traversals need when they walk prefix-cache entries that reference pages.
+
+Robustness (paper property A) translates directly: with HP/HE/IBR/HLN, a
+*stalled* worker thread can only pin O(K) pages — the pool cannot leak; with
+EBR a stalled worker pins every page retired after its stall
+(tests/test_block_pool.py demonstrates both).
+
+PageNodes are recycled through :class:`Recycler` (same object identity), so
+the ABA scenario — a page freed and re-allocated to a different sequence
+while a stale reference exists — is physically exercisable, and prevented by
+the SMR protections.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, List, Optional
+
+from ..core.atomics import AtomicInt, Recycler, SmrNode
+from ..core.smr.base import SmrScheme
+
+
+class PageNode(SmrNode):
+    """A physical KV page.  ``page_id`` indexes the device-side page pool
+    (k_pages/v_pages arrays consumed by the paged-attention kernel)."""
+
+    __slots__ = ("page_id", "pin_count", "seq_id", "_plock")
+
+    def __init__(self, page_id: int):
+        super().__init__()
+        self.page_id = page_id
+        self.pin_count = AtomicInt(0)   # prefix-cache pins
+        self.seq_id: Optional[int] = None
+        self._plock = threading.Lock()  # linearizes pin/retire decisions
+
+    def reinit(self, page_id: int):
+        self.page_id = page_id
+        self.pin_count = AtomicInt(0)   # fresh object: stale unpins are inert
+        self.seq_id = None
+        self._plock = threading.Lock()
+
+
+class OutOfPagesError(RuntimeError):
+    pass
+
+
+class BlockPool:
+    """Free-list + SMR-deferred reuse of KV pages."""
+
+    def __init__(self, smr: SmrScheme, num_pages: int):
+        self.smr = smr
+        self.num_pages = num_pages
+        self._free_ids: List[int] = list(range(num_pages))
+        self._lock = threading.Lock()
+        self._recycler = Recycler(PageNode)
+        # reclamation path: when the SMR scheme frees a PageNode, its id
+        # returns to the free list and the node object is recycled
+        smr._free_fn = self._reclaim
+        self.n_alloc = AtomicInt(0)
+        self.n_retired = AtomicInt(0)
+        self.n_reclaimed = AtomicInt(0)
+
+    # ------------------------------------------------------------ alloc
+    def alloc(self, seq_id: Optional[int] = None) -> PageNode:
+        with self._lock:
+            if not self._free_ids:
+                raise OutOfPagesError(
+                    f"pool exhausted ({self.num_pages} pages; "
+                    f"{self.smr.not_yet_reclaimed()} awaiting reclamation)")
+            pid = self._free_ids.pop()
+        node = self._recycler.alloc(pid)
+        self.smr.alloc_stamp(node)
+        node.seq_id = seq_id
+        self.n_alloc.fetch_add(1)
+        return node
+
+    def try_alloc(self, seq_id: Optional[int] = None) -> Optional[PageNode]:
+        try:
+            return self.alloc(seq_id)
+        except OutOfPagesError:
+            return None
+
+    # ------------------------------------------------------------ retire
+    def release(self, page: PageNode) -> None:
+        """Sequence done with the page.  If the prefix cache still pins it,
+        the *unpin* path retires instead (exactly-once via _plock)."""
+        self.n_retired.fetch_add(1)
+        with page._plock:
+            page.seq_id = None
+            if page.pin_count.load() == 0 and not page._retired:
+                self.smr.retire(page)
+
+    def pin(self, page: PageNode) -> None:
+        """Unconditional pin.  Callers that may race with eviction must
+        validate the referencing index entry afterwards (SCOT-style: pin,
+        then re-check the entry is still unmarked) and unpin on failure —
+        a transient pin on a recycled page is inert (reinit swaps the
+        counter object)."""
+        page.pin_count.fetch_add(1)
+
+    def unpin(self, page: PageNode) -> None:
+        with page._plock:
+            if page.pin_count.add_fetch(-1) == 0 and page.seq_id is None \
+                    and not page._retired and not page.is_freed:
+                self.smr.retire(page)
+
+    def _reclaim(self, node) -> None:
+        # one SMR instance governs pages AND the index structures that
+        # reference them (prefix-cache list nodes); only pages recycle here
+        if not isinstance(node, PageNode):
+            node.poison()
+            return
+        pid = node.page_id
+        self.n_reclaimed.fetch_add(1)
+        self._recycler.free(node)  # poisons; resurrected on next alloc
+        with self._lock:
+            self._free_ids.append(pid)
+
+    # ------------------------------------------------------------- stats
+    def free_count(self) -> int:
+        with self._lock:
+            return len(self._free_ids)
+
+    def stats(self):
+        return {
+            "free": self.free_count(),
+            "alloc": self.n_alloc.load(),
+            "retired": self.n_retired.load(),
+            "reclaimed": self.n_reclaimed.load(),
+            "awaiting_reclaim": self.smr.not_yet_reclaimed(),
+        }

@@ -1,0 +1,148 @@
+"""Prefix cache on SCOT structures — the paper's data structures on the
+serving hot path.
+
+Every request admission does a *read-only optimistic lookup* (Harris' list
+per bucket, SCOT-validated) of its prompt's page-aligned prefixes; hits
+reuse the cached KV pages directly in the new sequence's block table.  The
+Harris-vs-Harris-Michael throughput gap the paper measures (Fig. 8) is the
+admission-latency gap here; the NM-tree variant indexes prefixes *ordered*
+so eviction can scan ranges.
+
+Entries reference :class:`PageNode` runs; pages are pinned while cached, and
+retired through the same SMR instance when evicted — so a concurrent lookup
+that already protected an entry can safely finish reading its page run even
+as the eviction proceeds (no page is recycled under it)."""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Sequence, Tuple
+
+from ..core.atomics import AtomicInt
+from ..core.smr.base import SmrScheme
+from ..core.structures.harris_list import HarrisList
+from ..core.structures.hm_list import HarrisMichaelList
+from .block_pool import BlockPool, PageNode
+
+
+def _prefix_key(tokens: Sequence[int]) -> int:
+    """Stable 60-bit hash of a token prefix."""
+    h = 1469598103934665603
+    for t in tokens:
+        h = ((h ^ (int(t) + 1)) * 1099511628211) & ((1 << 60) - 1)
+    return h
+
+
+class PrefixCache:
+    """Bucketed SCOT lists mapping prefix-hash → (pages, n_tokens)."""
+
+    def __init__(self, smr: SmrScheme, pool: BlockPool, page_size: int,
+                 num_buckets: int = 64, optimistic: bool = True,
+                 max_entries: int = 4096):
+        self.smr = smr
+        self.pool = pool
+        self.page_size = page_size
+        self.num_buckets = num_buckets
+        self.max_entries = max_entries
+        mk = HarrisList if optimistic else HarrisMichaelList
+        self.buckets = [mk(smr) for _ in range(num_buckets)]
+        self.n_entries = AtomicInt(0)
+        self.n_hits = AtomicInt(0)
+        self.n_misses = AtomicInt(0)
+        self._evict_lock = threading.Lock()
+        self._evict_ring: List[Tuple[int, int]] = []  # (bucket, key) FIFO
+
+    def _bucket(self, key: int):
+        return self.buckets[key % self.num_buckets]
+
+    # ------------------------------------------------------------ lookup
+    def lookup(self, tokens: Sequence[int]) -> Tuple[List[PageNode], int]:
+        """Longest page-aligned cached prefix of ``tokens``.
+
+        Read-only optimistic traversal (zero CAS on hit path).  Returned
+        pages are pinned for the caller (caller must unpin when its block
+        table no longer references them)."""
+        best: Tuple[List[PageNode], int] = ([], 0)
+        n_pages = len(tokens) // self.page_size
+        for np_ in range(n_pages, 0, -1):
+            key = _prefix_key(tokens[: np_ * self.page_size])
+            bucket = self._bucket(key)
+            with self.smr.guard():
+                _, node, found = bucket._find(key, srch=True)
+                if not found:
+                    continue
+                pages = list(node.value)  # entry node protected ⇒ safe read
+                # SCOT-style validation one level up (DESIGN.md §2): pin the
+                # pages, then re-check the entry is still live (unmarked).
+                # If eviction raced us, unpin and treat as a miss — pins on
+                # recycled pages are inert by construction.
+                for p in pages:
+                    self.pool.pin(p)
+                if node.next_ref().get_mark():
+                    for p in pages:
+                        self.pool.unpin(p)
+                    continue
+                best = (pages, np_ * self.page_size)
+                break
+        if best[1]:
+            self.n_hits.fetch_add(1)
+        else:
+            self.n_misses.fetch_add(1)
+        return best
+
+    # ------------------------------------------------------------ insert
+    def insert(self, tokens: Sequence[int], pages: Sequence[PageNode]) -> None:
+        """Cache every page-aligned prefix of a finished sequence (one entry
+        per page boundary, so any future prompt can hit its longest match)."""
+        n_pages = min(len(tokens) // self.page_size, len(pages))
+        for np_ in range(1, n_pages + 1):
+            key = _prefix_key(tokens[: np_ * self.page_size])
+            run = list(pages[:np_])
+            for p in run:
+                self.pool.pin(p)
+            if self._bucket(key).insert(key, run):
+                self.n_entries.fetch_add(1)
+                with self._evict_lock:
+                    self._evict_ring.append((key % self.num_buckets, key))
+            else:
+                for p in run:  # lost the race; someone already cached it
+                    self.pool.unpin(p)
+        self._maybe_evict()
+
+    # ------------------------------------------------------------ evict
+    def _maybe_evict(self) -> None:
+        while self.n_entries.load() > self.max_entries:
+            if not self.evict_oldest(1):
+                return
+
+    def evict_oldest(self, n: int = 1) -> int:
+        """FIFO-evict up to n entries (pool-pressure path); returns count."""
+        done = 0
+        for _ in range(n):
+            with self._evict_lock:
+                if not self._evict_ring:
+                    break
+                _, key = self._evict_ring.pop(0)
+            if self.evict(key):
+                done += 1
+        return done
+
+    def evict(self, key: int) -> bool:
+        bucket = self._bucket(key)
+        # read the entry's value under protection, then delete
+        with self.smr.guard():
+            _, node, found = bucket._find(key, srch=True)
+            pages = list(node.value) if found else []
+        if bucket.delete(key):
+            self.n_entries.fetch_add(-1)
+            for p in pages:
+                self.pool.unpin(p)
+            return True
+        return False
+
+    def stats(self):
+        return {
+            "entries": self.n_entries.load(),
+            "hits": self.n_hits.load(),
+            "misses": self.n_misses.load(),
+        }

@@ -1,0 +1,4 @@
+"""Paged serving engine (continuous batching over the SMR block pool)."""
+from .engine import PagedServingEngine, Request
+
+__all__ = ["PagedServingEngine", "Request"]

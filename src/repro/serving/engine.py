@@ -1,0 +1,290 @@
+"""Paged serving engine — continuous batching over the SMR-managed pool.
+
+Thread roles (this is where the paper's concurrency actually happens):
+  * client threads: ``submit()`` does the *optimistic prefix-cache lookup*
+    (SCOT Harris-list traversal) and pins any hit pages;
+  * the engine thread: admission, paged prefill, batched paged decode
+    (kernels/ops.paged_attention), page alloc/release;
+  * a janitor thread: evicts prefix entries under pool pressure (retiring
+    entry nodes and unpinning pages through the SMR scheme).
+
+A page freed by the SMR is recycled to another sequence — if any of the
+above threads still held an unprotected reference, decode would read another
+request's KV (the serving-world version of Figure 1's SEGFAULT).  The SMR +
+SCOT discipline prevents exactly that; tests/test_serving.py checks paged
+outputs equal the contiguous-cache reference decode, token for token.
+
+Dense-family models only (engine v1) — the restriction is the usual one for
+paged serving stacks, recorded in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.smr import make_scheme
+from ..kernels import ops
+from ..models.layers import apply_rope, rms_norm, rope_angles
+from ..models.transformer import _qkv
+from ..runtime.block_pool import BlockPool, PageNode
+from ..runtime.prefix_cache import PrefixCache
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    req_id: int = field(default_factory=itertools.count().__next__)
+    out_tokens: List[int] = field(default_factory=list)
+    done: threading.Event = field(default_factory=threading.Event)
+    # filled at submit time (client thread): prefix-cache hit
+    _hit_pages: List[PageNode] = field(default_factory=list)
+    _hit_tokens: int = 0
+
+
+class _Seq:
+    def __init__(self, req: Request, pages: List[PageNode], owned_from: int):
+        self.req = req
+        self.pages = pages              # full block run (shared prefix + owned)
+        self.owned_from = owned_from    # pages[owned_from:] are owned
+        self.tokens = list(req.prompt)
+        self.new_tokens = 0
+
+
+class PagedServingEngine:
+    def __init__(self, model, params, *, smr: str = "IBR",
+                 num_pages: int = 256, page_size: int = 8,
+                 max_batch: int = 4, max_seq_len: int = 256,
+                 prefix_cache_entries: int = 128,
+                 prefix_optimistic: bool = True):
+        cfg = model.cfg
+        assert cfg.family == "dense", "engine v1 serves dense models"
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.max_pages = max_seq_len // page_size
+        self.smr = make_scheme(smr, retire_scan_freq=16, epoch_freq=16)
+        self.pool = BlockPool(self.smr, num_pages)
+        # page 0 is reserved scratch: padded/dummy batch rows write to it
+        with self.pool._lock:
+            self.pool._free_ids.remove(0)
+        self.prefix_cache = PrefixCache(self.smr, self.pool, page_size,
+                                        max_entries=prefix_cache_entries,
+                                        optimistic=prefix_optimistic)
+        L = cfg.n_layers
+        kv = (L, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        self.k_pages = jnp.zeros(kv, getattr(jnp, cfg.dtype))
+        self.v_pages = jnp.zeros(kv, getattr(jnp, cfg.dtype))
+        self._waiting: List[Request] = []
+        self._wlock = threading.Lock()
+        self._active: List[_Seq] = []
+        self._stop = threading.Event()
+        self._decode = jax.jit(self._paged_decode_step)
+        self._prefill = jax.jit(self._paged_prefill)
+        self.steps = 0
+
+    # ---------------------------------------------------------- client API
+    def submit(self, req: Request) -> Request:
+        """Client-thread path: optimistic prefix lookup happens HERE,
+        concurrently with the engine and janitor threads."""
+        pages, n_tok = self.prefix_cache.lookup(req.prompt)
+        # only reuse *strictly shorter than prompt* prefixes (need ≥1 token
+        # to prefill so we have logits for the first generated token)
+        if n_tok >= len(req.prompt):
+            drop = (n_tok - len(req.prompt)) // self.page_size + 1
+            for p in pages[len(pages) - drop:]:
+                self.pool.unpin(p)
+            pages = pages[:len(pages) - drop]
+            n_tok = len(pages) * self.page_size
+        req._hit_pages, req._hit_tokens = pages, n_tok
+        with self._wlock:
+            self._waiting.append(req)
+        return req
+
+    # ------------------------------------------------------------- device fns
+    def _layer_params(self, i):
+        return jax.tree_util.tree_map(lambda p: p[i],
+                                      self.params["blocks"])
+
+    def _paged_prefill(self, params, k_pages, v_pages, tokens, page_ids,
+                       start):
+        """Run the prompt suffix [start:] through the model, writing K/V
+        into the owned pages; returns last-token logits and updated pages.
+
+        tokens: (1, S) the FULL prompt; page_ids: (max_pages,) block run;
+        start: scalar — number of cached tokens (page-aligned)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)   # (1, S, D)
+        s = tokens.shape[1]
+        positions = jnp.arange(s)[None, :]
+        angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        for i in range(cfg.n_layers):
+            p = self._layer_params(i)
+            h = rms_norm(x, p["ln1"])
+            q, k, v = _qkv(p["attn"], cfg, h)
+            q = apply_rope(q, angles)
+            k = apply_rope(k, angles)
+            # causal self-attention over the full prompt (recompute over
+            # cached region too — simple and correct; the cached K/V are
+            # identical by construction)
+            out = ops.flash_attention(q, k, v, causal=True, backend="xla")
+            x = x + out.reshape(1, s, -1) @ p["attn"]["wo"]
+            h = rms_norm(x, p["ln2"])
+            ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
+            x = x + ff @ p["ffn"]["wo"]
+            # scatter K/V of the uncached suffix into pages
+            slot_pos = jnp.arange(s)
+            page_of = page_ids[slot_pos // self.page_size]
+            slot_of = slot_pos % self.page_size
+            write = slot_pos >= start
+            safe_page = jnp.where(write, page_of, 0)
+            kw = jnp.where(write[:, None, None], k[0], k_pages[i, safe_page, slot_of])
+            vw = jnp.where(write[:, None, None], v[0], v_pages[i, safe_page, slot_of])
+            k_pages = k_pages.at[i, safe_page, slot_of].set(
+                kw.astype(k_pages.dtype))
+            v_pages = v_pages.at[i, safe_page, slot_of].set(
+                vw.astype(v_pages.dtype))
+        x = rms_norm(x, params["final_norm"])
+        logits = x[:, -1] @ params["lm_head"]
+        return logits[0], k_pages, v_pages
+
+    def _paged_decode_step(self, params, k_pages, v_pages, block_tables,
+                           ctx_lens, tokens):
+        """One token for every active sequence.  ctx_lens INCLUDE the new
+        token; its K/V is written at position ctx_lens-1."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # (B,1,D)
+        pos = (ctx_lens - 1)[:, None]
+        angles = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+        bidx = jnp.arange(b)
+        page_idx = block_tables[bidx, (ctx_lens - 1) // self.page_size]
+        slot_idx = (ctx_lens - 1) % self.page_size
+        for i in range(cfg.n_layers):
+            p = self._layer_params(i)
+            h = rms_norm(x, p["ln1"])
+            q, k, v = _qkv(p["attn"], cfg, h)
+            q = apply_rope(q, angles)
+            k = apply_rope(k, angles)
+            k_pages = k_pages.at[i, page_idx, slot_idx].set(
+                k[:, 0].astype(k_pages.dtype))
+            v_pages = v_pages.at[i, page_idx, slot_idx].set(
+                v[:, 0].astype(v_pages.dtype))
+            out = ops.paged_attention(q[:, 0], k_pages[i], v_pages[i],
+                                      block_tables, ctx_lens, backend="xla")
+            x = x + out.reshape(b, 1, -1) @ p["attn"]["wo"]
+            h = rms_norm(x, p["ln2"])
+            ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
+            x = x + ff @ p["ffn"]["wo"]
+        x = rms_norm(x, params["final_norm"])
+        logits = x[:, 0] @ params["lm_head"]
+        return logits, k_pages, v_pages
+
+    # ------------------------------------------------------------- engine
+    def _admit(self):
+        while len(self._active) < self.max_batch:
+            with self._wlock:
+                if not self._waiting:
+                    return
+                req = self._waiting.pop(0)
+            n_prompt = len(req.prompt)
+            total = n_prompt + req.max_new_tokens
+            n_pages_needed = -(-total // self.page_size)
+            pages = list(req._hit_pages)
+            owned_from = len(pages)
+            ok = True
+            for _ in range(n_pages_needed - len(pages)):
+                pg = self.pool.try_alloc(req.req_id)
+                if pg is None:
+                    ok = False
+                    break
+                pages.append(pg)
+            if not ok:  # pool pressure: evict + help reclamation, requeue
+                for pg in pages[owned_from:]:
+                    self.pool.release(pg)
+                self.prefix_cache.evict_oldest(4)
+                self.smr.help_reclaim()
+                with self._wlock:
+                    self._waiting.insert(0, req)
+                return
+            seq = _Seq(req, pages, owned_from)
+            page_ids = np.zeros((self.max_pages,), np.int32)
+            for j, pg in enumerate(pages):
+                page_ids[j] = pg.page_id
+            logits, self.k_pages, self.v_pages = self._prefill(
+                self.params, self.k_pages, self.v_pages,
+                jnp.asarray([req.prompt], jnp.int32),
+                jnp.asarray(page_ids), jnp.int32(req._hit_tokens))
+            nxt = int(np.argmax(np.asarray(logits, np.float32)))
+            seq.tokens.append(nxt)
+            seq.req.out_tokens.append(nxt)
+            seq.new_tokens = 1
+            self._active.append(seq)
+
+    def _finish(self, seq: _Seq):
+        # cache this sequence's page-aligned prefix, then release ownership
+        self.prefix_cache.insert(seq.tokens, seq.pages)
+        for pg in seq.pages[seq.owned_from:]:
+            self.pool.release(pg)
+        for pg in seq.pages[:seq.owned_from]:  # drop admission pins
+            self.pool.unpin(pg)
+        seq.req.done.set()
+
+    def step(self) -> bool:
+        """One engine iteration; returns False when idle."""
+        self._admit()
+        if not self._active:
+            return False
+        b = len(self._active)
+        bt = np.zeros((self.max_batch, self.max_pages), np.int32)
+        ctx = np.ones((self.max_batch,), np.int32)  # dummy rows: ctx=1
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for i, seq in enumerate(self._active):
+            for j, pg in enumerate(seq.pages):
+                bt[i, j] = pg.page_id
+            ctx[i] = len(seq.tokens)
+            toks[i, 0] = seq.tokens[-1]
+        logits, self.k_pages, self.v_pages = self._decode(
+            self.params, self.k_pages, self.v_pages,
+            jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(toks[:, 0]))
+        logits = np.asarray(logits, np.float32)
+        done = []
+        for i, seq in enumerate(self._active):
+            nxt = int(np.argmax(logits[i]))
+            seq.tokens.append(nxt)
+            seq.req.out_tokens.append(nxt)
+            seq.new_tokens += 1
+            if seq.new_tokens >= seq.req.max_new_tokens:
+                done.append(seq)
+        for seq in done:
+            self._active.remove(seq)
+            self._finish(seq)
+        self.steps += 1
+        return True
+
+    def run(self, poll_s: float = 0.005):
+        """Engine loop (run in its own thread)."""
+        while not self._stop.is_set():
+            if not self.step():
+                time.sleep(poll_s)
+
+    def stop(self):
+        self._stop.set()
+
+    def stats(self):
+        return {
+            "pool": self.pool.stats(),
+            "prefix_cache": self.prefix_cache.stats(),
+            "steps": self.steps,
+            "active": len(self._active),
+        }

@@ -1,0 +1,134 @@
+"""The training loop: jit'd step (optional microbatch gradient accumulation),
+async checkpointing, failure injection/retry, straggler tracking, elastic
+resume.  Works identically on the CPU smoke configs and (via the same
+sharding specs) on the production mesh."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..data.pipeline import DataPipeline
+from ..models import build_model
+from .fault_tolerance import StragglerWatchdog, TransientFailure, \
+    retrying_step
+from .optimizer import cosine_schedule, make_optimizer
+
+
+@dataclass
+class TrainState:
+    params: dict
+    opt_state: dict
+    step: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg, *, seed: int = 0, global_batch: int = 8,
+                 seq_len: int = 64, microbatches: int = 1,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 50, keep: int = 3,
+                 lr: float = 3e-4, warmup: int = 20, total_steps: int = 1000,
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.optimizer = make_optimizer(
+            cfg.optimizer, schedule=cosine_schedule(lr, warmup, total_steps))
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.microbatches = microbatches
+        assert global_batch % microbatches == 0
+        self.pipeline = DataPipeline(seed, global_batch, seq_len,
+                                     cfg.vocab_size, prefetch=2)
+        self.ckpt = (CheckpointManager(checkpoint_dir, keep=keep)
+                     if checkpoint_dir else None)
+        self.checkpoint_every = checkpoint_every
+        self.watchdog = StragglerWatchdog()
+        self.failure_hook = failure_hook
+        self.losses: List[float] = []
+        self._step_fn = jax.jit(self._make_step())
+
+    # ------------------------------------------------------------ step fn
+    def _make_step(self):
+        model, optimizer = self.model, self.optimizer
+        k = self.microbatches
+
+        def step(params, opt_state, tokens):
+            if k == 1:
+                loss, grads = jax.value_and_grad(model.loss_fn)(
+                    params, {"tokens": tokens})
+            else:
+                mb = tokens.reshape(k, tokens.shape[0] // k, tokens.shape[1])
+
+                def acc_fn(carry, toks):
+                    loss_i, g_i = jax.value_and_grad(model.loss_fn)(
+                        params, {"tokens": toks})
+                    acc_loss, acc_g = carry
+                    return (acc_loss + loss_i,
+                            jax.tree_util.tree_map(jnp.add, acc_g, g_i)), None
+
+                zero_g = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss_sum, grads), _ = jax.lax.scan(
+                    acc_fn, (jnp.zeros((), jnp.float32), zero_g), mb)
+                loss = loss_sum / k
+                grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+            return new_params, new_opt, loss
+
+        return step
+
+    # ------------------------------------------------------------- control
+    def init_state(self) -> TrainState:
+        params, _ = self.model.init(jax.random.PRNGKey(0))
+        return TrainState(params, self.optimizer.init(params), 0)
+
+    def restore_or_init(self) -> TrainState:
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            params, opt_state, manifest = self.ckpt.restore()
+            # np arrays → jax; counts back to int32 scalars
+            state = TrainState(params, opt_state, manifest["step"])
+            self.pipeline.seek(manifest["data_index"])
+            return state
+        return self.init_state()
+
+    def train(self, state: TrainState, num_steps: int) -> TrainState:
+        _, param_specs = self.model.abstract_params()
+        step_once = retrying_step(self._run_one, max_retries=3)
+        target = state.step + num_steps
+        while state.step < target:
+            tokens = next(self.pipeline)
+            t0 = time.perf_counter()
+            state = step_once(state, tokens)
+            self.watchdog.observe(time.perf_counter() - t0)
+            if (self.ckpt is not None and
+                    state.step % self.checkpoint_every == 0):
+                self.ckpt.save(state.step, state.params, state.opt_state,
+                               data_index=self.pipeline.index,
+                               param_specs=param_specs)
+        if self.ckpt is not None:
+            self.ckpt.save(state.step, state.params, state.opt_state,
+                           data_index=self.pipeline.index,
+                           param_specs=param_specs, block=True)
+        return state
+
+    def _run_one(self, state: TrainState, tokens) -> TrainState:
+        if self.failure_hook is not None:
+            self.failure_hook(state.step)   # may raise TransientFailure
+        p, o, loss = self._step_fn(state.params, state.opt_state,
+                                   jnp.asarray(tokens))
+        loss = float(loss)
+        if not np.isfinite(loss):
+            raise TransientFailure(f"non-finite loss at step {state.step}")
+        self.losses.append(loss)
+        return TrainState(p, o, state.step + 1)
+
+    def close(self):
+        self.pipeline.close()
+        if self.ckpt is not None:
+            self.ckpt.wait()

@@ -1,0 +1,202 @@
+"""Optimizers (pure JAX, spec-aware so the dry-run can shard optimizer state).
+
+* AdamW — fp32 m/v (the default for every arch except llama3-405b).
+* Adafactor — factored second moment + bf16 accumulator option: the 405B
+  memory plan (DESIGN.md §4): bf16 params (810 GB) + fp32 Adam m/v would be
+  ≈5.7 TB > a 256×16 GB pod; factored states fit.
+
+Both expose ``abstract_state(param_shapes, param_specs)`` returning
+(state_shapes, state_specs) without allocating — mirroring the models'
+``abstract_params``."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_shape(x):
+    return isinstance(x, jax.ShapeDtypeStruct)
+
+
+def _spec_leaf(x):
+    return isinstance(x, tuple)
+
+
+class AdamW:
+    def __init__(self, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, schedule=None):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.weight_decay = weight_decay
+        self.schedule = schedule
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def abstract_state(self, param_shapes, param_specs):
+        f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)  # noqa
+        shapes = {
+            "m": jax.tree_util.tree_map(f32, param_shapes, is_leaf=_is_shape),
+            "v": jax.tree_util.tree_map(f32, param_shapes, is_leaf=_is_shape),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        specs = {
+            "m": param_specs,
+            "v": param_specs,
+            "count": (),
+        }
+        return shapes, specs
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        lr = self.lr if self.schedule is None else self.schedule(count)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g32
+            v2 = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * step
+            return p2.astype(p.dtype), m2, v2
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                     params)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+
+class Adafactor:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), bf16 option."""
+
+    def __init__(self, lr=1e-3, decay=0.8, eps=1e-30, weight_decay=0.0,
+                 acc_dtype=jnp.bfloat16, schedule=None):
+        self.lr, self.decay, self.eps = lr, decay, eps
+        self.weight_decay = weight_decay
+        self.acc_dtype = acc_dtype
+        self.schedule = schedule
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2
+
+    def init(self, params):
+        def mk(p):
+            if self._factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], self.acc_dtype),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    self.acc_dtype),
+                }
+            return {"v": jnp.zeros(p.shape, self.acc_dtype)}
+        return {
+            "f": jax.tree_util.tree_map(mk, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def abstract_state(self, param_shapes, param_specs):
+        def mk(s):
+            if self._factored(s.shape):
+                return {
+                    "vr": jax.ShapeDtypeStruct(s.shape[:-1], self.acc_dtype),
+                    "vc": jax.ShapeDtypeStruct(s.shape[:-2] + s.shape[-1:],
+                                               self.acc_dtype),
+                }
+            return {"v": jax.ShapeDtypeStruct(s.shape, self.acc_dtype)}
+
+        def mk_spec(ax):
+            if len(ax) >= 2:
+                return {"vr": tuple(ax[:-1]), "vc": tuple(ax[:-2] + ax[-1:])}
+            return {"v": tuple(ax)}
+
+        shapes = {
+            "f": jax.tree_util.tree_map(mk, param_shapes, is_leaf=_is_shape),
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        specs = {
+            "f": jax.tree_util.tree_map(mk_spec, param_specs,
+                                        is_leaf=_spec_leaf),
+            "count": (),
+        }
+        return shapes, specs
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        lr = self.lr if self.schedule is None else self.schedule(count)
+        beta = 1.0 - (count.astype(jnp.float32) + 1.0) ** (-self.decay)
+
+        def upd(g, f, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if self._factored(p.shape):
+                vr = beta * f["vr"].astype(jnp.float32) + \
+                    (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * f["vc"].astype(jnp.float32) + \
+                    (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                    jnp.mean(vr, axis=-1)[..., None, None], self.eps)
+                step = g32 * jax.lax.rsqrt(denom + self.eps)
+                new_f = {"vr": vr.astype(self.acc_dtype),
+                         "vc": vc.astype(self.acc_dtype)}
+            else:
+                v = beta * f["v"].astype(jnp.float32) + (1 - beta) * g2
+                step = g32 * jax.lax.rsqrt(v + self.eps)
+                new_f = {"v": v.astype(self.acc_dtype)}
+            # relative step clipping (Adafactor's update clipping, d=1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+            step = step / jnp.maximum(1.0, rms)
+            p2 = p.astype(jnp.float32) - lr * step
+            if self.weight_decay:
+                p2 = p2 - lr * self.weight_decay * p.astype(jnp.float32)
+            return p2.astype(p.dtype), new_f
+
+        # state["f"] mirrors params but with {"v"} / {"vr","vc"} dicts at the
+        # leaf positions — flatten with an explicit leaf test so the
+        # structures align.
+        def _f_leaf(x):
+            return isinstance(x, dict) and set(x) <= {"v", "vr", "vc"}
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        f_leaves = jax.tree_util.tree_flatten(state["f"], is_leaf=_f_leaf)[0]
+        outs = [upd(g, f, p)
+                for g, f, p in zip(g_leaves, f_leaves, p_leaves)]
+        new_params = jax.tree_util.tree_unflatten(
+            treedef, [o[0] for o in outs])
+        new_f = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return new_params, {"f": new_f, "count": count}
+
+
+def make_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise ValueError(name)
+
+
+def cosine_schedule(base_lr: float, warmup: int = 100, total: int = 10000,
+                    min_frac: float = 0.1):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(c < warmup, warm, cos)
+    return fn

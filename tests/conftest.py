@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS / device-count forcing is deliberately
+NOT set here — smoke tests and benches must see the single real CPU device;
+only launch/dryrun.py forces 512 placeholder devices (system prompt rule)."""
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--soak", action="store_true", default=False,
+        help="run long-duration concurrency soak tests",
+    )
+
+
+@pytest.fixture
+def soak(request):
+    return request.config.getoption("--soak")

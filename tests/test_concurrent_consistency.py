@@ -1,0 +1,99 @@
+"""Concurrent correctness: key-partitioned workers each maintain an exact
+model of their own keys (disjoint partitions ⇒ per-key sequential semantics
+must hold even under full concurrency), and the final structure state equals
+the union of the models."""
+
+import threading
+
+import pytest
+
+from repro.core import make_scheme
+from repro.core.structures.harris_list import HarrisList
+from repro.core.structures.hm_list import HarrisMichaelList
+from repro.core.structures.nm_tree import NMTree
+from repro.core.structures.skiplist import SkipList
+
+STRUCTS = {
+    "HList": lambda smr: HarrisList(smr),
+    "HMList": lambda smr: HarrisMichaelList(smr),
+    "NMTree": lambda smr: NMTree(smr),
+    "SkipList": lambda smr: SkipList(smr, seed=3),
+}
+
+
+@pytest.mark.parametrize("scheme", ["EBR", "HP", "HE", "IBR", "HLN"])
+@pytest.mark.parametrize("structure", sorted(STRUCTS))
+def test_partitioned_consistency(structure, scheme):
+    smr = make_scheme(scheme, retire_scan_freq=8, epoch_freq=8)
+    ds = STRUCTS[structure](smr)
+    n_threads, keys_per, rounds = 4, 16, 150
+    models = [set() for _ in range(n_threads)]
+    errors = []
+
+    def worker(idx):
+        import random
+        r = random.Random(idx * 31 + 7)
+        base = idx * keys_per
+        model = models[idx]
+        try:
+            for _ in range(rounds):
+                k = base + r.randrange(keys_per)
+                op = r.random()
+                if op < 0.4:
+                    got = ds.insert(k)
+                    want = k not in model
+                    model.add(k)
+                elif op < 0.8:
+                    got = ds.delete(k)
+                    want = k in model
+                    model.discard(k)
+                else:
+                    got = ds.search(k)
+                    want = k in model
+                if got is not want:
+                    errors.append((idx, k, got, want))
+                    return
+        except Exception as e:  # noqa: BLE001 — surface to main thread
+            errors.append((idx, repr(e)))
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    assert not errors, errors[:5]
+    expect = sorted(set().union(*models))
+    assert sorted(ds.snapshot()) == expect
+
+
+@pytest.mark.parametrize("scheme", ["HP", "IBR", "HLN"])
+def test_contended_single_key_counters(scheme):
+    """All threads fight over the same tiny key space; totals must balance:
+    inserts_won - deletes_won == final occupancy for every key."""
+    smr = make_scheme(scheme, retire_scan_freq=4, epoch_freq=4)
+    ds = HarrisList(smr)
+    n_threads, rounds, key_range = 4, 300, 4
+    wins = [[0] * key_range for _ in range(n_threads)]  # net per key
+
+    def worker(idx):
+        import random
+        r = random.Random(idx)
+        for _ in range(rounds):
+            k = r.randrange(key_range)
+            if r.random() < 0.5:
+                if ds.insert(k):
+                    wins[idx][k] += 1
+            else:
+                if ds.delete(k):
+                    wins[idx][k] -= 1
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=120)
+    final = set(ds.snapshot())
+    for k in range(key_range):
+        net = sum(wins[i][k] for i in range(n_threads))
+        assert net in (0, 1), (k, net)
+        assert (k in final) == (net == 1), (k, net, final)

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config of
+each family runs one forward/train step on CPU, asserting output shapes and
+no NaNs; plus incremental-decode vs full-forward consistency for the KV/state
+cache paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.configs.base import ShapeSpec
+from repro.models import build_model
+from repro.models.params import count_params
+
+
+def _mk_batch(model, shape, rng):
+    batch = {}
+    for k, s in model.input_specs(shape).items():
+        if s.dtype == jnp.int32:
+            batch[k] = jax.random.randint(rng, s.shape, 0, 200)
+        else:
+            batch[k] = jax.random.normal(rng, s.shape, jnp.float32).astype(
+                s.dtype) * 0.1
+    if "positions_thw" in batch:
+        seqpos = jnp.arange(batch["positions_thw"].shape[1])[None, :, None]
+        batch["positions_thw"] = jnp.broadcast_to(
+            seqpos, batch["positions_thw"].shape).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params, specs = model.init(rng)
+    assert count_params(params) > 0
+
+    batch = _mk_batch(model, ShapeSpec("t", 32, 2, "train"), rng)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss_fn))(params, batch)
+    assert np.isfinite(float(loss))
+    for g in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(g, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params, _ = model.init(rng)
+    cache_shapes, _ = model.init_cache(2, 16)
+    cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in cache_shapes.items()}
+    batch = {"tokens": jnp.ones((2, 1), jnp.int32),
+             "cache_len": jnp.full((2,), 3, jnp.int32)}
+    if cfg.family == "vlm":
+        batch["positions_thw"] = jnp.full((2, 1, 3), 2, jnp.int32)
+    logits, cache2 = jax.jit(model.decode_step)(params, cache, batch)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache must actually change
+    changed = any(
+        not np.array_equal(np.asarray(cache[k], np.float32),
+                           np.asarray(cache2[k], np.float32))
+        for k in cache)
+    assert changed, f"{arch}: decode_step did not update the cache"
+
+
+@pytest.mark.parametrize("arch", [
+    "tinyllama-1.1b", "qwen3-8b", "mamba2-1.3b", "zamba2-1.2b",
+    "deepseek-v2-236b", "olmoe-1b-7b",
+])
+def test_incremental_decode_matches_forward(arch):
+    """Token-by-token decode through the cache must reproduce the full
+    forward logits (the cache paths are exactly consistent).  Run in fp32 so
+    the comparison is numerically sharp (bf16 adds ~0.4% path noise).  MoE
+    archs use the dropless capacity bound (cf = E/k) — with finite capacity,
+    drop patterns legitimately differ between batched and incremental
+    dispatch."""
+    cfg = get_config(arch).reduced().replace(dtype="float32")
+    if cfg.n_experts:
+        cfg = cfg.replace(capacity_factor=cfg.n_experts / cfg.top_k)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params, _ = model.init(rng)
+    B, S = 2, 8
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+
+    full_logits, _ = jax.jit(model.logits_fn)(params, {"tokens": tokens})
+
+    cache_shapes, _ = model.init_cache(B, S)
+    cache = {k: jnp.zeros(s.shape, s.dtype) for k, s in cache_shapes.items()}
+    step = jax.jit(model.decode_step)
+    for t in range(S):
+        batch = {"tokens": tokens[:, t:t + 1],
+                 "cache_len": jnp.full((B,), t + 1, jnp.int32)}
+        logits, cache = step(params, cache, batch)
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            rtol=2e-3, atol=2e-3,
+            err_msg=f"{arch}: decode diverges from forward at t={t}")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_abstract_params(arch):
+    """FULL configs are exercised shape-only (no allocation)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes, specs = model.abstract_params()
+    n = sum(int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(
+        shapes) if hasattr(s, "shape"))
+    assert n > 5e7, f"{arch}: suspiciously few params {n}"  # whisper-base ≈ 77M
+    # spec tree must structurally match the shape tree
+    flat_shapes = jax.tree_util.tree_leaves(
+        shapes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    flat_specs = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_shapes) == len(flat_specs)

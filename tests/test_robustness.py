@@ -1,0 +1,85 @@
+"""Robustness (ERA property A, paper §1/§6): bounded garbage with a stalled
+thread.  EBR is *not* robust — a stalled thread freezes its entry epoch and
+everything retired afterwards leaks.  HP/HE/IBR/Hyaline-1S bound garbage by
+per-pointer/era reservations (Lemma 2)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import make_scheme
+from repro.core.structures.harris_list import HarrisList
+
+
+def _garbage_under_stall(scheme: str, churn_ops: int = 4000) -> int:
+    smr = make_scheme(scheme, retire_scan_freq=8, epoch_freq=8)
+    ds = HarrisList(smr)
+    for k in range(0, 64, 2):
+        ds.insert(k)
+
+    stalled_entered = threading.Event()
+    release = threading.Event()
+
+    def stalled_thread():
+        # begin an operation, take a reservation, then stall "forever"
+        smr.begin_op()
+        smr.protect(ds.head.next_ref(), 0)
+        stalled_entered.set()
+        release.wait(timeout=60)
+        smr.end_op()
+
+    t = threading.Thread(target=stalled_thread, daemon=True)
+    t.start()
+    stalled_entered.wait(timeout=10)
+
+    # churn: every insert+delete retires one node while the thread stalls
+    def churn(idx):
+        for i in range(churn_ops):
+            k = 1000 + (idx * churn_ops + i) % 512
+            ds.insert(k)
+            ds.delete(k)
+
+    ws = [threading.Thread(target=churn, args=(i,)) for i in range(2)]
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    garbage = smr.not_yet_reclaimed()
+    release.set()
+    t.join(timeout=10)
+    return garbage
+
+
+def test_ebr_unbounded_under_stall():
+    small = _garbage_under_stall("EBR", churn_ops=1000)
+    big = _garbage_under_stall("EBR", churn_ops=4000)
+    # garbage grows with churn: the stalled reservation pins everything
+    assert big > small * 2, (small, big)
+    assert big > 4000, f"EBR should leak ~all churn under a stall, got {big}"
+
+
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+def test_robust_schemes_bounded_under_stall(scheme):
+    small = _garbage_under_stall(scheme, churn_ops=1000)
+    big = _garbage_under_stall(scheme, churn_ops=4000)
+    # bounded: garbage must NOT scale with churn (allow generous slack for
+    # amortized scan frequency)
+    assert big < 1500, f"{scheme} garbage {big} looks unbounded"
+    assert big < small + 1200, (small, big)
+
+
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+def test_robust_schemes_reclaim_after_stall_clears(scheme):
+    smr = make_scheme(scheme, retire_scan_freq=4, epoch_freq=4)
+    ds = HarrisList(smr)
+    for k in range(128):
+        ds.insert(k)
+    for k in range(128):
+        ds.delete(k)
+    # drive reclamation
+    for k in range(200, 460):
+        ds.insert(k)
+        ds.delete(k)
+    smr.flush()
+    assert smr.not_yet_reclaimed() < 300

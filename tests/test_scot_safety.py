@@ -1,0 +1,120 @@
+"""The paper's central safety claim, as executable tests.
+
+* Figure 1: Harris' list traversed optimistically under HP **without** SCOT
+  dereferences reclaimed memory (the shim raises UseAfterFreeError where real
+  hardware SEGFAULTs).  This is the pre-paper bug.
+* With SCOT (Figure 4 + Theorem 1) the same workload never touches reclaimed
+  memory.
+* Control: EBR needs no SCOT (quiescence protects whole operations).
+* Same pair of facts for the Natarajan-Mittal tree (§3.3; the unresolved
+  "second bug" of prior work [3]).
+"""
+
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import UseAfterFreeError, make_scheme
+from repro.core.structures.harris_list import HarrisList
+from repro.core.structures.nm_tree import NMTree
+
+
+def _hammer(ds, key_range, duration_s, threads=4, switch=1e-6):
+    """Write-heavy churn; returns the first UseAfterFreeError seen (or None)."""
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(switch)  # force aggressive interleaving
+    caught = []
+    stop = threading.Event()
+
+    def worker(idx):
+        import random
+        r = random.Random(idx)
+        try:
+            while not stop.is_set() and not caught:
+                k = r.randrange(key_range)
+                op = r.random()
+                if op < 0.45:
+                    ds.insert(k)
+                elif op < 0.9:
+                    ds.delete(k)
+                else:
+                    ds.search(k)
+        except UseAfterFreeError as e:
+            caught.append(e)
+        except AssertionError as e:  # double-retire is also a safety failure
+            caught.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,), daemon=True)
+          for i in range(threads)]
+    try:
+        for t in ts:
+            t.start()
+        deadline = time.monotonic() + duration_s
+        while time.monotonic() < deadline and not caught:
+            time.sleep(0.02)
+        stop.set()
+        for t in ts:
+            t.join(timeout=10)
+    finally:
+        sys.setswitchinterval(old_interval)
+    return caught[0] if caught else None
+
+
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+def test_harris_without_scot_is_unsafe(scheme):
+    """Reproduces Figure 1: optimistic traversal + robust SMR without SCOT
+    touches reclaimed memory.  (Probabilistic: generous deadline, aggressive
+    reclamation to make the race near-certain.)"""
+    smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+    ds = HarrisList(smr, scot=False, recovery=False)
+    err = _hammer(ds, key_range=16, duration_s=30.0)
+    assert err is not None, (
+        f"expected a use-after-free with scot=False under {scheme} "
+        "(the pre-paper bug) but none occurred"
+    )
+
+
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+def test_harris_with_scot_is_safe(scheme):
+    smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+    ds = HarrisList(smr, scot=True)
+    err = _hammer(ds, key_range=16, duration_s=3.0)
+    assert err is None, f"SCOT traversal hit {err!r} under {scheme}"
+
+
+def test_harris_ebr_safe_without_scot():
+    """Control: EBR's quiescence makes plain optimistic traversal safe."""
+    smr = make_scheme("EBR", retire_scan_freq=1, epoch_freq=1)
+    ds = HarrisList(smr, scot=False)
+    err = _hammer(ds, key_range=16, duration_s=2.0)
+    assert err is None
+
+
+@pytest.mark.parametrize("scheme", ["HP", "IBR"])
+def test_nmtree_without_scot_is_unsafe(scheme):
+    """The second (unresolved-before-this-paper) NM-tree bug [3]."""
+    smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+    ds = NMTree(smr, scot=False)
+    err = _hammer(ds, key_range=16, duration_s=30.0)
+    assert err is not None, (
+        f"expected use-after-free in NM tree with scot=False under {scheme}"
+    )
+
+
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+def test_nmtree_with_scot_is_safe(scheme):
+    smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+    ds = NMTree(smr, scot=True)
+    err = _hammer(ds, key_range=16, duration_s=3.0)
+    assert err is None, f"SCOT NM tree hit {err!r} under {scheme}"
+
+
+def test_recovery_equivalent_safety():
+    """§3.2.1 recovery (ring buffer) preserves safety under IBR/HLN."""
+    for scheme in ["IBR", "HLN"]:
+        smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+        ds = HarrisList(smr, scot=True, recovery=True, recovery_depth=8)
+        err = _hammer(ds, key_range=16, duration_s=2.0)
+        assert err is None, f"recovery traversal hit {err!r} under {scheme}"

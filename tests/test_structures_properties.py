@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis): every structure × every scheme behaves
+like a set under arbitrary sequential op interleavings, and SMR bookkeeping
+invariants hold throughout."""
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import make_scheme
+from repro.core.structures.harris_list import HarrisList
+from repro.core.structures.hashmap import LockFreeHashMap
+from repro.core.structures.hm_list import HarrisMichaelList
+from repro.core.structures.nm_tree import NMTree
+from repro.core.structures.skiplist import SkipList
+
+SCHEMES = ["NR", "EBR", "HP", "HE", "IBR", "HLN"]
+
+ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["insert", "delete", "search"]),
+              st.integers(min_value=0, max_value=31)),
+    min_size=1, max_size=120,
+)
+
+
+def _make(structure: str, scheme: str):
+    smr = make_scheme(scheme, retire_scan_freq=4, epoch_freq=4)
+    if structure == "HList":
+        return HarrisList(smr), smr
+    if structure == "HListNoRecovery":
+        return HarrisList(smr, recovery=False), smr
+    if structure == "HMList":
+        return HarrisMichaelList(smr), smr
+    if structure == "NMTree":
+        return NMTree(smr), smr
+    if structure == "SkipList":
+        return SkipList(smr, seed=7), smr
+    if structure == "HashMap":
+        return LockFreeHashMap(smr, num_buckets=4), smr
+    raise ValueError(structure)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("structure", [
+    "HList", "HListNoRecovery", "HMList", "NMTree", "SkipList", "HashMap",
+])
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy)
+def test_set_semantics_vs_model(structure, scheme, ops):
+    ds, smr = _make(structure, scheme)
+    model = set()
+    for op, k in ops:
+        if op == "insert":
+            expected = k not in model
+            model.add(k)
+            assert ds.insert(k) is expected
+        elif op == "delete":
+            expected = k in model
+            model.discard(k)
+            assert ds.delete(k) is expected
+        else:
+            assert ds.search(k) is (k in model)
+        # SMR bookkeeping invariant: retired ≥ reclaimed, counts consistent
+        s = smr.stats()
+        assert s["reclaimed"] <= s["retired"]
+    assert sorted(ds.snapshot()) == sorted(model)
+
+
+@pytest.mark.parametrize("scheme", ["HP", "IBR"])
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=ops_strategy)
+def test_harris_recycling_aba_semantics(scheme, ops):
+    """With the Recycler, freed nodes come back with the same identity (real
+    ABA conditions) — semantics must be unchanged (Theorem 2)."""
+    smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+    ds = HarrisList(smr, recycle=True)
+    model = set()
+    for op, k in ops:
+        if op == "insert":
+            assert ds.insert(k) is (k not in model)
+            model.add(k)
+        elif op == "delete":
+            assert ds.delete(k) is (k in model)
+            model.discard(k)
+        else:
+            assert ds.search(k) is (k in model)
+    assert sorted(ds.snapshot()) == sorted(model)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(keys=st.lists(st.integers(0, 1000), min_size=1, max_size=200,
+                     unique=True))
+def test_nmtree_bulk_insert_delete_roundtrip(scheme, keys):
+    ds, smr = _make("NMTree", scheme)
+    for k in keys:
+        assert ds.insert(k)
+    assert ds.snapshot() == sorted(keys)
+    for k in keys:
+        assert ds.delete(k)
+    assert ds.snapshot() == []
+    smr.flush()
