@@ -1,0 +1,149 @@
+"""Substrate microbenchmarks: packed-word atomics vs the seed's locked cells.
+
+The repo's paper figures only mean something if traversal reads are cheap
+relative to reservation cost (fences/eras) — exactly the property real SMR
+schemes are designed around.  This bench pins that down with three probes:
+
+* ``read_word`` / ``read_ref`` — one shared-word load.  ``locked`` is a
+  faithful replica of the seed's per-cell-``Lock`` ``AtomicMarkableRef.get``;
+  ``packed`` is the live implementation (single attribute load of an
+  immutable tuple).
+* ``cas`` — successful compare-exchange round-trips (both designs lock here;
+  packed draws from the striped pool).
+* ``protect_chain`` — an N-node pointer chase through ``smr.protect`` per
+  scheme, with and without a cached :class:`ThreadCtx`, isolating the cost
+  of per-pointer thread-local resolution that the Guard-returns-ctx API
+  removes.
+
+Rows follow the harness CSV convention ``name,us_per_call,derived`` and the
+derived field carries ``mops=…`` plus a ``speedup=…`` ratio where a locked
+baseline exists, so ``benchmarks/run.py --json`` snapshots (BENCH_ATOMICS
+.json) are self-contained: the locked baseline is re-measured in the same
+process, not quoted from history.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Iterator, Optional, Tuple
+
+from repro.core.atomics import AtomicMarkableRef
+from repro.core.smr import make_scheme
+from repro.core.structures.node import ListNode
+
+
+class _LockedMarkableRef:
+    """Replica of the seed substrate: per-cell Lock, get() under the lock."""
+
+    __slots__ = ("_lock", "_ref", "_mark")
+
+    def __init__(self, ref=None, mark: bool = False):
+        self._lock = threading.Lock()
+        self._ref = ref
+        self._mark = mark
+
+    def get(self) -> Tuple[object, bool]:
+        with self._lock:
+            return self._ref, self._mark
+
+    def get_ref(self):
+        return self._ref
+
+    def compare_exchange(self, exp_ref, exp_mark, new_ref, new_mark) -> bool:
+        with self._lock:
+            if self._ref is exp_ref and self._mark == exp_mark:
+                self._ref = new_ref
+                self._mark = new_mark
+                return True
+            return False
+
+
+def _time_loop(fn, n: int) -> float:
+    """Seconds per call of fn (called n times)."""
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def _row(name: str, per_call_s: float, extra: str = "") -> str:
+    us = per_call_s * 1e6
+    mops = 1.0 / per_call_s / 1e6
+    derived = f"mops={mops:.4f}" + (f";{extra}" if extra else "")
+    return f"{name},{us:.4f},{derived}"
+
+
+def bench_atomics(quick: bool = True) -> Iterator[str]:
+    n = 200_000 if quick else 2_000_000
+    target = ListNode(1)
+
+    # ---- read path: the paper-relevant number --------------------------
+    locked = _LockedMarkableRef(target, False)
+    packed = AtomicMarkableRef(target, False)
+    t_locked = _time_loop(locked.get, n)
+    t_packed = _time_loop(packed.get, n)
+    yield _row("atomics/read_word-locked", t_locked)
+    yield _row("atomics/read_word-packed", t_packed,
+               f"speedup={t_locked / t_packed:.2f}x")
+
+    # NOTE: the seed's get_ref was an UNLOCKED single-field read — fast
+    # precisely because it was the torn-read bug (could pair a new ref with
+    # a stale mark).  The packed read pays one tuple index for a consistent
+    # snapshot; the row name records that the baseline is the buggy one.
+    t_locked_ref = _time_loop(locked.get_ref, n)
+    t_packed_ref = _time_loop(packed.get_ref, n)
+    yield _row("atomics/read_ref-locked-torn", t_locked_ref)
+    yield _row("atomics/read_ref-packed", t_packed_ref,
+               f"speedup={t_locked_ref / t_packed_ref:.2f}x")
+
+    # ---- CAS: both designs serialize here ------------------------------
+    a, b = ListNode(1), ListNode(2)
+    lcell, pcell = _LockedMarkableRef(a, False), AtomicMarkableRef(a, False)
+
+    def cas_locked():
+        if not lcell.compare_exchange(a, False, b, False):
+            lcell.compare_exchange(b, False, a, False)
+
+    def cas_packed():
+        if not pcell.compare_exchange(a, False, b, False):
+            pcell.compare_exchange(b, False, a, False)
+
+    t_lcas = _time_loop(cas_locked, n // 2)
+    t_pcas = _time_loop(cas_packed, n // 2)
+    yield _row("atomics/cas-locked", t_lcas)
+    yield _row("atomics/cas-packed", t_pcas,
+               f"speedup={t_lcas / t_pcas:.2f}x")
+
+    # ---- protect chains: cached ThreadCtx vs per-call resolution -------
+    chain_len = 64
+    nodes = [ListNode(i) for i in range(chain_len)]
+    for i in range(chain_len - 1):
+        nodes[i].next_ref().set(nodes[i + 1], False)
+    head = AtomicMarkableRef(nodes[0], False)
+    reps = max(1, (n // 10) // chain_len)
+
+    for scheme_name in ("EBR", "HP", "IBR"):
+        smr = make_scheme(scheme_name)
+
+        def chase(ctx: Optional[object]) -> None:
+            node, _ = smr.protect(head, 0, ctx)
+            while node is not None:
+                node, _ = smr.protect(node.next_ref(), 0, ctx)
+
+        def chase_cached():
+            with smr.guard() as ctx:
+                chase(ctx)
+
+        def chase_uncached():
+            with smr.guard():
+                chase(None)
+
+        t_unc = _time_loop(chase_uncached, reps) / chain_len
+        t_cch = _time_loop(chase_cached, reps) / chain_len
+        yield _row(f"atomics/protect_chain-{scheme_name}-uncached", t_unc)
+        yield _row(f"atomics/protect_chain-{scheme_name}-cached", t_cch,
+                   f"speedup={t_unc / t_cch:.2f}x")
+
+
+ALL = {"atomics": bench_atomics}

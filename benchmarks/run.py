@@ -1,5 +1,8 @@
-"""Benchmark harness: one function per paper table/figure (+ kernel and
-serving benches).  Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one function per paper table/figure (+ atomics, kernel
+and serving benches).  Prints ``name,us_per_call,derived`` CSV, and with
+``--json OUT.json`` additionally writes the same rows machine-readable so
+successive PRs can track the perf trajectory (BENCH_ATOMICS.json /
+BENCH_PAPER.json live at the repo root).
 
 Quick mode (default) sizes every bench for minutes-total on one CPU core;
 ``--full`` approaches the paper's §5 grid.  GIL caveat: absolute Mops are
@@ -9,8 +12,26 @@ counters are the reproducible signal (DESIGN.md §2/§9)."""
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+
+def _parse_row(row: str) -> dict:
+    """'name,us_per_call,derived' → dict (derived 'k=v;k=v' unpacked)."""
+    name, us, derived = row.split(",", 2)
+    out = {"name": name, "us_per_call": float(us)}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = float(v.rstrip("x"))
+            except ValueError:
+                out[k] = v
+        elif part:
+            out["derived"] = part
+    return out
 
 
 def main() -> None:
@@ -19,17 +40,32 @@ def main() -> None:
                     help="paper-scale grid (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench families "
-                         "(paper,kernels,serving)")
+                         "(atomics,paper,kernels,serving)")
     ap.add_argument("--workload", default="50r-50w",
                     choices=["50r-50w", "90r-10w", "0r-100w"],
                     help="workload mix for fig8/fig9 (appendix figures)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write results as JSON to OUT (one file; "
+                         "rows grouped by bench family)")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else \
-        {"paper", "kernels", "serving"}
+        {"atomics", "paper", "kernels", "serving"}
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    families: dict = {}
+
+    def emit(family: str, row: str) -> None:
+        print(row)
+        sys.stdout.flush()
+        if args.json:
+            families.setdefault(family, []).append(_parse_row(row))
+
+    if "atomics" in only:
+        from .bench_atomics import bench_atomics
+        for row in bench_atomics(quick=quick):
+            emit("atomics", row)
 
     if "paper" in only:
         from . import bench_paper as bp
@@ -38,23 +74,34 @@ def main() -> None:
             if name in ("fig8", "fig9"):
                 kwargs["workload"] = args.workload
             for row in fn(**kwargs):
-                print(row)
-                sys.stdout.flush()
+                emit("paper", row)
 
     if "kernels" in only:
         from . import bench_kernels as bk
         for name, fn in bk.ALL.items():
             for row in (fn() if name == "oracle" else fn(quick=quick)):
-                print(row)
-                sys.stdout.flush()
+                emit("kernels", row)
 
     if "serving" in only:
         from .bench_serving import bench_serving
         for row in bench_serving(quick=quick):
-            print(row)
-            sys.stdout.flush()
+            emit("serving", row)
 
-    print(f"# total_wall_s={time.time() - t0:.1f}", file=sys.stderr)
+    wall = time.time() - t0
+    if args.json:
+        payload = {
+            "argv": sys.argv[1:],
+            "mode": "full" if args.full else "quick",
+            "python": platform.python_version(),
+            "wall_s": round(wall, 1),
+            "families": families,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+    print(f"# total_wall_s={wall:.1f}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,16 @@
 """Linearizable atomic primitives + reclamation poisoning.
 
 The paper (SCOT) assumes sequential consistency and hardware CAS.  CPython
-gives us linearizability for free on single bytecode ops, but CAS needs a
-read-modify-write which we guard with a per-cell lock.  The *algorithms* built
-on top are verbatim the paper's; only the memory substrate differs (recorded
-in DESIGN.md §2).
+gives us linearizability for free on single bytecode ops; we exploit that on
+the **read path** by packing each atomic word into one immutable tuple stored
+in a single slot: ``get()``/``load()`` is a lone attribute load — no lock —
+and always observes a consistent (ref, mark[, tag]) snapshot because the
+tuple is replaced wholesale, never mutated (DESIGN.md §2 has the full memory
+-model argument).  Only read-modify-write ops (``compare_exchange``, ``set``,
+``swap``, ``fetch_*``) need mutual exclusion; they draw their lock from a
+module-level striped pool keyed by object address, so cells cost no per-node
+``threading.Lock`` allocation.  The *algorithms* built on top are verbatim
+the paper's; only the memory substrate differs.
 
 Reclamation is modeled by **poisoning**: ``free(node)`` tombstones the node and
 any later field access raises :class:`UseAfterFreeError`.  This converts the
@@ -34,6 +40,19 @@ __all__ = [
 ]
 
 
+# Striped lock pool: cells share locks, so a million list nodes cost zero
+# extra Lock objects.  Safe because no code path ever holds two cell locks
+# at once (every RMW takes exactly one).  64 stripes keeps the collision
+# probability under contention negligible at benchmark thread counts.
+_N_STRIPES = 64
+_LOCK_POOL = tuple(threading.Lock() for _ in range(_N_STRIPES))
+
+
+def _striped_lock(obj: object) -> threading.Lock:
+    # >>4: CPython aligns allocations, low address bits carry no entropy
+    return _LOCK_POOL[(id(obj) >> 4) & (_N_STRIPES - 1)]
+
+
 class UseAfterFreeError(RuntimeError):
     """Raised when a poisoned (reclaimed) node is dereferenced.
 
@@ -48,7 +67,7 @@ class AtomicInt:
     __slots__ = ("_lock", "_value")
 
     def __init__(self, value: int = 0):
-        self._lock = threading.Lock()
+        self._lock = _striped_lock(self)
         self._value = value
 
     def load(self) -> int:
@@ -90,7 +109,7 @@ class AtomicRef(Generic[T]):
     __slots__ = ("_lock", "_value")
 
     def __init__(self, value: Optional[T] = None):
-        self._lock = threading.Lock()
+        self._lock = _striped_lock(self)
         self._value = value
 
     def load(self) -> Optional[T]:
@@ -118,33 +137,30 @@ class AtomicMarkableRef(Generic[T]):
     """(pointer, mark-bit) packed word — Harris-style stolen bit.
 
     ``mark=True`` on a node's *next* field means the node that owns the field
-    is logically deleted.  CAS compares the full word (pointer identity AND
-    mark), exactly like comparing the raw tagged word on hardware.
+    is logically deleted.  The word is one immutable ``(ref, mark)`` tuple:
+    readers take a single snapshot (no torn ref/mark pairing is observable),
+    and CAS compares the full word (pointer identity AND mark), exactly like
+    comparing the raw tagged word on hardware.
     """
 
-    __slots__ = ("_lock", "_ref", "_mark")
+    __slots__ = ("_lock", "_word")
 
     def __init__(self, ref: Optional[T] = None, mark: bool = False):
-        self._lock = threading.Lock()
-        self._ref = ref
-        self._mark = mark
+        self._lock = _striped_lock(self)
+        self._word: Tuple[Optional[T], bool] = (ref, mark)
 
     def get(self) -> Tuple[Optional[T], bool]:
-        # Tuple read under GIL: take the lock to be explicit about
-        # linearization (cheap; uncontended fast path).
-        with self._lock:
-            return self._ref, self._mark
+        return self._word
 
     def get_ref(self) -> Optional[T]:
-        return self._ref
+        return self._word[0]
 
     def get_mark(self) -> bool:
-        return self._mark
+        return self._word[1]
 
     def set(self, ref: Optional[T], mark: bool = False) -> None:
         with self._lock:
-            self._ref = ref
-            self._mark = mark
+            self._word = (ref, mark)
 
     def compare_exchange(
         self,
@@ -154,9 +170,9 @@ class AtomicMarkableRef(Generic[T]):
         new_mark: bool,
     ) -> bool:
         with self._lock:
-            if self._ref is expected_ref and self._mark == expected_mark:
-                self._ref = new_ref
-                self._mark = new_mark
+            ref, mark = self._word
+            if ref is expected_ref and mark == expected_mark:
+                self._word = (new_ref, new_mark)
                 return True
             return False
 
@@ -165,29 +181,26 @@ class AtomicFlaggedRef(Generic[T]):
     """(pointer, flag-bit, tag-bit) word for the Natarajan-Mittal tree edges.
 
     ``flag`` marks the edge to a leaf under deletion; ``tag`` freezes an edge
-    during cleanup so no insertion can slip underneath (paper §2.5).
+    during cleanup so no insertion can slip underneath (paper §2.5).  Packed
+    as one immutable ``(ref, flag, tag)`` tuple like
+    :class:`AtomicMarkableRef`.
     """
 
-    __slots__ = ("_lock", "_ref", "_flag", "_tag")
+    __slots__ = ("_lock", "_word")
 
     def __init__(self, ref: Optional[T] = None, flag: bool = False, tag: bool = False):
-        self._lock = threading.Lock()
-        self._ref = ref
-        self._flag = flag
-        self._tag = tag
+        self._lock = _striped_lock(self)
+        self._word: Tuple[Optional[T], bool, bool] = (ref, flag, tag)
 
     def get(self) -> Tuple[Optional[T], bool, bool]:
-        with self._lock:
-            return self._ref, self._flag, self._tag
+        return self._word
 
     def get_ref(self) -> Optional[T]:
-        return self._ref
+        return self._word[0]
 
     def set(self, ref: Optional[T], flag: bool = False, tag: bool = False) -> None:
         with self._lock:
-            self._ref = ref
-            self._flag = flag
-            self._tag = tag
+            self._word = (ref, flag, tag)
 
     def compare_exchange(
         self,
@@ -199,19 +212,17 @@ class AtomicFlaggedRef(Generic[T]):
         new_tag: bool,
     ) -> bool:
         with self._lock:
-            if self._ref is exp_ref and self._flag == exp_flag and self._tag == exp_tag:
-                self._ref = new_ref
-                self._flag = new_flag
-                self._tag = new_tag
+            ref, flag, tag = self._word
+            if ref is exp_ref and flag == exp_flag and tag == exp_tag:
+                self._word = (new_ref, new_flag, new_tag)
                 return True
             return False
 
     def fetch_or(self, flag: bool = False, tag: bool = False) -> Tuple[Optional[T], bool, bool]:
         """Atomic OR of the mark bits (NM tree tags sibling edges this way)."""
         with self._lock:
-            old = (self._ref, self._flag, self._tag)
-            self._flag = self._flag or flag
-            self._tag = self._tag or tag
+            old = self._word
+            self._word = (old[0], old[1] or flag, old[2] or tag)
             return old
 
 

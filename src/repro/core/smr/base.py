@@ -3,19 +3,31 @@
 Every scheme exposes the same surface so data structures are written once:
 
 * ``begin_op()/end_op()`` — operation scope (EBR-style schemes reserve here;
-  HP-style schemes clear hazard slots in ``end_op``).
-* ``protect(src, idx)`` — read a shared word and reserve its (unmarked)
-  target under slot ``idx``.  HP validates by re-reading the source; era
-  schemes publish/bump eras.  Returns the raw word (ref + mark bits).
-* ``dup(src_idx, dst_idx)`` — duplicate a reservation to a higher slot index
-  (paper §3.2: ascending order avoids the retire-scan race; cheaper than
-  index renaming).  No-op for cumulative schemes (IBR, Hyaline-1S).
-* ``retire(node)`` — node unlinked, hand to the scheme for eventual free.
+  HP-style schemes clear hazard slots in ``end_op``).  ``begin_op`` returns
+  the thread's :class:`ThreadCtx`, and ``Guard.__enter__`` forwards it, so
+  hot loops resolve thread-local state **once per operation** instead of
+  once per pointer chase.
+* ``protect(src, idx, ctx=None)`` — read a shared word and reserve its
+  (unmarked) target under slot ``idx``.  HP validates by re-reading the
+  source; era schemes publish/bump eras.  Returns the raw word (ref + mark
+  bits).  Pass the ctx returned by the guard to skip the thread-local
+  lookup.
+* ``dup(src_idx, dst_idx, ctx=None)`` — duplicate a reservation to a higher
+  slot index (paper §3.2: ascending order avoids the retire-scan race;
+  cheaper than index renaming).  No-op for cumulative schemes (IBR,
+  Hyaline-1S).
+* ``retire(node, ctx=None)`` — node unlinked, hand to the scheme for
+  eventual free.
 
 ``cumulative_protection`` is the property the paper's *recovery optimization*
 dispatches on (§3.2.1): IBR/Hyaline-1S reservations are never cancelled by a
 later ``protect``, so SCOT may fall back through a ring buffer of predecessors;
 HP/HE get one-shot recovery only.
+
+Hot-path bookkeeping is thread-local and amortized: slot clearing in
+``end_op`` walks only up to the operation's high-water mark (``ctx.hwm``),
+and retire-scan / era-tick triggers are plain countdown ints rather than
+modulo arithmetic over shared counters.
 """
 
 from __future__ import annotations
@@ -38,15 +50,18 @@ class ThreadCtx:
     """Globally visible per-thread reservation state (paper §2.2)."""
 
     __slots__ = (
-        "tid",
+        "thread",       # owning Thread; dead ⇒ ctx is reapable
         "slots",        # HP: node refs; HE: era ints
+        "hwm",          # 1 + highest slot index written this op (clear bound)
         "lower",
         "upper",        # IBR / Hyaline-1S interval reservation
         "epoch",        # EBR entry-epoch reservation (None == quiescent)
         "active",
         "retired",      # local retired list
-        "retire_count",
         "op_count",
+        "scan_countdown",   # amortized retire-scan trigger
+        "era_countdown",    # amortized era-clock advance trigger
+        "pending",      # Hyaline: this thread's unsealed retired nodes
         "inbox",        # Hyaline: batches this thread must release
         "inbox_lock",
         # -- counters (thread-local, summed on demand; no contention) ------
@@ -56,16 +71,20 @@ class ThreadCtx:
         "n_scans",
     )
 
-    def __init__(self, tid: int, num_slots: int):
-        self.tid = tid
+    def __init__(self, num_slots: int,
+                 retire_scan_freq: int = 128, epoch_freq: int = 96):
+        self.thread = threading.current_thread()
         self.slots: List[Optional[object]] = [None] * num_slots
+        self.hwm = 0
         self.lower = 0
         self.upper = 0
         self.epoch: Optional[int] = None
         self.active = False
         self.retired: List[SmrNode] = []
-        self.retire_count = 0
         self.op_count = 0
+        self.scan_countdown = retire_scan_freq
+        self.era_countdown = epoch_freq
+        self.pending: List[SmrNode] = []
         self.inbox: List[object] = []
         self.inbox_lock = threading.Lock()
         self.n_retired = 0
@@ -75,19 +94,26 @@ class ThreadCtx:
 
 
 class Guard:
-    """``with smr.guard(): ...`` — an operation scope."""
+    """``with smr.guard() as ctx: ...`` — an operation scope.
 
-    __slots__ = ("_smr",)
+    ``__enter__`` returns the resolved :class:`ThreadCtx` so the operation
+    can pass it straight to ``protect``/``dup``/``retire`` and skip the
+    per-call thread-local lookup.
+    """
+
+    __slots__ = ("_smr", "_ctx")
 
     def __init__(self, smr: "SmrScheme"):
         self._smr = smr
+        self._ctx: Optional[ThreadCtx] = None
 
-    def __enter__(self):
-        self._smr.begin_op()
-        return self._smr
+    def __enter__(self) -> ThreadCtx:
+        self._ctx = c = self._smr.begin_op()
+        return c
 
     def __exit__(self, *exc):
-        self._smr.end_op()
+        self._smr.end_op(self._ctx)
+        self._ctx = None
         return False
 
 
@@ -109,38 +135,90 @@ class SmrScheme:
         self.retire_scan_freq = retire_scan_freq
         self.epoch_freq = epoch_freq
         self._free_fn = free_fn
-        self._ctxs: Dict[int, ThreadCtx] = {}
+        # Thread idents are REUSED by the OS after a thread exits, so keying
+        # by get_ident() would let a later thread overwrite a dead thread's
+        # ctx and silently drop its retired/reclaimed counters (and any
+        # garbage it still pins) from stats()/scans.  Instead the registry
+        # holds ctx objects, and dead threads' ctxs are *reaped* on the next
+        # ctx creation: their garbage is adopted by the new ctx, counters
+        # fold into ``_reaped``, and the entry is removed — bounding the
+        # registry by the number of live threads.
+        self._ctxs: List[ThreadCtx] = []
         self._ctx_lock = threading.Lock()
         self._local = threading.local()
+        self._reaped = {"retired": 0, "reclaimed": 0, "barriers": 0,
+                        "scans": 0, "ops": 0}
         self.era = AtomicInt(1)  # global epoch/era clock (unused by NR/HP)
 
     # ------------------------------------------------------------------ ctx
     def ctx(self) -> ThreadCtx:
         c = getattr(self._local, "ctx", None)
         if c is None:
-            tid = threading.get_ident()
-            c = ThreadCtx(tid, self.num_slots)
+            c = ThreadCtx(self.num_slots,
+                          self.retire_scan_freq, self.epoch_freq)
             with self._ctx_lock:
-                self._ctxs[tid] = c
+                dead = [t for t in self._ctxs if not t.thread.is_alive()]
+                for t in dead:
+                    # counters fold in the SAME critical section that
+                    # removes the ctx, so stats()/not_yet_reclaimed() never
+                    # see a window where the dead ctx is counted nowhere
+                    # (which could report reclaimed > retired)
+                    self._ctxs.remove(t)
+                    r = self._reaped
+                    r["retired"] += t.n_retired
+                    r["reclaimed"] += t.n_reclaimed
+                    r["barriers"] += t.n_barriers
+                    r["scans"] += t.n_scans
+                    r["ops"] += t.op_count
+                    t.n_retired = t.n_reclaimed = 0
+                    t.n_barriers = t.n_scans = t.op_count = 0
+                self._ctxs.append(c)
             self._local.ctx = c
+            # Adoption may free nodes (→ user free_fn → arbitrary locks), so
+            # it happens OUTSIDE _ctx_lock; the dead ctxs are unreachable to
+            # every other thread once removed from the registry.
+            if dead:
+                self._reap(dead, c)
         return c
+
+    def _reap(self, dead: List[ThreadCtx], adopter: ThreadCtx) -> None:
+        for t in dead:
+            # a dead thread provably holds no references: cancel every
+            # reservation so its garbage stops being pinned
+            t.active = False
+            t.epoch = None
+            t.lower = t.upper = 0
+            for i in range(len(t.slots)):
+                t.slots[i] = None
+            t.hwm = 0
+            self._adopt(t, adopter)
+
+    def _adopt(self, dead: ThreadCtx, adopter: ThreadCtx) -> None:
+        """Move a dead thread's not-yet-reclaimed garbage to a live ctx so
+        future scans can free it.  Reclaims credit to the adopter; retire
+        credit stays with the (reaped) counters — totals stay consistent."""
+        adopter.retired.extend(dead.retired)
+        dead.retired = []
+        adopter.pending.extend(dead.pending)
+        dead.pending = []
 
     def all_ctxs(self) -> List[ThreadCtx]:
         with self._ctx_lock:
-            return list(self._ctxs.values())
+            return list(self._ctxs)
 
     def guard(self) -> Guard:
         return Guard(self)
 
     # ----------------------------------------------------------- op scope
-    def begin_op(self) -> None:
+    def begin_op(self) -> ThreadCtx:
         c = self.ctx()
         c.active = True
         c.op_count += 1
         self._on_begin(c)
+        return c
 
-    def end_op(self) -> None:
-        c = self.ctx()
+    def end_op(self, ctx: Optional[ThreadCtx] = None) -> None:
+        c = ctx if ctx is not None else self.ctx()
         self._on_end(c)
         c.active = False
 
@@ -148,27 +226,41 @@ class SmrScheme:
         pass
 
     def _on_end(self, c: ThreadCtx) -> None:
-        # HP-style default: drop all reservations.
-        for i in range(self.num_slots):
-            c.slots[i] = None
+        # HP-style default: drop the reservations this op actually wrote
+        # (slots above the high-water mark are already None).
+        hwm = c.hwm
+        if hwm:
+            slots = c.slots
+            for i in range(hwm):
+                slots[i] = None
+            c.hwm = 0
 
     # ----------------------------------------------------------- protect
     # Default implementations are *plain loads* (NR / EBR); hazard- and
     # era-based schemes override `_reserve`.
 
-    def protect(self, src: AtomicMarkableRef, idx: int) -> Tuple[Optional[SmrNode], bool]:
+    def protect(
+        self, src: AtomicMarkableRef, idx: int,
+        ctx: Optional[ThreadCtx] = None,
+    ) -> Tuple[Optional[SmrNode], bool]:
         """Read (ref, mark) from ``src`` and reserve ``ref`` in slot ``idx``."""
-        return self._reserve_markable(self.ctx(), src, idx)
+        return self._reserve_markable(
+            ctx if ctx is not None else self.ctx(), src, idx)
 
-    def protect_ref(self, src: AtomicRef, idx: int) -> Optional[SmrNode]:
-        node = self._reserve_plain(self.ctx(), src, idx)
-        return node
+    def protect_ref(
+        self, src: AtomicRef, idx: int,
+        ctx: Optional[ThreadCtx] = None,
+    ) -> Optional[SmrNode]:
+        return self._reserve_plain(
+            ctx if ctx is not None else self.ctx(), src, idx)
 
     def protect_edge(
-        self, src: AtomicFlaggedRef, idx: int
+        self, src: AtomicFlaggedRef, idx: int,
+        ctx: Optional[ThreadCtx] = None,
     ) -> Tuple[Optional[SmrNode], bool, bool]:
         """NM-tree edge word: (ref, flag, tag)."""
-        return self._reserve_flagged(self.ctx(), src, idx)
+        return self._reserve_flagged(
+            ctx if ctx is not None else self.ctx(), src, idx)
 
     def _reserve_markable(self, c, src, idx):
         return src.get()
@@ -179,16 +271,19 @@ class SmrScheme:
     def _reserve_flagged(self, c, src, idx):
         return src.get()
 
-    def dup(self, src_idx: int, dst_idx: int) -> None:
+    def dup(self, src_idx: int, dst_idx: int,
+            ctx: Optional[ThreadCtx] = None) -> None:
         """Duplicate reservation src→dst.  Paper §3.2 requires src < dst."""
         assert src_idx < dst_idx, "dup must move to a higher slot index"
         # default: no-op (NR/EBR/IBR/HLN)
 
-    def clear(self, idx: Optional[int] = None) -> None:
-        c = self.ctx()
+    def clear(self, idx: Optional[int] = None,
+              ctx: Optional[ThreadCtx] = None) -> None:
+        c = ctx if ctx is not None else self.ctx()
         if idx is None:
             for i in range(self.num_slots):
                 c.slots[i] = None
+            c.hwm = 0
         else:
             c.slots[idx] = None
 
@@ -198,20 +293,33 @@ class SmrScheme:
         node.birth_era = self.era.load()
         return node
 
-    def retire(self, node: SmrNode) -> None:
+    def retire(self, node: SmrNode,
+               ctx: Optional[ThreadCtx] = None) -> None:
         assert node is not None
         if node._retired:  # double-retire is a data-structure bug
             raise AssertionError(f"double retire of node {node.node_id}")
         node._retired = True
-        c = self.ctx()
+        c = ctx if ctx is not None else self.ctx()
         c.n_retired += 1
         self._on_retire(c, node)
 
     def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
         c.retired.append(node)
-        c.retire_count += 1
-        if c.retire_count % self.retire_scan_freq == 0:
+        self._maybe_scan(c)
+
+    def _maybe_scan(self, c: ThreadCtx) -> None:
+        """Amortized retire-scan trigger (thread-local countdown)."""
+        c.scan_countdown -= 1
+        if c.scan_countdown <= 0:
+            c.scan_countdown = self.retire_scan_freq
             self._scan(c)
+
+    def _retire_stamped(self, c: ThreadCtx, node: SmrNode) -> None:
+        """Shared ``_on_retire`` body for era-stamping schemes (EBR/HE/IBR)."""
+        node.retire_era = self.era.load()
+        c.retired.append(node)
+        self._tick_era(c)
+        self._maybe_scan(c)
 
     def _scan(self, c: ThreadCtx) -> None:  # pragma: no cover - overridden
         pass
@@ -225,22 +333,31 @@ class SmrScheme:
 
     # maybe advance the global era/epoch clock (amortized, paper §5)
     def _tick_era(self, c: ThreadCtx) -> None:
-        if (c.n_retired + c.op_count) % self.epoch_freq == 0:
+        c.era_countdown -= 1
+        if c.era_countdown <= 0:
+            c.era_countdown = self.epoch_freq
             self.era.fetch_add(1)
 
     # -------------------------------------------------------------- stats
     def not_yet_reclaimed(self) -> int:
-        return sum(c.n_retired - c.n_reclaimed for c in self.all_ctxs())
+        with self._ctx_lock:
+            base = self._reaped["retired"] - self._reaped["reclaimed"]
+            cs = list(self._ctxs)
+        return base + sum(c.n_retired - c.n_reclaimed for c in cs)
 
     def stats(self) -> Dict[str, int]:
-        cs = self.all_ctxs()
+        with self._ctx_lock:
+            r = dict(self._reaped)
+            cs = list(self._ctxs)
+        retired = r["retired"] + sum(c.n_retired for c in cs)
+        reclaimed = r["reclaimed"] + sum(c.n_reclaimed for c in cs)
         return {
-            "retired": sum(c.n_retired for c in cs),
-            "reclaimed": sum(c.n_reclaimed for c in cs),
-            "not_yet_reclaimed": sum(c.n_retired - c.n_reclaimed for c in cs),
-            "barriers": sum(c.n_barriers for c in cs),
-            "scans": sum(c.n_scans for c in cs),
-            "ops": sum(c.op_count for c in cs),
+            "retired": retired,
+            "reclaimed": reclaimed,
+            "not_yet_reclaimed": retired - reclaimed,
+            "barriers": r["barriers"] + sum(c.n_barriers for c in cs),
+            "scans": r["scans"] + sum(c.n_scans for c in cs),
+            "ops": r["ops"] + sum(c.op_count for c in cs),
         }
 
     def flush(self) -> None:

@@ -19,6 +19,8 @@ class HE(SmrScheme):
     cumulative_protection = False  # protect(idx) replaces the slot's era
 
     def _publish_read(self, c: ThreadCtx, idx: int, read):
+        if idx >= c.hwm:
+            c.hwm = idx + 1
         prev_era = c.slots[idx]
         while True:
             value = read()
@@ -38,9 +40,11 @@ class HE(SmrScheme):
     def _reserve_flagged(self, c, src: AtomicFlaggedRef, idx: int):
         return self._publish_read(c, idx, src.get)
 
-    def dup(self, src_idx: int, dst_idx: int) -> None:
+    def dup(self, src_idx: int, dst_idx: int, ctx=None) -> None:
         assert src_idx < dst_idx
-        c = self.ctx()
+        c = ctx if ctx is not None else self.ctx()
+        if dst_idx >= c.hwm:
+            c.hwm = dst_idx + 1
         c.slots[dst_idx] = c.slots[src_idx]
         c.n_barriers += 1
 
@@ -48,12 +52,7 @@ class HE(SmrScheme):
         self._tick_era(c)
 
     def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
-        node.retire_era = self.era.load()
-        c.retired.append(node)
-        c.retire_count += 1
-        self._tick_era(c)
-        if c.retire_count % self.retire_scan_freq == 0:
-            self._scan(c)
+        self._retire_stamped(c, node)
 
     def _scan(self, c: ThreadCtx) -> None:
         c.n_scans += 1

@@ -23,15 +23,18 @@ class HP(SmrScheme):
 
     # ------------------------------------------------------------ protect
     def _reserve_markable(self, c: ThreadCtx, src: AtomicMarkableRef, idx: int):
+        if idx >= c.hwm:
+            c.hwm = idx + 1
         while True:
-            ref, mark = src.get()
-            c.slots[idx] = ref
+            word = src.get()
+            c.slots[idx] = word[0]
             c.n_barriers += 1
-            ref2, mark2 = src.get()      # validate: source edge intact
-            if ref is ref2 and mark == mark2:
-                return ref, mark
+            if src.get() is word:        # validate: source edge intact
+                return word
 
     def _reserve_plain(self, c: ThreadCtx, src: AtomicRef, idx: int):
+        if idx >= c.hwm:
+            c.hwm = idx + 1
         while True:
             ref = src.load()
             c.slots[idx] = ref
@@ -40,16 +43,20 @@ class HP(SmrScheme):
                 return ref
 
     def _reserve_flagged(self, c: ThreadCtx, src: AtomicFlaggedRef, idx: int):
+        if idx >= c.hwm:
+            c.hwm = idx + 1
         while True:
             word = src.get()
             c.slots[idx] = word[0]
             c.n_barriers += 1
-            if src.get() == word:
+            if src.get() is word:
                 return word
 
-    def dup(self, src_idx: int, dst_idx: int) -> None:
+    def dup(self, src_idx: int, dst_idx: int, ctx=None) -> None:
         assert src_idx < dst_idx
-        c = self.ctx()
+        c = ctx if ctx is not None else self.ctx()
+        if dst_idx >= c.hwm:
+            c.hwm = dst_idx + 1
         c.slots[dst_idx] = c.slots[src_idx]
         c.n_barriers += 1
 

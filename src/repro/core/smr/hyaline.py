@@ -45,8 +45,6 @@ class Hyaline1S(SmrScheme):
         super().__init__(*args, **kwargs)
         self.batch_size = batch_size
         self._seal_lock = threading.Lock()
-        self._pending_by_tid: dict = {}   # tid → unsealed retired nodes
-        self._pending_lock = threading.Lock()
 
     # --------------------------------------------------------- reservation
     def _on_begin(self, c: ThreadCtx) -> None:
@@ -75,23 +73,14 @@ class Hyaline1S(SmrScheme):
         return self._bump(c, src.get)
 
     # ------------------------------------------------------------- retire
-    def _pending(self, c: ThreadCtx) -> List[SmrNode]:
-        with self._pending_lock:
-            return self._pending_by_tid.setdefault(c.tid, [])
-
-    def _reset_pending(self, c: ThreadCtx) -> None:
-        with self._pending_lock:
-            self._pending_by_tid[c.tid] = []
-
     def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
         node.retire_era = self.era.load()
-        pending = self._pending(c)
+        pending = c.pending
         pending.append(node)
-        c.retire_count += 1
         self._tick_era(c)
         if len(pending) >= self.batch_size:
             self._seal(c, pending)
-            self._reset_pending(c)
+            c.pending = []
 
     def _seal(self, c: ThreadCtx, nodes: List[SmrNode]) -> None:
         if not nodes:
@@ -116,6 +105,17 @@ class Hyaline1S(SmrScheme):
                 with t.inbox_lock:
                     t.inbox.append(batch)
 
+    def _adopt(self, dead: ThreadCtx, adopter: ThreadCtx) -> None:
+        # besides retired/pending, a dead thread must drop its references on
+        # batches in its inbox (it can no longer release them at end_op)
+        super()._adopt(dead, adopter)
+        with dead.inbox_lock:
+            batches, dead.inbox = dead.inbox, []
+        for batch in batches:
+            if batch.refs.add_fetch(-1) == 0:
+                for node in batch.nodes:
+                    self._free(adopter, node)
+
     def _release_inbox(self, c: ThreadCtx) -> None:
         with c.inbox_lock:
             batches, c.inbox = c.inbox, []
@@ -131,8 +131,8 @@ class Hyaline1S(SmrScheme):
         """Self-only: seal own pending batch and release own inbox (both are
         this thread's state — safe under concurrency)."""
         c = self.ctx()
-        self._seal(c, self._pending(c))
-        self._reset_pending(c)
+        self._seal(c, c.pending)
+        c.pending = []
         self._release_inbox(c)
 
     # ------------------------------------------------------------- teardown
@@ -141,8 +141,8 @@ class Hyaline1S(SmrScheme):
         inbox.  Only call at quiescence (tests / engine shutdown)."""
         c = self.ctx()
         for t in self.all_ctxs():
-            self._seal(c, self._pending(t))
-            self._reset_pending(t)
+            self._seal(c, t.pending)
+            t.pending = []
         for t in self.all_ctxs():
             with t.inbox_lock:
                 batches, t.inbox = t.inbox, []

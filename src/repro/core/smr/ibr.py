@@ -49,12 +49,7 @@ class IBR(SmrScheme):
         return self._bump(c, src.get)
 
     def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
-        node.retire_era = self.era.load()
-        c.retired.append(node)
-        c.retire_count += 1
-        self._tick_era(c)
-        if c.retire_count % self.retire_scan_freq == 0:
-            self._scan(c)
+        self._retire_stamped(c, node)
 
     def _scan(self, c: ThreadCtx) -> None:
         c.n_scans += 1

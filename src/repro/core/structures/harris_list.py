@@ -80,9 +80,9 @@ class HarrisList:
     def insert(self, key, value=None) -> bool:
         smr = self.smr
         new = None
-        with smr.guard():
+        with smr.guard() as ctx:
             while True:
-                prev, curr, found = self._find(key, srch=False)
+                prev, curr, found = self._find(key, srch=False, ctx=ctx)
                 if found:
                     return False
                 if new is None:
@@ -98,9 +98,9 @@ class HarrisList:
 
     def delete(self, key) -> bool:
         smr = self.smr
-        with smr.guard():
+        with smr.guard() as ctx:
             while True:
-                prev, curr, found = self._find(key, srch=False)
+                prev, curr, found = self._find(key, srch=False, ctx=ctx)
                 if not found:
                     return False
                 nxt, nmark = curr.next_ref().get()
@@ -111,65 +111,68 @@ class HarrisList:
                     continue
                 # one physical-unlink attempt (Fig 2 L26); else leave to others
                 if prev.next_ref().compare_exchange(curr, False, nxt, False):
-                    smr.retire(curr)
+                    smr.retire(curr, ctx)
                 return True
 
     def search(self, key) -> bool:
         """Read-only optimistic search — zero CAS (the Harris-vs-HM win)."""
-        with self.smr.guard():
-            _, _, found = self._find(key, srch=True)
+        with self.smr.guard() as ctx:
+            _, _, found = self._find(key, srch=True, ctx=ctx)
             return found
 
     contains = search
 
     # ------------------------------------------------------- SCOT Do_Find
-    def _find(self, key, srch: bool) -> Tuple[ListNode, Optional[ListNode], bool]:
+    def _find(self, key, srch: bool, ctx=None
+              ) -> Tuple[ListNode, Optional[ListNode], bool]:
+        if ctx is None:
+            ctx = self.smr.ctx()
         while True:
-            out = self._find_attempt(key, srch)
+            out = self._find_attempt(key, srch, ctx)
             if out is not _RESTART:
                 return out
             self.n_restarts.fetch_add(1)
 
-    def _find_attempt(self, key, srch: bool):
+    def _find_attempt(self, key, srch: bool, ctx):
         smr = self.smr
         cumulative = smr.cumulative_protection
         ring = [] if (self.recovery and cumulative) else None
 
         prev: ListNode = self.head
-        curr, _ = smr.protect(self.head.next_ref(), HP_CURR)
+        curr, _ = smr.protect(self.head.next_ref(), HP_CURR, ctx)
         prev_next = curr  # value last read from prev.next (chain start marker)
 
         while True:
             # ---------------- Phase 1: safe zone (paper Fig 4 L7-17) -------
             while True:
                 if curr is None:
-                    return self._finish(prev, prev_next, None, srch, key)
-                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+                    return self._finish(prev, prev_next, None, srch, key, ctx)
+                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
                 if nmark:
                     break  # curr is logically deleted → dangerous zone
                 if curr.key >= key:
-                    return self._finish(prev, prev_next, curr, srch, key)
+                    return self._finish(prev, prev_next, curr, srch, key, ctx)
                 if ring is not None:
                     ring.append(curr)
                     if len(ring) > self.recovery_depth:
                         ring.pop(0)
-                smr.dup(HP_CURR, HP_PREV)   # Hp1[curr] → Hp2 (prev)
+                smr.dup(HP_CURR, HP_PREV, ctx)   # Hp1[curr] → Hp2 (prev)
                 prev = curr
-                smr.dup(HP_NEXT, HP_CURR)   # Hp0[next] → Hp1 (curr)
+                smr.dup(HP_NEXT, HP_CURR, ctx)   # Hp0[next] → Hp1 (curr)
                 prev_next = nxt
                 curr = nxt
 
             # -------------- Phase 2: dangerous zone (Fig 4 L18-25) ---------
             # curr = first unsafe node == prev_next (the word in prev.next)
             if self.scot:
-                smr.dup(HP_CURR, HP_UNSAFE)  # Hp1[curr] → Hp3 (first unsafe)
+                smr.dup(HP_CURR, HP_UNSAFE, ctx)  # Hp1[curr] → Hp3 (first unsafe)
             chain_start = curr
             while True:
                 curr = nxt  # advance into the chain (unmarked ref part)
                 if curr is None:
                     # chain runs to the end of the list (Fig 4 L21 goto 27)
-                    return self._finish(prev, chain_start, None, srch, key)
-                smr.dup(HP_NEXT, HP_CURR)    # Hp0 → Hp1
+                    return self._finish(prev, chain_start, None, srch, key, ctx)
+                smr.dup(HP_NEXT, HP_CURR, ctx)    # Hp0 → Hp1
                 if self.scot:
                     # THE validation (paper Thm 1 inductive step): *before*
                     # dereferencing the just-reserved chain node, check the
@@ -181,41 +184,46 @@ class HarrisList:
                     # previous protect) now pins it.
                     if prev.next_ref().get() != (chain_start, False):
                         self.n_validation_failures.fetch_add(1)
-                        resumed = self._recover(prev, ring)
+                        resumed = self._recover(prev, ring, ctx)
                         if resumed is _RESTART:
                             return _RESTART
                         prev, curr, nxt, nmark = resumed
                         prev_next = curr
                         if curr is None:
-                            return self._finish(prev, prev_next, None, srch, key)
+                            return self._finish(prev, prev_next, None, srch,
+                                                key, ctx)
                         if not nmark:
                             break  # resumed in the safe zone
-                        smr.dup(HP_CURR, HP_UNSAFE)
+                        smr.dup(HP_CURR, HP_UNSAFE, ctx)
                         chain_start = curr
                         continue
                 # deref of `curr` — made safe by the validation above (SCOT)
                 # or unprotected (scot=False: the Figure-1 bug, surfaced to
                 # tests as UseAfterFreeError where HW would SEGFAULT)
-                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
                 if not nmark:
                     break  # end of chain: curr is not logically deleted
             # Exited dangerous zone at unmarked `curr` (or resumed).  Check
             # position; if key not reached, resume Phase 1 — prev advances
             # past the (skipped) chain, which is the optimistic-traversal win.
             if curr.key >= key:
-                return self._finish(prev, prev_next, curr, srch, key)
+                return self._finish(prev, prev_next, curr, srch, key, ctx)
             if ring is not None:
                 ring.append(curr)
                 if len(ring) > self.recovery_depth:
                     ring.pop(0)
-            smr.dup(HP_CURR, HP_PREV)
+            smr.dup(HP_CURR, HP_PREV, ctx)
             prev = curr
+            smr.dup(HP_NEXT, HP_CURR, ctx)   # Hp1 must pin nxt BEFORE Phase 1
+            # re-reads its next word (which overwrites Hp0) — omitting this
+            # shift leaves the new curr unpinned and, one step later, lets
+            # dup(HP_CURR→HP_PREV) publish a stale node as prev's "pin"
             prev_next = nxt
             curr = nxt
             # loop back into Phase 1
 
     # ---------------------------------------------------------- recovery
-    def _recover(self, prev: ListNode, ring):
+    def _recover(self, prev: ListNode, ring, ctx):
         """§3.2.1: escape the dangerous zone instead of a full restart."""
         if not self.recovery:
             return _RESTART
@@ -223,12 +231,12 @@ class HarrisList:
         # one-shot recovery: last safe node still unmarked → continue from it.
         # protect() re-publishes; the returned mark tells us whether `prev`
         # got logically deleted meanwhile (marked edge ⇒ unsafe to resume).
-        curr, pmark = smr.protect(prev.next_ref(), HP_CURR)
+        curr, pmark = smr.protect(prev.next_ref(), HP_CURR, ctx)
         if not pmark:
             self.n_recoveries.fetch_add(1)
             if curr is None:
                 return (prev, None, None, False)
-            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
             return (prev, curr, nxt, nmark)
         # prev itself got deleted.  Cumulative schemes (IBR/HLN) may fall
         # back through still-protected predecessors (Figure 6); HP/HE restart
@@ -238,18 +246,18 @@ class HarrisList:
         while ring:
             cand = ring.pop()
             # ring nodes stay protected under cumulative schemes ⇒ deref safe
-            curr, cmark = smr.protect(cand.next_ref(), HP_CURR)
+            curr, cmark = smr.protect(cand.next_ref(), HP_CURR, ctx)
             if cmark:
                 continue  # this predecessor was deleted too; fall further back
             self.n_ring_recoveries.fetch_add(1)
             if curr is None:
                 return (cand, None, None, False)
-            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
             return (cand, curr, nxt, nmark)
         return _RESTART
 
     # ------------------------------------------------------------ finish
-    def _finish(self, prev, prev_next, curr, srch: bool, key):
+    def _finish(self, prev, prev_next, curr, srch: bool, key, ctx):
         """Paper Fig 4 L26-40: optional chain unlink + position return."""
         smr = self.smr
         if not srch and prev_next is not curr:
@@ -259,7 +267,7 @@ class HarrisList:
             node = prev_next
             while node is not curr:
                 nxt = node.next_ref().get_ref()  # we unlinked it: safe
-                smr.retire(node)
+                smr.retire(node, ctx)
                 node = nxt
         found = curr is not None and curr.key == key
         return (prev, curr, found)

@@ -46,8 +46,8 @@ class LockFreeHashMap:
     def get(self, key):
         """Optimistic read-only lookup returning the stored value."""
         bucket = self._bucket(key)
-        with self.smr.guard():
-            _, curr, found = bucket._find(key, srch=True)
+        with self.smr.guard() as ctx:
+            _, curr, found = bucket._find(key, srch=True, ctx=ctx)
             return curr.value if found else None
 
     def snapshot(self):

@@ -37,9 +37,9 @@ class HarrisMichaelList:
     def insert(self, key, value=None) -> bool:
         smr = self.smr
         new = None
-        with smr.guard():
+        with smr.guard() as ctx:
             while True:
-                prev, curr, found = self._find(key)
+                prev, curr, found = self._find(key, ctx=ctx)
                 if found:
                     return False
                 if new is None:
@@ -54,9 +54,9 @@ class HarrisMichaelList:
 
     def delete(self, key) -> bool:
         smr = self.smr
-        with smr.guard():
+        with smr.guard() as ctx:
             while True:
-                prev, curr, found = self._find(key)
+                prev, curr, found = self._find(key, ctx=ctx)
                 if not found:
                     return False
                 nxt, nmark = curr.next_ref().get()
@@ -65,38 +65,40 @@ class HarrisMichaelList:
                 if not curr.next_ref().compare_exchange(nxt, False, nxt, True):
                     continue
                 if prev.next_ref().compare_exchange(curr, False, nxt, False):
-                    smr.retire(curr)
+                    smr.retire(curr, ctx)
                 else:
-                    self._find(key)  # help physical removal
+                    self._find(key, ctx=ctx)  # help physical removal
                 return True
 
     def search(self, key) -> bool:
         # NOT read-only: _find may unlink marked nodes (Michael's approach).
-        with self.smr.guard():
-            _, _, found = self._find(key)
+        with self.smr.guard() as ctx:
+            _, _, found = self._find(key, ctx=ctx)
             return found
 
     contains = search
 
     # ----------------------------------------------------------- Michael find
-    def _find(self, key, srch: bool = False
+    def _find(self, key, srch: bool = False, ctx=None
               ) -> Tuple[ListNode, Optional[ListNode], bool]:
         # `srch` accepted for API parity with HarrisList; Michael's find is
         # never read-only (it unlinks marked nodes even during search).
+        if ctx is None:
+            ctx = self.smr.ctx()
         while True:
-            out = self._find_attempt(key)
+            out = self._find_attempt(key, ctx)
             if out is not _RESTART:
                 return out
             self.n_restarts.fetch_add(1)
 
-    def _find_attempt(self, key):
+    def _find_attempt(self, key, ctx):
         smr = self.smr
         prev: ListNode = self.head
-        curr, _ = smr.protect(prev.next_ref(), HP_CURR)
+        curr, _ = smr.protect(prev.next_ref(), HP_CURR, ctx)
         while True:
             if curr is None:
                 return (prev, None, False)
-            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT)
+            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
             # re-validate the incoming edge (Michael's check): curr still
             # linked after we protected its next word
             if prev.next_ref().get() != (curr, False):
@@ -106,15 +108,15 @@ class HarrisMichaelList:
                 self.n_cleanup_cas.fetch_add(1)
                 if not prev.next_ref().compare_exchange(curr, False, nxt, False):
                     return _RESTART
-                smr.retire(curr)
-                smr.dup(HP_NEXT, HP_CURR)
+                smr.retire(curr, ctx)
+                smr.dup(HP_NEXT, HP_CURR, ctx)
                 curr = nxt
                 continue
             if curr.key >= key:
                 return (prev, curr, curr.key == key)
-            smr.dup(HP_CURR, HP_PREV)
+            smr.dup(HP_CURR, HP_PREV, ctx)
             prev = curr
-            smr.dup(HP_NEXT, HP_CURR)
+            smr.dup(HP_NEXT, HP_CURR, ctx)
             curr = nxt
 
     # --------------------------------------------------------- debug utils

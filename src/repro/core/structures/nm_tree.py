@@ -80,8 +80,8 @@ class NMTree:
     # ------------------------------------------------------------------ API
     def search(self, key) -> bool:
         """Read-only optimistic search — no CAS (SCOT makes this legal)."""
-        with self.smr.guard():
-            sr = self._seek(key)
+        with self.smr.guard() as ctx:
+            sr = self._seek(key, ctx)
             return sr.leaf.key == key
 
     contains = search
@@ -89,9 +89,9 @@ class NMTree:
     def insert(self, key, value=None) -> bool:
         smr = self.smr
         new_leaf = None
-        with smr.guard():
+        with smr.guard() as ctx:
             while True:
-                sr = self._seek(key)
+                sr = self._seek(key, ctx)
                 leaf, parent = sr.leaf, sr.parent
                 if leaf.key == key:
                     return False
@@ -100,7 +100,7 @@ class NMTree:
                 if cref is not leaf:
                     continue  # stale; re-seek
                 if cflag or ctag:
-                    self._cleanup(key, sr)  # help the pending delete, retry
+                    self._cleanup(key, sr, ctx)  # help the pending delete
                     continue
                 if new_leaf is None:
                     new_leaf = TreeNode(key, value, is_leaf=True)
@@ -119,15 +119,15 @@ class NMTree:
                 # failed: if a delete flagged/tagged this edge, help it
                 cref, cflag, ctag = child_field.get()
                 if cref is leaf and (cflag or ctag):
-                    self._cleanup(key, sr)
+                    self._cleanup(key, sr, ctx)
 
     def delete(self, key) -> bool:
         smr = self.smr
-        with smr.guard():
+        with smr.guard() as ctx:
             injected = False
             target_leaf: Optional[TreeNode] = None
             while True:
-                sr = self._seek(key)
+                sr = self._seek(key, ctx)
                 if not injected:
                     leaf = sr.leaf
                     if leaf.key != key:
@@ -139,46 +139,49 @@ class NMTree:
                                                     leaf, True, False):
                         injected = True
                         target_leaf = leaf
-                        if self._cleanup(key, sr):
+                        if self._cleanup(key, sr, ctx):
                             return True
                     else:
                         cref, cflag, ctag = child_field.get()
                         if cref is leaf and (cflag or ctag):
-                            self._cleanup(key, sr)  # help whoever is there
+                            self._cleanup(key, sr, ctx)  # help whoever
                 else:
                     # cleanup mode: our leaf is flagged; finish the removal.
                     # NOTE: tree nodes are never recycled (DESIGN.md) so the
                     # identity test below cannot be fooled by ABA.
                     if sr.leaf is not target_leaf:
                         return True  # somebody physically removed it
-                    if self._cleanup(key, sr):
+                    if self._cleanup(key, sr, ctx):
                         return True
 
     # ------------------------------------------------------------- seek
-    def _seek(self, key) -> _SeekRecord:
+    def _seek(self, key, ctx=None) -> _SeekRecord:
+        if ctx is None:
+            ctx = self.smr.ctx()
         while True:
-            out = self._seek_attempt(key)
+            out = self._seek_attempt(key, ctx)
             if out is not _RESTART:
                 return out
             self.n_restarts.fetch_add(1)
 
-    def _seek_attempt(self, key):
+    def _seek_attempt(self, key, ctx):
         smr = self.smr
         ancestor: TreeNode = self.R
         successor: TreeNode = self.S
         parent: TreeNode = self.S
-        curr, cflag, ctag = smr.protect_edge(self.S.left_ref(), S_CURR)
+        curr, cflag, ctag = smr.protect_edge(self.S.left_ref(), S_CURR, ctx)
         while curr is not None and not curr.is_leaf:
             if not ctag:
                 # edge into curr is untagged → curr is the new successor
-                smr.dup(S_PARENT, S_ANC)
+                smr.dup(S_PARENT, S_ANC, ctx)
                 ancestor = parent
-                smr.dup(S_CURR, S_SUCC)
+                smr.dup(S_CURR, S_SUCC, ctx)
                 successor = curr
-            smr.dup(S_CURR, S_PARENT)
+            smr.dup(S_CURR, S_PARENT, ctx)
             parent = curr
             go_left = key < curr.key
-            child, f, t = smr.protect_edge(curr.child_ref(go_left), S_CURR)
+            child, f, t = smr.protect_edge(curr.child_ref(go_left), S_CURR,
+                                           ctx)
             if self.scot and (f or t):
                 # SCOT validation (paper §3.3): the ancestor→successor edge
                 # must be intact and untagged, else the path may be a removed
@@ -189,11 +192,11 @@ class NMTree:
                     self.n_validation_failures.fetch_add(1)
                     return _RESTART
             curr, cflag, ctag = child, f, t
-        smr.dup(S_CURR, S_LEAF)
+        smr.dup(S_CURR, S_LEAF, ctx)
         return _SeekRecord(ancestor, successor, parent, curr)
 
     # ------------------------------------------------------------ cleanup
-    def _cleanup(self, key, sr: _SeekRecord) -> bool:
+    def _cleanup(self, key, sr: _SeekRecord, ctx=None) -> bool:
         """Physically remove the flagged leaf (and the tagged chain above it)
         with one CAS at the ancestor.  Returns True iff our CAS did it."""
         ancestor, successor, parent, leaf = sr
@@ -216,11 +219,11 @@ class NMTree:
             kref, kflag, False,        # new: kept child (flag preserved)
         )
         if ok:
-            self._retire_chain(key, successor, parent, kept=kref)
+            self._retire_chain(key, successor, parent, kept=kref, ctx=ctx)
         return ok
 
     def _retire_chain(self, key, successor: TreeNode, parent: TreeNode,
-                      kept: Optional[TreeNode]) -> None:
+                      kept: Optional[TreeNode], ctx=None) -> None:
         """Retire the unlinked chain: internal nodes successor..parent along
         the routing path plus their off-path flagged leaves (all edges in the
         removed set are permanently flagged/tagged — reads are on nodes only
@@ -229,14 +232,14 @@ class NMTree:
         node = successor
         while node is not None and node is not kept:
             if node.is_leaf:
-                smr.retire(node)
+                smr.retire(node, ctx)
                 break
             l_ref = node.left_ref_unsafe().get_ref()
             r_ref = node.right_ref_unsafe().get_ref()
             go_left = key < node._key
             nxt = l_ref if go_left else r_ref
             off = r_ref if go_left else l_ref
-            smr.retire(node)
+            smr.retire(node, ctx)
             if node is parent:
                 # off-path side here is the *kept* subtree — not ours.
                 # continue into the flagged leaf (routing side), unless the
@@ -246,7 +249,7 @@ class NMTree:
                 # middle chain node: off-path child is a flagged leaf that
                 # the winning unlinker (us) retires
                 if off is not None and off is not kept:
-                    smr.retire(off)
+                    smr.retire(off, ctx)
                 node = nxt
         # (node is kept) → done; kept subtree was relinked by the CAS
 

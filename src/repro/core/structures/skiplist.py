@@ -59,15 +59,25 @@ class SkipList:
         height = self._random_height()
         node = TowerNode(key, height, value)
         smr.alloc_stamp(node)
-        with smr.guard():
+        with smr.guard() as ctx:
             # link_pending is raised BEFORE the node becomes reachable so the
             # deletion owner can never retire a tower with an in-flight link.
             node.link_pending.fetch_add(1)
             try:
                 while True:
-                    prev, curr, found = self._find_level(key, 0, srch=False)
+                    prev, curr, found = self._find_level(key, 0, srch=False,
+                                                         ctx=ctx)
                     if found:
                         return False
+                    if curr is not None and curr.key == key:
+                        # equal-key tower that got marked between the
+                        # traversal's protect and the found-recheck: linking
+                        # in FRONT of it would hide it from its deleter's
+                        # `curr is node` check in _unlink_all, which would
+                        # then retire it while still physically linked (a
+                        # use-after-free for later traversals).  Re-find —
+                        # the retry's own traversal unlinks the dying tower.
+                        continue
                     node.next_ref(0).set(curr, False)  # unpublished yet: plain set
                     if prev.next_ref(0).compare_exchange(curr, False,
                                                          node, False):
@@ -80,7 +90,12 @@ class SkipList:
                         if node.next_ref(0).get_mark():
                             aborted = True
                             break
-                        prev, curr, _ = self._find_level(key, lvl, srch=False)
+                        prev, curr, _ = self._find_level(key, lvl,
+                                                         srch=False, ctx=ctx)
+                        if curr is not None and curr is not node \
+                                and curr.key == key:
+                            continue  # dying equal-key tower at this level:
+                            # never link in front of it (see level-0 note)
                         old, omark = node.next_ref(lvl).get()
                         if omark:
                             aborted = True
@@ -100,16 +115,17 @@ class SkipList:
                 # levels we may have extended after the mark
                 if node.next_ref(0).get_mark():
                     for lvl in range(height - 1, -1, -1):
-                        self._find_level(key, lvl, srch=False)
+                        self._find_level(key, lvl, srch=False, ctx=ctx)
             finally:
                 node.link_pending.fetch_add(-1)
             return True
 
     def delete(self, key) -> bool:
         smr = self.smr
-        with smr.guard():
+        with smr.guard() as ctx:
             while True:
-                prev, curr, found = self._find_level(key, 0, srch=False)
+                prev, curr, found = self._find_level(key, 0, srch=False,
+                                                     ctx=ctx)
                 if not found:
                     return False
                 node = curr
@@ -129,53 +145,64 @@ class SkipList:
                 if not node.next_ref(0).compare_exchange(nxt, False, nxt, True):
                     continue
                 # we own it: unlink everywhere, then retire exactly once
-                self._unlink_all(key, node)
+                self._unlink_all(key, node, ctx)
                 return True
 
     def search(self, key) -> bool:
         smr = self.smr
-        with smr.guard():
+        with smr.guard() as ctx:
             lvl = self.max_height - 1
             prev = self.head
             while lvl > 0:
                 prev, _, found = self._find_level(key, lvl, srch=True,
-                                                  start=prev)
+                                                  start=prev, ctx=ctx)
                 if found:
                     return True
                 lvl -= 1
-            _, _, found = self._find_level(key, 0, srch=True, start=prev)
+            _, _, found = self._find_level(key, 0, srch=True, start=prev,
+                                           ctx=ctx)
             return found
 
     contains = search
 
     # --------------------------------------------------------------- internals
-    def _unlink_all(self, key, node: TowerNode) -> None:
+    def _unlink_all(self, key, node: TowerNode, ctx=None) -> None:
         smr = self.smr
         while True:
             present = False
             for lvl in range(node.height - 1, -1, -1):
-                _, curr, found_at = self._find_level(key, lvl, srch=False)
+                _, curr, found_at = self._find_level(key, lvl, srch=False,
+                                                     ctx=ctx)
                 if curr is node:
                     present = True
             if not present and node.link_pending.load() == 0:
                 break
-        smr.retire(node)
+        smr.retire(node, ctx)
 
     def _find_level(self, key, lvl: int, srch: bool,
-                    start: Optional[TowerNode] = None
+                    start: Optional[TowerNode] = None, ctx=None
                     ) -> Tuple[TowerNode, Optional[TowerNode], bool]:
         """Harris find restricted to one level, with SCOT validation."""
+        if ctx is None:
+            ctx = self.smr.ctx()
         while True:
-            out = self._find_level_attempt(key, lvl, srch, start)
+            out = self._find_level_attempt(key, lvl, srch, start, ctx)
             if out is not _RESTART:
                 return out
             self.n_restarts.fetch_add(1)
             start = None  # restarts go back to the head
 
-    def _find_level_attempt(self, key, lvl, srch, start):
+    def _find_level_attempt(self, key, lvl, srch, start, ctx):
         smr = self.smr
         prev: TowerNode = start if start is not None else self.head
-        curr, _ = smr.protect(prev.next_ref(lvl), HP_CURR)
+        curr, smark = smr.protect(prev.next_ref(lvl), HP_CURR, ctx)
+        if smark and prev is not self.head:
+            # The start node carried over from the upper level has been
+            # logically deleted: it may already sit inside an unlinked
+            # chain, so the edge out of it proves nothing about `curr`
+            # (dereferencing would be the Figure-1 bug).  Restart from the
+            # head — the retry path resets start=None.
+            return _RESTART
         prev_next = curr
         while True:
             # phase 1 — safe zone
@@ -183,39 +210,40 @@ class SkipList:
                 if curr is None:
                     return self._finish_level(prev, prev_next, None, srch,
                                               key, lvl)
-                nxt, nmark = smr.protect(curr.next_ref(lvl), HP_NEXT)
+                nxt, nmark = smr.protect(curr.next_ref(lvl), HP_NEXT, ctx)
                 if nmark:
                     break
                 if curr.key >= key:
                     return self._finish_level(prev, prev_next, curr, srch,
                                               key, lvl)
-                smr.dup(HP_CURR, HP_PREV)
+                smr.dup(HP_CURR, HP_PREV, ctx)
                 prev = curr
                 prev_next = nxt
-                smr.dup(HP_NEXT, HP_CURR)
+                smr.dup(HP_NEXT, HP_CURR, ctx)
                 curr = nxt
             # phase 2 — dangerous zone
             if self.scot:
-                smr.dup(HP_CURR, HP_UNSAFE)
+                smr.dup(HP_CURR, HP_UNSAFE, ctx)
             chain_start = curr
             while True:
                 curr = nxt
                 if curr is None:
                     return self._finish_level(prev, chain_start, None, srch,
                                               key, lvl)
-                smr.dup(HP_NEXT, HP_CURR)
+                smr.dup(HP_NEXT, HP_CURR, ctx)
                 # validate BEFORE dereferencing the reserved node (Thm 1)
                 if self.scot and prev.next_ref(lvl).get() != (chain_start, False):
-                    self.n_restarts.fetch_add(0)  # counted by caller
                     return _RESTART
-                nxt, nmark = smr.protect(curr.next_ref(lvl), HP_NEXT)
+                nxt, nmark = smr.protect(curr.next_ref(lvl), HP_NEXT, ctx)
                 if not nmark:
                     break
             if curr.key >= key:
                 return self._finish_level(prev, chain_start, curr, srch,
                                           key, lvl)
-            smr.dup(HP_CURR, HP_PREV)
+            smr.dup(HP_CURR, HP_PREV, ctx)
             prev = curr
+            smr.dup(HP_NEXT, HP_CURR, ctx)   # pin nxt before Phase 1
+            # overwrites Hp0 (see harris_list.py — same slot-shift rule)
             prev_next = nxt
             curr = nxt
 

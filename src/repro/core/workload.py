@@ -95,17 +95,23 @@ def run_workload(
 
     def worker(idx: int) -> None:
         r = random.Random(seed * 7919 + idx)
+        # hoist hot attribute lookups: the loop body should measure the
+        # structure + SMR substrate, not repeated bound-method resolution
+        randrange, rand = r.randrange, r.random
+        search, insert, delete = ds.search, ds.insert, ds.delete
+        stopped = stop.is_set
+        write_p = read_p + ins_p
         local_ops = 0
         ready.wait()
-        while not stop.is_set():
-            k = r.randrange(key_range)
-            p = r.random()
+        while not stopped():
+            k = randrange(key_range)
+            p = rand()
             if p < read_p:
-                ds.search(k)
-            elif p < read_p + ins_p:
-                ds.insert(k)
+                search(k)
+            elif p < write_p:
+                insert(k)
             else:
-                ds.delete(k)
+                delete(k)
             local_ops += 1
         ops[idx] = local_ops
 

@@ -46,7 +46,10 @@ class PageNode(SmrNode):
         self.page_id = page_id
         self.pin_count = AtomicInt(0)   # fresh object: stale unpins are inert
         self.seq_id = None
-        self._plock = threading.Lock()
+        # _plock is deliberately REUSED across incarnations: a stale holder
+        # still serializes against the new lifetime (swapping the lock object
+        # would let old and new holders interleave), and recycling skips a
+        # Lock allocation per page churn.
 
 
 class OutOfPagesError(RuntimeError):

@@ -67,8 +67,8 @@ class PrefixCache:
         for np_ in range(n_pages, 0, -1):
             key = _prefix_key(tokens[: np_ * self.page_size])
             bucket = self._bucket(key)
-            with self.smr.guard():
-                _, node, found = bucket._find(key, srch=True)
+            with self.smr.guard() as ctx:
+                _, node, found = bucket._find(key, srch=True, ctx=ctx)
                 if not found:
                     continue
                 pages = list(node.value)  # entry node protected ⇒ safe read
@@ -130,8 +130,8 @@ class PrefixCache:
     def evict(self, key: int) -> bool:
         bucket = self._bucket(key)
         # read the entry's value under protection, then delete
-        with self.smr.guard():
-            _, node, found = bucket._find(key, srch=True)
+        with self.smr.guard() as ctx:
+            _, node, found = bucket._find(key, srch=True, ctx=ctx)
             pages = list(node.value) if found else []
         if bucket.delete(key):
             self.n_entries.fetch_add(-1)

@@ -51,12 +51,17 @@ class Request:
 
 
 class _Seq:
-    def __init__(self, req: Request, pages: List[PageNode], owned_from: int):
+    def __init__(self, req: Request, pages: List[PageNode], owned_from: int,
+                 page_row: "np.ndarray"):
         self.req = req
         self.pages = pages              # full block run (shared prefix + owned)
         self.owned_from = owned_from    # pages[owned_from:] are owned
         self.tokens = list(req.prompt)
         self.new_tokens = 0
+        # block-table row is fixed for the sequence's lifetime (pages are
+        # allocated up front at admission) — precomputed once, reused every
+        # decode step instead of re-walking the page list
+        self.page_row = page_row
 
 
 class PagedServingEngine:
@@ -217,10 +222,10 @@ class PagedServingEngine:
                 with self._wlock:
                     self._waiting.insert(0, req)
                 return
-            seq = _Seq(req, pages, owned_from)
             page_ids = np.zeros((self.max_pages,), np.int32)
             for j, pg in enumerate(pages):
                 page_ids[j] = pg.page_id
+            seq = _Seq(req, pages, owned_from, page_ids)
             logits, self.k_pages, self.v_pages = self._prefill(
                 self.params, self.k_pages, self.v_pages,
                 jnp.asarray([req.prompt], jnp.int32),
@@ -250,8 +255,7 @@ class PagedServingEngine:
         ctx = np.ones((self.max_batch,), np.int32)  # dummy rows: ctx=1
         toks = np.zeros((self.max_batch, 1), np.int32)
         for i, seq in enumerate(self._active):
-            for j, pg in enumerate(seq.pages):
-                bt[i, j] = pg.page_id
+            bt[i, :] = seq.page_row
             ctx[i] = len(seq.tokens)
             toks[i, 0] = seq.tokens[-1]
         logits, self.k_pages, self.v_pages = self._decode(

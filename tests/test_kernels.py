@@ -6,8 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based kernel tests need the optional hypothesis package")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention

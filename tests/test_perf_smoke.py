@@ -1,0 +1,41 @@
+"""Perf smoke: guard the lock-free read path against silent serialization.
+
+Not a benchmark — thresholds are orders of magnitude below the measured
+numbers (the packed substrate does ~10k+ ops/s under 2 threads in CI; the
+floor here is 500/s) so only a catastrophic regression (e.g. a lock creeping
+back into ``AtomicMarkableRef.get`` or ``protect`` resolving thread-locals
+per pointer) trips it.  BENCH_ATOMICS.json / BENCH_PAPER.json carry the real
+trajectory.
+"""
+
+import timeit
+
+from repro.core.atomics import AtomicMarkableRef
+from repro.core.workload import run_workload
+
+
+def test_workload_smoke_throughput_and_bounded_garbage():
+    res = run_workload("HList", "EBR", threads=2, key_range=128,
+                       workload="50r-50w", duration_s=0.2, seed=1)
+    assert res.total_ops > 100, f"read path serialized? {res.total_ops} ops"
+    assert res.mops_per_s * 1e6 > 500
+    # reclamation keeps up: retired-but-unfreed stays far below total ops
+    assert res.max_not_reclaimed < 5000, res.max_not_reclaimed
+    assert res.smr_stats["retired"] >= res.smr_stats["reclaimed"]
+
+
+def test_robust_scheme_smoke():
+    res = run_workload("HList", "IBR", threads=2, key_range=128,
+                       workload="50r-50w", duration_s=0.2, seed=2)
+    assert res.total_ops > 100
+    assert res.max_not_reclaimed < 5000, res.max_not_reclaimed
+
+
+def test_read_word_is_lock_free_fast():
+    """A packed-word get() must stay within ~an attribute load of free:
+    >1M reads/s even on the slowest CI box (seed's locked get was ~3M/s on
+    a dev box, packed ~13M/s; the 1M floor only catches re-serialization)."""
+    cell = AtomicMarkableRef(object(), False)
+    n = 100_000
+    secs = timeit.timeit(cell.get, number=n)
+    assert n / secs > 1_000_000, f"get() at {n / secs:.0f}/s — lock is back?"

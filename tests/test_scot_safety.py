@@ -111,6 +111,20 @@ def test_nmtree_with_scot_is_safe(scheme):
     assert err is None, f"SCOT NM tree hit {err!r} under {scheme}"
 
 
+@pytest.mark.parametrize("scheme", ["HP", "IBR"])
+def test_skiplist_with_scot_is_safe(scheme):
+    """Regression for two seed bugs: (a) the phase-2→phase-1 slot shift
+    dropped the pin on the new curr (also fixed in HarrisList), and (b)
+    insert could link a new tower in front of a just-marked equal-key tower,
+    hiding it from its deleter's _unlink_all — which then retired it while
+    still physically linked."""
+    from repro.core.structures.skiplist import SkipList
+    smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+    ds = SkipList(smr, scot=True, seed=11)
+    err = _hammer(ds, key_range=16, duration_s=2.5)
+    assert err is None, f"SCOT skip list hit {err!r} under {scheme}"
+
+
 def test_recovery_equivalent_safety():
     """§3.2.1 recovery (ring buffer) preserves safety under IBR/HLN."""
     for scheme in ["IBR", "HLN"]:

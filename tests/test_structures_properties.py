@@ -3,8 +3,13 @@ like a set under arbitrary sequential op interleavings, and SMR bookkeeping
 invariants hold throughout."""
 
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property-based structure tests need the optional hypothesis "
+           "package")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import make_scheme
 from repro.core.structures.harris_list import HarrisList
