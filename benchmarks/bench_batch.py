@@ -1,0 +1,160 @@
+"""Operation-batching benchmarks: the amortize-the-guard PR's numbers.
+
+Three probes, each with an in-process sequential baseline so the speedup
+ratios in the JSON snapshots are self-contained (same convention as
+``bench_atomics``):
+
+* ``search_many`` — K keys per batch through the Harris list under HP /
+  IBR / EBR, vs the same K keys op-at-a-time.  Measures the two batched
+  savings together: one guard scope per batch (one epoch publish / slot
+  sweep instead of K) and the sorted *resumed* traversal (≈ one list walk
+  per batch instead of K head restarts).
+* ``insert+delete cycle`` — write-path batching (one guard, resumed finds,
+  coalesced retire ticks) vs op-at-a-time.
+* ``prefix_lookup`` — the serving admission path.  The sequential baseline
+  is a faithful replica of the pre-PR per-candidate loop (rehashes the
+  prefix from scratch per candidate length = O(n²) in prompt tokens, one
+  guard per candidate); the live path hashes once and resolves all
+  candidates under one guard.  Measured for the *hot* full hit (both paths
+  stop at the first candidate — isolates guard+hash amortization) and the
+  *partial* hit (short cached prefix under a long prompt — where the O(n²)
+  rehash and per-candidate guards actually bite).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterator
+
+from repro.core.smr import make_scheme
+from repro.core.structures.harris_list import HarrisList
+from repro.runtime.block_pool import BlockPool
+from repro.runtime.prefix_cache import PrefixCache, _prefix_key
+
+K = 8  # batch size for the *_many probes
+
+
+def _row(name: str, per_op_s: float, extra: str = "") -> str:
+    us = per_op_s * 1e6
+    mops = 1.0 / per_op_s / 1e6 if per_op_s > 0 else 0.0
+    derived = f"mops={mops:.4f}" + (f";{extra}" if extra else "")
+    return f"{name},{us:.4f},{derived}"
+
+
+def _legacy_lookup(cache: PrefixCache, tokens):
+    """Replica of the pre-batching ``PrefixCache.lookup``: per-candidate
+    hash recomputation and one guard per candidate length."""
+    best = ([], 0)
+    n_pages = len(tokens) // cache.page_size
+    for np_ in range(n_pages, 0, -1):
+        key = _prefix_key(tokens[: np_ * cache.page_size])
+        bucket = cache._bucket(key)
+        with cache.smr.guard() as ctx:
+            node = bucket.get_node(key, ctx)
+            if node is None:
+                continue
+            pages = list(node.value)
+            for p in pages:
+                cache.pool.pin(p)
+            if node.next_ref().get_mark():
+                for p in pages:
+                    cache.pool.unpin(p)
+                continue
+            best = (pages, np_ * cache.page_size)
+            break
+    return best
+
+
+def bench_batch(quick: bool = True) -> Iterator[str]:
+    key_range = 512
+    n_rounds = 120 if quick else 1200
+
+    # ---- search: sequential vs search_many(K) per scheme ----------------
+    import random
+    for scheme_name in ("HP", "IBR", "EBR"):
+        smr = make_scheme(scheme_name)
+        ds = HarrisList(smr)
+        for k in range(0, key_range, 2):
+            ds.insert(k)
+        r = random.Random(17)
+        batches = [sorted(r.randrange(key_range) for _ in range(K))
+                   for _ in range(n_rounds)]
+
+        search = ds.search
+        t0 = time.perf_counter()
+        for batch in batches:
+            for k in batch:
+                search(k)
+        t_seq = (time.perf_counter() - t0) / (n_rounds * K)
+
+        search_many = ds.search_many
+        t0 = time.perf_counter()
+        for batch in batches:
+            search_many(batch)
+        t_many = (time.perf_counter() - t0) / (n_rounds * K)
+
+        yield _row(f"batch/search_seq-HList-{scheme_name}", t_seq)
+        yield _row(f"batch/search_many-K{K}-HList-{scheme_name}", t_many,
+                   f"speedup={t_seq / t_many:.2f}x")
+
+    # ---- write path: insert+delete cycle, sequential vs batched ---------
+    smr = make_scheme("IBR")
+    ds = HarrisList(smr)
+    r = random.Random(23)
+    cycles = [sorted(r.sample(range(key_range), K))
+              for _ in range(max(1, n_rounds // 2))]
+
+    t0 = time.perf_counter()
+    for batch in cycles:
+        for k in batch:
+            ds.insert(k)
+        for k in batch:
+            ds.delete(k)
+    t_seq = (time.perf_counter() - t0) / (len(cycles) * 2 * K)
+
+    t0 = time.perf_counter()
+    for batch in cycles:
+        ds.insert_many(batch)
+        ds.delete_many(batch)
+    t_many = (time.perf_counter() - t0) / (len(cycles) * 2 * K)
+
+    yield _row("batch/insdel_seq-HList-IBR", t_seq)
+    yield _row(f"batch/insdel_many-K{K}-HList-IBR", t_many,
+               f"speedup={t_seq / t_many:.2f}x")
+
+    # ---- prefix cache: legacy per-candidate loop vs single-pass ---------
+    page_size = 8
+    n_prompt_pages = 24
+    smr = make_scheme("IBR")
+    pool = BlockPool(smr, n_prompt_pages + 8)
+    cache = PrefixCache(smr, pool, page_size, num_buckets=64,
+                        max_entries=4096)
+    r = random.Random(31)
+    tokens = [r.randrange(1000) for _ in range(n_prompt_pages * page_size)]
+    pages = [pool.alloc(0) for _ in range(n_prompt_pages)]
+    cache.insert(tokens, pages)
+    # partial-hit prompt: shares only the first page, then diverges
+    partial = tokens[:page_size] + [7777] * ((n_prompt_pages - 1) * page_size)
+    reps = n_rounds * 4  # lookups are ~100us; keep the window >> timer jitter
+
+    for tag, prompt in (("hit", tokens), ("partial", partial)):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            got, _ = _legacy_lookup(cache, prompt)
+            for p in got:
+                pool.unpin(p)
+        t_legacy = (time.perf_counter() - t0) / reps
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            got, _ = cache.lookup(prompt)
+            for p in got:
+                pool.unpin(p)
+        t_single = (time.perf_counter() - t0) / reps
+
+        yield _row(f"batch/prefix_lookup_percand-{tag}", t_legacy)
+        yield _row(f"batch/prefix_lookup_singlepass-{tag}", t_single,
+                   f"speedup={t_legacy / t_single:.2f}x")
+
+
+ALL = {"batch": bench_batch}

@@ -40,32 +40,44 @@ def main() -> None:
                     help="paper-scale grid (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench families "
-                         "(atomics,paper,kernels,serving)")
+                         "(atomics,batch,paper,kernels,serving)")
     ap.add_argument("--workload", default="50r-50w",
                     choices=["50r-50w", "90r-10w", "0r-100w"],
                     help="workload mix for fig8/fig9 (appendix figures)")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write results as JSON to OUT (one file; "
                          "rows grouped by bench family)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="compare the rows measured in this run against a "
+                         "previously written --json snapshot and exit "
+                         "non-zero if any shared row regressed by an order "
+                         "of magnitude (us_per_call ratio >= 10x); rows "
+                         "only on one side are ignored")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else \
-        {"atomics", "paper", "kernels", "serving"}
+        {"atomics", "batch", "paper", "kernels", "serving"}
 
     print("name,us_per_call,derived")
     t0 = time.time()
     families: dict = {}
+    collect = bool(args.json or args.compare)
 
     def emit(family: str, row: str) -> None:
         print(row)
         sys.stdout.flush()
-        if args.json:
+        if collect:
             families.setdefault(family, []).append(_parse_row(row))
 
     if "atomics" in only:
         from .bench_atomics import bench_atomics
         for row in bench_atomics(quick=quick):
             emit("atomics", row)
+
+    if "batch" in only:
+        from .bench_batch import bench_batch
+        for row in bench_batch(quick=quick):
+            emit("batch", row)
 
     if "paper" in only:
         from . import bench_paper as bp
@@ -102,6 +114,32 @@ def main() -> None:
         print(f"# wrote {args.json}", file=sys.stderr)
 
     print(f"# total_wall_s={wall:.1f}", file=sys.stderr)
+
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        regressions = []
+        compared = 0
+        for fam, rows in families.items():
+            base_rows = {r["name"]: r
+                         for r in baseline.get("families", {}).get(fam, [])}
+            for r in rows:
+                b = base_rows.get(r["name"])
+                if not b or b.get("us_per_call", 0) <= 0:
+                    continue
+                compared += 1
+                ratio = r["us_per_call"] / b["us_per_call"]
+                if ratio >= 10.0:
+                    regressions.append(
+                        f"{r['name']}: {b['us_per_call']:.4f}us -> "
+                        f"{r['us_per_call']:.4f}us ({ratio:.1f}x)")
+        print(f"# compare: {compared} shared rows vs {args.compare}, "
+              f"{len(regressions)} order-of-magnitude regressions",
+              file=sys.stderr)
+        for line in regressions:
+            print(f"# REGRESSION {line}", file=sys.stderr)
+        if regressions:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Safe memory reclamation schemes (paper §2.2, §5)."""
 
-from .base import Guard, SmrScheme, ThreadCtx
+from .base import BatchGuard, Guard, SmrScheme, ThreadCtx
 from .ebr import EBR
 from .he import HE
 from .hp import HP
@@ -27,6 +27,7 @@ def make_scheme(name: str, **kwargs) -> SmrScheme:
 
 
 __all__ = [
+    "BatchGuard",
     "Guard",
     "SmrScheme",
     "ThreadCtx",

@@ -28,12 +28,23 @@ Hot-path bookkeeping is thread-local and amortized: slot clearing in
 ``end_op`` walks only up to the operation's high-water mark (``ctx.hwm``),
 and retire-scan / era-tick triggers are plain countdown ints rather than
 modulo arithmetic over shared counters.
+
+Batching (DESIGN.md §4): ``guard_batch(k)`` opens ONE operation scope that
+covers *k* logical operations — one ``ThreadCtx`` resolution, one
+reservation lifecycle (one epoch publish for EBR, one interval for
+IBR/Hyaline-1S, one slot-clear sweep for HP/HE) instead of k of each.
+``retire_batch`` hands a whole unlinked chain to the scheme with a single
+era read, a single coalesced era tick, and at most one retire scan.  The
+cost side of the amortization: reservations live until the *batch* ends, so
+a batch pins garbage for k operations' worth of time instead of one — the
+DEBRA/Hyaline trade (bounded by the caller's batch size, not by stalls).
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, List, Optional, Tuple
+from contextlib import nullcontext
+from typing import Callable, ContextManager, Dict, List, Optional, Tuple
 
 from ..atomics import (
     AtomicFlaggedRef,
@@ -43,7 +54,7 @@ from ..atomics import (
     SmrNode,
 )
 
-__all__ = ["ThreadCtx", "SmrScheme", "Guard"]
+__all__ = ["ThreadCtx", "SmrScheme", "Guard", "BatchGuard"]
 
 
 class ThreadCtx:
@@ -64,6 +75,9 @@ class ThreadCtx:
         "pending",      # Hyaline: this thread's unsealed retired nodes
         "inbox",        # Hyaline: batches this thread must release
         "inbox_lock",
+        "scratch",      # reusable scan buffers (hazard snapshot staging);
+        "scratch2",     # owned by this thread's scans, cleared after use
+        "scratch_set",
         # -- counters (thread-local, summed on demand; no contention) ------
         "n_retired",
         "n_reclaimed",
@@ -87,6 +101,9 @@ class ThreadCtx:
         self.pending: List[SmrNode] = []
         self.inbox: List[object] = []
         self.inbox_lock = threading.Lock()
+        self.scratch: List = []
+        self.scratch2: List = []
+        self.scratch_set: set = set()
         self.n_retired = 0
         self.n_reclaimed = 0
         self.n_barriers = 0
@@ -115,6 +132,30 @@ class Guard:
         self._smr.end_op(self._ctx)
         self._ctx = None
         return False
+
+
+class BatchGuard(Guard):
+    """``with smr.guard_batch(k) as ctx: ...`` — ONE operation scope shared
+    by *k* logical operations (DESIGN.md §4).
+
+    Exactly one ``begin_op``-equivalent on entry and one ``end_op`` on exit:
+    the thread ctx is resolved once, the reservation lifecycle (epoch publish
+    / interval / hazard-slot sweep) happens once, and ``op_count`` advances
+    by k so throughput accounting still reflects logical operations.  All
+    reservations taken inside the scope survive until the batch exits — the
+    amortization trades k-times-longer garbage pinning for k-times-fewer
+    scope transitions.
+    """
+
+    __slots__ = ("_n",)
+
+    def __init__(self, smr: "SmrScheme", n: int = 1):
+        super().__init__(smr)
+        self._n = n
+
+    def __enter__(self) -> ThreadCtx:
+        self._ctx = c = self._smr.begin_batch(self._n)
+        return c
 
 
 class SmrScheme:
@@ -209,11 +250,26 @@ class SmrScheme:
     def guard(self) -> Guard:
         return Guard(self)
 
+    def guard_batch(self, n: int = 1) -> BatchGuard:
+        """One operation scope amortized over ``n`` logical operations."""
+        return BatchGuard(self, n)
+
+    def scope(self, ctx: Optional[ThreadCtx],
+              n: int = 1) -> ContextManager[ThreadCtx]:
+        """Batch-entry-point helper: reuse the caller's already-open scope
+        (``ctx`` is not None) or open a fresh ``guard_batch(n)``."""
+        return nullcontext(ctx) if ctx is not None else self.guard_batch(n)
+
     # ----------------------------------------------------------- op scope
     def begin_op(self) -> ThreadCtx:
+        return self.begin_batch(1)
+
+    def begin_batch(self, n: int = 1) -> ThreadCtx:
+        """Like :meth:`begin_op` but accounts ``n`` logical operations under
+        the single reservation lifecycle (see :class:`BatchGuard`)."""
         c = self.ctx()
         c.active = True
-        c.op_count += 1
+        c.op_count += n
         self._on_begin(c)
         return c
 
@@ -307,19 +363,54 @@ class SmrScheme:
         c.retired.append(node)
         self._maybe_scan(c)
 
+    def retire_batch(self, nodes: List[SmrNode],
+                     ctx: Optional[ThreadCtx] = None) -> None:
+        """Retire a whole unlinked chain at once: one era read for the
+        retire stamps, one coalesced era tick, at most one retire scan —
+        instead of per-node clock traffic (DESIGN.md §4)."""
+        if not nodes:
+            return
+        for node in nodes:
+            assert node is not None
+            if node._retired:  # double-retire is a data-structure bug
+                raise AssertionError(f"double retire of node {node.node_id}")
+            node._retired = True
+        c = ctx if ctx is not None else self.ctx()
+        c.n_retired += len(nodes)
+        self._on_retire_batch(c, nodes)
+
+    def _on_retire_batch(self, c: ThreadCtx, nodes: List[SmrNode]) -> None:
+        # HP-style default: no era stamping, one countdown step per node but
+        # a single scan trigger check for the whole chain.
+        c.retired.extend(nodes)
+        self._maybe_scan_n(c, len(nodes))
+
     def _maybe_scan(self, c: ThreadCtx) -> None:
         """Amortized retire-scan trigger (thread-local countdown)."""
-        c.scan_countdown -= 1
+        self._maybe_scan_n(c, 1)
+
+    def _maybe_scan_n(self, c: ThreadCtx, n: int) -> None:
+        """Coalesced countdown: n retirements, at most one scan."""
+        c.scan_countdown -= n
         if c.scan_countdown <= 0:
             c.scan_countdown = self.retire_scan_freq
             self._scan(c)
 
     def _retire_stamped(self, c: ThreadCtx, node: SmrNode) -> None:
         """Shared ``_on_retire`` body for era-stamping schemes (EBR/HE/IBR)."""
-        node.retire_era = self.era.load()
-        c.retired.append(node)
-        self._tick_era(c)
-        self._maybe_scan(c)
+        self._retire_stamped_batch(c, (node,))
+
+    def _retire_stamped_batch(self, c: ThreadCtx, nodes: List[SmrNode]) -> None:
+        """Batch body for era-stamping schemes: one clock read stamps the
+        whole chain (all nodes were unlinked by the same CAS, so a shared
+        retire era is exact, not an approximation), one coalesced era tick,
+        at most one scan."""
+        e = self.era.load()
+        for node in nodes:
+            node.retire_era = e
+        c.retired.extend(nodes)
+        self._tick_era_n(c, len(nodes))
+        self._maybe_scan_n(c, len(nodes))
 
     def _scan(self, c: ThreadCtx) -> None:  # pragma: no cover - overridden
         pass
@@ -333,7 +424,12 @@ class SmrScheme:
 
     # maybe advance the global era/epoch clock (amortized, paper §5)
     def _tick_era(self, c: ThreadCtx) -> None:
-        c.era_countdown -= 1
+        self._tick_era_n(c, 1)
+
+    def _tick_era_n(self, c: ThreadCtx, n: int) -> None:
+        """Coalesced era tick: n retirements advance the clock at most once
+        (a chain unlinked by one CAS is one reclamation event, not n)."""
+        c.era_countdown -= n
         if c.era_countdown <= 0:
             c.era_countdown = self.epoch_freq
             self.era.fetch_add(1)

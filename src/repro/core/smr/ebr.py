@@ -30,14 +30,21 @@ class EBR(SmrScheme):
     def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
         self._retire_stamped(c, node)
 
+    def _on_retire_batch(self, c: ThreadCtx, nodes) -> None:
+        self._retire_stamped_batch(c, nodes)
+
     def _scan(self, c: ThreadCtx) -> None:
+        # the epoch snapshot was already a single min(); the fast path here
+        # is the in-place compaction (no per-scan keep-list allocation)
         c.n_scans += 1
         active = [t.epoch for t in self.all_ctxs() if t.epoch is not None]
         min_epoch = min(active) if active else self.era.load() + 1
-        keep = []
-        for node in c.retired:
+        retired = c.retired
+        w = 0
+        for node in retired:
             if node.retire_era < min_epoch:
                 self._free(c, node)
             else:
-                keep.append(node)
-        c.retired = keep
+                retired[w] = node
+                w += 1
+        del retired[w:]

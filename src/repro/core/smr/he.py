@@ -9,6 +9,8 @@ falls inside its lifetime interval.  Same index discipline as HP, so SCOT's
 
 from __future__ import annotations
 
+from bisect import bisect_left
+
 from .base import SmrScheme, ThreadCtx
 from ..atomics import AtomicFlaggedRef, AtomicMarkableRef, AtomicRef, SmrNode
 
@@ -54,17 +56,33 @@ class HE(SmrScheme):
     def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
         self._retire_stamped(c, node)
 
+    def _on_retire_batch(self, c: ThreadCtx, nodes) -> None:
+        self._retire_stamped_batch(c, nodes)
+
     def _scan(self, c: ThreadCtx) -> None:
+        """Set-based fast path: snapshot all published eras ONCE into a
+        sorted scratch list, then answer "any era inside [birth, retire]?"
+        per node with a bisect — O((E+R)·log E) instead of the O(R·E)
+        per-node membership loop.  The retired list compacts in place."""
         c.n_scans += 1
-        eras = []
+        eras = c.scratch
+        eras.clear()
         for t in self.all_ctxs():
             for s in t.slots:
                 if s is not None:
                     eras.append(s)
-        keep = []
-        for node in c.retired:
-            if any(node.birth_era <= e <= node.retire_era for e in eras):
-                keep.append(node)
+        eras.sort()
+        n_eras = len(eras)
+        retired = c.retired
+        w = 0
+        for node in retired:
+            # smallest published era >= birth; node is pinned iff it also
+            # falls at or below retire (equivalent to any(birth<=e<=retire))
+            i = bisect_left(eras, node.birth_era)
+            if i < n_eras and eras[i] <= node.retire_era:
+                retired[w] = node
+                w += 1
             else:
                 self._free(c, node)
-        c.retired = keep
+        del retired[w:]
+        eras.clear()

@@ -62,17 +62,24 @@ class HP(SmrScheme):
 
     # ------------------------------------------------------------- retire
     def _scan(self, c: ThreadCtx) -> None:
+        """Set-based fast path: the hazard snapshot is built ONCE into a
+        reusable per-thread scratch set, and the retired list is compacted
+        in place (no per-scan ``keep`` list allocation)."""
         c.n_scans += 1
-        hazards = set()
+        hazards = c.scratch_set
+        hazards.clear()
         for t in self.all_ctxs():
             # ascending slot order — pairs with the ascending `dup` rule
             for s in t.slots:
                 if s is not None:
                     hazards.add(id(s))
-        keep = []
-        for node in c.retired:
+        retired = c.retired
+        w = 0
+        for node in retired:
             if id(node) in hazards:
-                keep.append(node)
+                retired[w] = node
+                w += 1
             else:
                 self._free(c, node)
-        c.retired = keep
+        del retired[w:]
+        hazards.clear()

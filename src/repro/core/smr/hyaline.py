@@ -82,6 +82,20 @@ class Hyaline1S(SmrScheme):
             self._seal(c, pending)
             c.pending = []
 
+    def _on_retire_batch(self, c: ThreadCtx, nodes) -> None:
+        # whole chain joins the pending batch under ONE era read and one
+        # coalesced tick; an oversize batch seals as a single unit (the
+        # distribution-of-release semantics don't care about batch size)
+        e = self.era.load()
+        pending = c.pending
+        for node in nodes:
+            node.retire_era = e
+            pending.append(node)
+        self._tick_era_n(c, len(nodes))
+        if len(pending) >= self.batch_size:
+            self._seal(c, pending)
+            c.pending = []
+
     def _seal(self, c: ThreadCtx, nodes: List[SmrNode]) -> None:
         if not nodes:
             return

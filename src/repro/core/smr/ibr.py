@@ -10,6 +10,8 @@ frozen upper bound only pins nodes *born before* its stall.
 
 from __future__ import annotations
 
+from bisect import bisect_right
+
 from .base import SmrScheme, ThreadCtx
 from ..atomics import AtomicFlaggedRef, AtomicMarkableRef, AtomicRef, SmrNode
 
@@ -51,17 +53,42 @@ class IBR(SmrScheme):
     def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
         self._retire_stamped(c, node)
 
+    def _on_retire_batch(self, c: ThreadCtx, nodes) -> None:
+        self._retire_stamped_batch(c, nodes)
+
     def _scan(self, c: ThreadCtx) -> None:
+        """Set-based fast path: snapshot the reservation intervals ONCE into
+        sorted scratch arrays (lowers ascending, running max of uppers), then
+        each node's overlap test — "∃ [lo,hi]: lo ≤ retire AND hi ≥ birth" —
+        is a bisect over the lowers plus one prefix-max lookup, instead of
+        the O(threads) membership loop per retired node.  Compacts the
+        retired list in place."""
         c.n_scans += 1
-        intervals = [
-            (t.lower, t.upper)
-            for t in self.all_ctxs()
-            if t.active and t.lower > 0
-        ]
-        keep = []
-        for node in c.retired:
-            if any(lo <= node.retire_era and hi >= node.birth_era for lo, hi in intervals):
-                keep.append(node)
+        intervals = c.scratch
+        max_hi = c.scratch2
+        intervals.clear()
+        max_hi.clear()
+        for t in self.all_ctxs():
+            if t.active and t.lower > 0:
+                intervals.append((t.lower, t.upper))
+        intervals.sort()
+        running = 0
+        for _, hi in intervals:
+            running = hi if hi > running else running
+            max_hi.append(running)
+        inf = float("inf")
+        retired = c.retired
+        w = 0
+        for node in retired:
+            # intervals with lo <= retire_era are intervals[:i] (the inf
+            # sentinel makes the probe compare on lo alone); the node is
+            # pinned iff the widest of their uppers reaches back to birth
+            i = bisect_right(intervals, (node.retire_era, inf))
+            if i and max_hi[i - 1] >= node.birth_era:
+                retired[w] = node
+                w += 1
             else:
                 self._free(c, node)
-        c.retired = keep
+        del retired[w:]
+        intervals.clear()
+        max_hi.clear()

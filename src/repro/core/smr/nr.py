@@ -15,5 +15,8 @@ class NR(SmrScheme):
         # Leak: count it, never free.
         c.retired.append(node)
 
+    def _on_retire_batch(self, c: ThreadCtx, nodes) -> None:
+        c.retired.extend(nodes)  # leak the whole chain, no scan trigger
+
     def _on_end(self, c: ThreadCtx) -> None:
         pass

@@ -36,6 +36,7 @@ from typing import Optional, Tuple
 
 from ..atomics import AtomicInt, Recycler, UseAfterFreeError
 from ..smr.base import SmrScheme
+from .batched import BatchedListOps
 from .node import ListNode
 
 HP_NEXT = 0   # Hp0
@@ -46,8 +47,13 @@ HP_UNSAFE = 3  # Hp3 — first unsafe node (SCOT's extra slot)
 _RESTART = object()  # sentinel: full restart requested
 
 
-class HarrisList:
-    """Lock-free ordered set with optimistic (read-only) search."""
+class HarrisList(BatchedListOps):
+    """Lock-free ordered set with optimistic (read-only) search.
+
+    Batched entry points (``search_many``/``insert_many``/``delete_many``/
+    ``get_node``/``get_nodes``/``pop``) come from :class:`BatchedListOps`;
+    this class supplies the resumable ``_find`` and the single-op bodies
+    (``_insert_from``/``_delete_from``) they are built from."""
 
     HP_SLOTS = 4
 
@@ -77,42 +83,61 @@ class HarrisList:
         self.n_validation_failures = AtomicInt()
 
     # ------------------------------------------------------------------ API
-    def insert(self, key, value=None) -> bool:
+    def insert(self, key, value=None, ctx=None) -> bool:
+        with self.smr.scope(ctx) as c:
+            return self._insert_from(key, value, c)[0]
+
+    def _insert_from(self, key, value, ctx, hint=None
+                     ) -> Tuple[bool, ListNode]:
+        """Insert body under the caller's guard; traversal resumes from
+        ``hint`` (see batched.py for the pinning argument).  Returns
+        (inserted, prev) — prev seeds the next batched operation."""
         smr = self.smr
         new = None
-        with smr.guard() as ctx:
-            while True:
-                prev, curr, found = self._find(key, srch=False, ctx=ctx)
-                if found:
-                    return False
-                if new is None:
-                    if self.recycler is not None:
-                        new = self.recycler.alloc(key, value)
-                    else:
-                        new = ListNode(key, value)
-                    smr.alloc_stamp(new)
-                new.next_ref().set(curr, False)
-                if prev.next_ref().compare_exchange(curr, False, new, False):
-                    return True
-                # CAS failed — someone raced; re-find and retry with same node
+        while True:
+            prev, curr, found = self._find(key, srch=False, ctx=ctx,
+                                           start=hint)
+            hint = prev
+            if found:
+                return False, prev
+            if new is None:
+                if self.recycler is not None:
+                    new = self.recycler.alloc(key, value)
+                else:
+                    new = ListNode(key, value)
+                smr.alloc_stamp(new)
+            new.next_ref().set(curr, False)
+            if prev.next_ref().compare_exchange(curr, False, new, False):
+                return True, prev
+            # CAS failed — someone raced; re-find and retry with same node
 
-    def delete(self, key) -> bool:
+    def delete(self, key, ctx=None) -> bool:
+        with self.smr.scope(ctx) as c:
+            return self._delete_from(key, c)[0]
+
+    def _delete_from(self, key, ctx, hint=None
+                     ) -> Tuple[bool, ListNode, Optional[ListNode]]:
+        """Delete body under the caller's guard, resuming from ``hint``.
+        Returns (deleted, prev, node): ``node`` is the node WE logically
+        deleted (exactly-once ownership via the mark CAS), still
+        dereferenceable while the caller's guard is open."""
         smr = self.smr
-        with smr.guard() as ctx:
-            while True:
-                prev, curr, found = self._find(key, srch=False, ctx=ctx)
-                if not found:
-                    return False
-                nxt, nmark = curr.next_ref().get()
-                if nmark:
-                    continue  # concurrently deleted; re-find (helps unlink)
-                # logical deletion (paper Fig 2 L25)
-                if not curr.next_ref().compare_exchange(nxt, False, nxt, True):
-                    continue
-                # one physical-unlink attempt (Fig 2 L26); else leave to others
-                if prev.next_ref().compare_exchange(curr, False, nxt, False):
-                    smr.retire(curr, ctx)
-                return True
+        while True:
+            prev, curr, found = self._find(key, srch=False, ctx=ctx,
+                                           start=hint)
+            hint = prev
+            if not found:
+                return False, prev, None
+            nxt, nmark = curr.next_ref().get()
+            if nmark:
+                continue  # concurrently deleted; re-find (helps unlink)
+            # logical deletion (paper Fig 2 L25)
+            if not curr.next_ref().compare_exchange(nxt, False, nxt, True):
+                continue
+            # one physical-unlink attempt (Fig 2 L26); else leave to others
+            if prev.next_ref().compare_exchange(curr, False, nxt, False):
+                smr.retire(curr, ctx)
+            return True, prev, curr
 
     def search(self, key) -> bool:
         """Read-only optimistic search — zero CAS (the Harris-vs-HM win)."""
@@ -123,23 +148,29 @@ class HarrisList:
     contains = search
 
     # ------------------------------------------------------- SCOT Do_Find
-    def _find(self, key, srch: bool, ctx=None
+    def _find(self, key, srch: bool, ctx=None, start=None
               ) -> Tuple[ListNode, Optional[ListNode], bool]:
         if ctx is None:
             ctx = self.smr.ctx()
         while True:
-            out = self._find_attempt(key, srch, ctx)
+            out = self._find_attempt(key, srch, ctx, start)
             if out is not _RESTART:
                 return out
+            start = None  # restarts go back to the head
             self.n_restarts.fetch_add(1)
 
-    def _find_attempt(self, key, srch: bool, ctx):
+    def _find_attempt(self, key, srch: bool, ctx, start=None):
         smr = self.smr
         cumulative = smr.cumulative_protection
         ring = [] if (self.recovery and cumulative) else None
 
-        prev: ListNode = self.head
-        curr, _ = smr.protect(self.head.next_ref(), HP_CURR, ctx)
+        prev: ListNode = start if start is not None else self.head
+        curr, smark = smr.protect(prev.next_ref(), HP_CURR, ctx)
+        if smark and prev is not self.head:
+            # the resumed-from hint has been logically deleted: the edge out
+            # of it proves nothing about its successor (it may sit inside an
+            # unlinked chain) — restart from the head
+            return _RESTART
         prev_next = curr  # value last read from prev.next (chain start marker)
 
         while True:
@@ -264,11 +295,13 @@ class HarrisList:
             # unlink the whole chain [prev_next .. curr) with ONE CAS
             if not prev.next_ref().compare_exchange(prev_next, False, curr, False):
                 return _RESTART
+            chain = []
             node = prev_next
             while node is not curr:
                 nxt = node.next_ref().get_ref()  # we unlinked it: safe
-                smr.retire(node, ctx)
+                chain.append(node)
                 node = nxt
+            smr.retire_batch(chain, ctx)  # one era read/tick, ≤1 scan
         found = curr is not None and curr.key == key
         return (prev, curr, found)
 

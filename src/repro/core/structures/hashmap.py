@@ -43,12 +43,62 @@ class LockFreeHashMap:
 
     contains = search
 
+    def get_node(self, key, ctx):
+        """Public lookup-with-node under the caller's guard scope."""
+        return self._bucket(key).get_node(key, ctx)
+
     def get(self, key):
         """Optimistic read-only lookup returning the stored value."""
-        bucket = self._bucket(key)
         with self.smr.guard() as ctx:
-            _, curr, found = bucket._find(key, srch=True, ctx=ctx)
-            return curr.value if found else None
+            node = self.get_node(key, ctx)
+            return node.value if node is not None else None
+
+    # ------------------------------------------------------------ batched
+    # One guard scope for the whole batch; keys grouped per bucket so each
+    # bucket list is walked once with the lists' resumed sorted traversal
+    # (DESIGN.md §4).
+    def _group(self, keys):
+        groups: dict = {}
+        for i, key in enumerate(keys):
+            groups.setdefault(hash(key) % self.num_buckets, []).append(i)
+        return groups
+
+    def search_many(self, keys, ctx=None):
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        with self.smr.scope(ctx, len(keys)) as c:
+            self._run_grouped(keys, out, c, "search_many")
+        return out
+
+    def insert_many(self, keys, values=None, ctx=None):
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        with self.smr.scope(ctx, len(keys)) as c:
+            self._run_grouped(keys, out, c, "insert_many", values)
+        return out
+
+    def delete_many(self, keys, ctx=None):
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        with self.smr.scope(ctx, len(keys)) as c:
+            self._run_grouped(keys, out, c, "delete_many")
+        return out
+
+    def _run_grouped(self, keys, out, ctx, op, values=None) -> None:
+        for b, idxs in self._group(keys).items():
+            bucket_op = getattr(self.buckets[b], op)
+            bkeys = [keys[i] for i in idxs]
+            if op == "insert_many":
+                vals = [values[i] for i in idxs] if values is not None \
+                    else None
+                res = bucket_op(bkeys, vals, ctx=ctx)
+            else:
+                res = bucket_op(bkeys, ctx=ctx)
+            for j, i in enumerate(idxs):
+                out[i] = res[j]
 
     def snapshot(self):
         out = []

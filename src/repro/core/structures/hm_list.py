@@ -12,6 +12,7 @@ from typing import Optional, Tuple
 
 from ..atomics import AtomicInt, Recycler
 from ..smr.base import SmrScheme
+from .batched import BatchedListOps
 from .node import ListNode
 
 HP_NEXT = 0
@@ -21,7 +22,7 @@ HP_PREV = 2
 _RESTART = object()
 
 
-class HarrisMichaelList:
+class HarrisMichaelList(BatchedListOps):
     HP_SLOTS = 3
 
     def __init__(self, smr: SmrScheme, recycle: bool = False):
@@ -34,41 +35,52 @@ class HarrisMichaelList:
         self.n_cleanup_cas = AtomicInt()  # unlink CASes issued by traversals
 
     # ------------------------------------------------------------------ API
-    def insert(self, key, value=None) -> bool:
+    def insert(self, key, value=None, ctx=None) -> bool:
+        with self.smr.scope(ctx) as c:
+            return self._insert_from(key, value, c)[0]
+
+    def _insert_from(self, key, value, ctx, hint=None
+                     ) -> Tuple[bool, ListNode]:
         smr = self.smr
         new = None
-        with smr.guard() as ctx:
-            while True:
-                prev, curr, found = self._find(key, ctx=ctx)
-                if found:
-                    return False
-                if new is None:
-                    if self.recycler is not None:
-                        new = self.recycler.alloc(key, value)
-                    else:
-                        new = ListNode(key, value)
-                    smr.alloc_stamp(new)
-                new.next_ref().set(curr, False)
-                if prev.next_ref().compare_exchange(curr, False, new, False):
-                    return True
-
-    def delete(self, key) -> bool:
-        smr = self.smr
-        with smr.guard() as ctx:
-            while True:
-                prev, curr, found = self._find(key, ctx=ctx)
-                if not found:
-                    return False
-                nxt, nmark = curr.next_ref().get()
-                if nmark:
-                    continue
-                if not curr.next_ref().compare_exchange(nxt, False, nxt, True):
-                    continue
-                if prev.next_ref().compare_exchange(curr, False, nxt, False):
-                    smr.retire(curr, ctx)
+        while True:
+            prev, curr, found = self._find(key, ctx=ctx, start=hint)
+            hint = prev
+            if found:
+                return False, prev
+            if new is None:
+                if self.recycler is not None:
+                    new = self.recycler.alloc(key, value)
                 else:
-                    self._find(key, ctx=ctx)  # help physical removal
-                return True
+                    new = ListNode(key, value)
+                smr.alloc_stamp(new)
+            new.next_ref().set(curr, False)
+            if prev.next_ref().compare_exchange(curr, False, new, False):
+                return True, prev
+
+    def delete(self, key, ctx=None) -> bool:
+        with self.smr.scope(ctx) as c:
+            return self._delete_from(key, c)[0]
+
+    def _delete_from(self, key, ctx, hint=None
+                     ) -> Tuple[bool, ListNode, Optional[ListNode]]:
+        smr = self.smr
+        while True:
+            prev, curr, found = self._find(key, ctx=ctx, start=hint)
+            hint = prev
+            if not found:
+                return False, prev, None
+            nxt, nmark = curr.next_ref().get()
+            if nmark:
+                continue
+            if not curr.next_ref().compare_exchange(nxt, False, nxt, True):
+                continue
+            if prev.next_ref().compare_exchange(curr, False, nxt, False):
+                smr.retire(curr, ctx)
+            else:
+                prev, _, _ = self._find(key, ctx=ctx,
+                                        start=hint)  # help physical removal
+            return True, prev, curr
 
     def search(self, key) -> bool:
         # NOT read-only: _find may unlink marked nodes (Michael's approach).
@@ -79,22 +91,26 @@ class HarrisMichaelList:
     contains = search
 
     # ----------------------------------------------------------- Michael find
-    def _find(self, key, srch: bool = False, ctx=None
+    def _find(self, key, srch: bool = False, ctx=None, start=None
               ) -> Tuple[ListNode, Optional[ListNode], bool]:
         # `srch` accepted for API parity with HarrisList; Michael's find is
         # never read-only (it unlinks marked nodes even during search).
         if ctx is None:
             ctx = self.smr.ctx()
         while True:
-            out = self._find_attempt(key, ctx)
+            out = self._find_attempt(key, ctx, start)
             if out is not _RESTART:
                 return out
+            start = None  # restarts go back to the head
             self.n_restarts.fetch_add(1)
 
-    def _find_attempt(self, key, ctx):
+    def _find_attempt(self, key, ctx, start=None):
         smr = self.smr
-        prev: ListNode = self.head
-        curr, _ = smr.protect(prev.next_ref(), HP_CURR, ctx)
+        prev: ListNode = start if start is not None else self.head
+        curr, smark = smr.protect(prev.next_ref(), HP_CURR, ctx)
+        if smark and prev is not self.head:
+            # resumed-from hint is logically deleted — resume proves nothing
+            return _RESTART
         while True:
             if curr is None:
                 return (prev, None, False)

@@ -86,73 +86,120 @@ class NMTree:
 
     contains = search
 
+    def get_node(self, key, ctx):
+        """Public lookup-with-node: the caller must be inside a guard scope
+        and pass its ctx; the returned leaf is protected until that scope
+        exits (slot ``S_LEAF``)."""
+        sr = self._seek(key, ctx)
+        return sr.leaf if sr.leaf.key == key else None
+
     def insert(self, key, value=None) -> bool:
+        with self.smr.guard() as ctx:
+            return self._insert(key, value, ctx)
+
+    def _insert(self, key, value, ctx) -> bool:
         smr = self.smr
         new_leaf = None
-        with smr.guard() as ctx:
-            while True:
-                sr = self._seek(key, ctx)
-                leaf, parent = sr.leaf, sr.parent
-                if leaf.key == key:
-                    return False
-                child_field = parent.child_ref(key < parent.key)
-                cref, cflag, ctag = child_field.get()
-                if cref is not leaf:
-                    continue  # stale; re-seek
-                if cflag or ctag:
-                    self._cleanup(key, sr, ctx)  # help the pending delete
-                    continue
-                if new_leaf is None:
-                    new_leaf = TreeNode(key, value, is_leaf=True)
-                    smr.alloc_stamp(new_leaf)
-                # new internal routes between the two leaves
-                if key < leaf.key:
-                    internal = TreeNode(leaf.key, is_leaf=False,
-                                        left=new_leaf, right=leaf)
-                else:
-                    internal = TreeNode(key, is_leaf=False,
-                                        left=leaf, right=new_leaf)
-                smr.alloc_stamp(internal)
-                if child_field.compare_exchange(leaf, False, False,
-                                                internal, False, False):
-                    return True
-                # failed: if a delete flagged/tagged this edge, help it
-                cref, cflag, ctag = child_field.get()
-                if cref is leaf and (cflag or ctag):
-                    self._cleanup(key, sr, ctx)
+        while True:
+            sr = self._seek(key, ctx)
+            leaf, parent = sr.leaf, sr.parent
+            if leaf.key == key:
+                return False
+            child_field = parent.child_ref(key < parent.key)
+            cref, cflag, ctag = child_field.get()
+            if cref is not leaf:
+                continue  # stale; re-seek
+            if cflag or ctag:
+                self._cleanup(key, sr, ctx)  # help the pending delete
+                continue
+            if new_leaf is None:
+                new_leaf = TreeNode(key, value, is_leaf=True)
+                smr.alloc_stamp(new_leaf)
+            # new internal routes between the two leaves
+            if key < leaf.key:
+                internal = TreeNode(leaf.key, is_leaf=False,
+                                    left=new_leaf, right=leaf)
+            else:
+                internal = TreeNode(key, is_leaf=False,
+                                    left=leaf, right=new_leaf)
+            smr.alloc_stamp(internal)
+            if child_field.compare_exchange(leaf, False, False,
+                                            internal, False, False):
+                return True
+            # failed: if a delete flagged/tagged this edge, help it
+            cref, cflag, ctag = child_field.get()
+            if cref is leaf and (cflag or ctag):
+                self._cleanup(key, sr, ctx)
 
     def delete(self, key) -> bool:
-        smr = self.smr
-        with smr.guard() as ctx:
-            injected = False
-            target_leaf: Optional[TreeNode] = None
-            while True:
-                sr = self._seek(key, ctx)
-                if not injected:
-                    leaf = sr.leaf
-                    if leaf.key != key:
-                        return False
-                    parent = sr.parent
-                    child_field = parent.child_ref(key < parent.key)
-                    # flag the leaf edge (logical deletion)
-                    if child_field.compare_exchange(leaf, False, False,
-                                                    leaf, True, False):
-                        injected = True
-                        target_leaf = leaf
-                        if self._cleanup(key, sr, ctx):
-                            return True
-                    else:
-                        cref, cflag, ctag = child_field.get()
-                        if cref is leaf and (cflag or ctag):
-                            self._cleanup(key, sr, ctx)  # help whoever
-                else:
-                    # cleanup mode: our leaf is flagged; finish the removal.
-                    # NOTE: tree nodes are never recycled (DESIGN.md) so the
-                    # identity test below cannot be fooled by ABA.
-                    if sr.leaf is not target_leaf:
-                        return True  # somebody physically removed it
+        with self.smr.guard() as ctx:
+            return self._delete(key, ctx)
+
+    def _delete(self, key, ctx) -> bool:
+        injected = False
+        target_leaf: Optional[TreeNode] = None
+        while True:
+            sr = self._seek(key, ctx)
+            if not injected:
+                leaf = sr.leaf
+                if leaf.key != key:
+                    return False
+                parent = sr.parent
+                child_field = parent.child_ref(key < parent.key)
+                # flag the leaf edge (logical deletion)
+                if child_field.compare_exchange(leaf, False, False,
+                                                leaf, True, False):
+                    injected = True
+                    target_leaf = leaf
                     if self._cleanup(key, sr, ctx):
                         return True
+                else:
+                    cref, cflag, ctag = child_field.get()
+                    if cref is leaf and (cflag or ctag):
+                        self._cleanup(key, sr, ctx)  # help whoever
+            else:
+                # cleanup mode: our leaf is flagged; finish the removal.
+                # NOTE: tree nodes are never recycled (DESIGN.md) so the
+                # identity test below cannot be fooled by ABA.
+                if sr.leaf is not target_leaf:
+                    return True  # somebody physically removed it
+                if self._cleanup(key, sr, ctx):
+                    return True
+
+    # ------------------------------------------------------------ batched
+    # A BST has no resumable linear position (the paper found even ring
+    # recovery unhelpful for trees — on divergence the tree has changed too
+    # much), so the batch entry points amortize the guard/ctx lifecycle
+    # only: one scope, k seeks from the root.
+    def search_many(self, keys, ctx=None):
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        with self.smr.scope(ctx, len(keys)) as c:
+            for i, key in enumerate(keys):
+                out[i] = self._seek(key, c).leaf.key == key
+        return out
+
+    def insert_many(self, keys, values=None, ctx=None):
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        order = sorted(range(len(keys)), key=keys.__getitem__)
+        with self.smr.scope(ctx, len(keys)) as c:
+            for i in order:
+                v = values[i] if values is not None else None
+                out[i] = self._insert(keys[i], v, c)
+        return out
+
+    def delete_many(self, keys, ctx=None):
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        order = sorted(range(len(keys)), key=keys.__getitem__)
+        with self.smr.scope(ctx, len(keys)) as c:
+            for i in order:
+                out[i] = self._delete(keys[i], c)
+        return out
 
     # ------------------------------------------------------------- seek
     def _seek(self, key, ctx=None) -> _SeekRecord:
@@ -229,17 +276,18 @@ class NMTree:
         removed set are permanently flagged/tagged — reads are on nodes only
         we can retire, cf. class docstring)."""
         smr = self.smr
+        chain = []
         node = successor
         while node is not None and node is not kept:
             if node.is_leaf:
-                smr.retire(node, ctx)
+                chain.append(node)
                 break
             l_ref = node.left_ref_unsafe().get_ref()
             r_ref = node.right_ref_unsafe().get_ref()
             go_left = key < node._key
             nxt = l_ref if go_left else r_ref
             off = r_ref if go_left else l_ref
-            smr.retire(node, ctx)
+            chain.append(node)
             if node is parent:
                 # off-path side here is the *kept* subtree — not ours.
                 # continue into the flagged leaf (routing side), unless the
@@ -249,9 +297,12 @@ class NMTree:
                 # middle chain node: off-path child is a flagged leaf that
                 # the winning unlinker (us) retires
                 if off is not None and off is not kept:
-                    smr.retire(off, ctx)
+                    chain.append(off)
                 node = nxt
-        # (node is kept) → done; kept subtree was relinked by the CAS
+        # (node is kept) → done; kept subtree was relinked by the CAS.
+        # The whole removed chain was unlinked by ONE ancestor CAS — retire
+        # it as one event (single era read/tick, at most one scan).
+        smr.retire_batch(chain, ctx)
 
     # --------------------------------------------------------- debug utils
     def snapshot(self):

@@ -55,115 +55,193 @@ class SkipList:
 
     # ------------------------------------------------------------------ API
     def insert(self, key, value=None) -> bool:
+        with self.smr.guard() as ctx:
+            return self._insert(key, value, ctx)
+
+    def _insert(self, key, value, ctx) -> bool:
         smr = self.smr
         height = self._random_height()
         node = TowerNode(key, height, value)
         smr.alloc_stamp(node)
-        with smr.guard() as ctx:
-            # link_pending is raised BEFORE the node becomes reachable so the
-            # deletion owner can never retire a tower with an in-flight link.
-            node.link_pending.fetch_add(1)
-            try:
-                while True:
-                    prev, curr, found = self._find_level(key, 0, srch=False,
-                                                         ctx=ctx)
-                    if found:
-                        return False
-                    if curr is not None and curr.key == key:
-                        # equal-key tower that got marked between the
-                        # traversal's protect and the found-recheck: linking
-                        # in FRONT of it would hide it from its deleter's
-                        # `curr is node` check in _unlink_all, which would
-                        # then retire it while still physically linked (a
-                        # use-after-free for later traversals).  Re-find —
-                        # the retry's own traversal unlinks the dying tower.
-                        continue
-                    node.next_ref(0).set(curr, False)  # unpublished yet: plain set
-                    if prev.next_ref(0).compare_exchange(curr, False,
-                                                         node, False):
-                        break
-                # link upper levels; node's own next pointers are updated via
-                # CAS-from-unmarked so a concurrent delete's mark is never lost
-                aborted = False
-                for lvl in range(1, height):
-                    while True:
-                        if node.next_ref(0).get_mark():
-                            aborted = True
-                            break
-                        prev, curr, _ = self._find_level(key, lvl,
-                                                         srch=False, ctx=ctx)
-                        if curr is not None and curr is not node \
-                                and curr.key == key:
-                            continue  # dying equal-key tower at this level:
-                            # never link in front of it (see level-0 note)
-                        old, omark = node.next_ref(lvl).get()
-                        if omark:
-                            aborted = True
-                            break
-                        if not node.next_ref(lvl).compare_exchange(
-                                old, False, curr, False):
-                            aborted = True  # marked under us
-                            break
-                        if curr is node:  # defensive
-                            break
-                        if prev.next_ref(lvl).compare_exchange(
-                                curr, False, node, False):
-                            break
-                    if aborted:
-                        break
-                # repair: if we were marked while linking, help unlink any
-                # levels we may have extended after the mark
-                if node.next_ref(0).get_mark():
-                    for lvl in range(height - 1, -1, -1):
-                        self._find_level(key, lvl, srch=False, ctx=ctx)
-            finally:
-                node.link_pending.fetch_add(-1)
-            return True
-
-    def delete(self, key) -> bool:
-        smr = self.smr
-        with smr.guard() as ctx:
+        # link_pending is raised BEFORE the node becomes reachable so the
+        # deletion owner can never retire a tower with an in-flight link.
+        node.link_pending.fetch_add(1)
+        try:
             while True:
                 prev, curr, found = self._find_level(key, 0, srch=False,
                                                      ctx=ctx)
-                if not found:
+                if found:
                     return False
-                node = curr
-                # mark top-down; marking level 0 linearizes the delete and
-                # makes us the *owner* who retires
-                for lvl in range(node.height - 1, 0, -1):
-                    while True:
-                        nxt, mark = node.next_ref(lvl).get()
-                        if mark:
-                            break
-                        if node.next_ref(lvl).compare_exchange(
-                                nxt, False, nxt, True):
-                            break
-                nxt, mark = node.next_ref(0).get()
-                if mark:
-                    continue  # somebody else owns the deletion; retry find
-                if not node.next_ref(0).compare_exchange(nxt, False, nxt, True):
+                if curr is not None and curr.key == key:
+                    # equal-key tower that got marked between the
+                    # traversal's protect and the found-recheck: linking
+                    # in FRONT of it would hide it from its deleter's
+                    # `curr is node` check in _unlink_all, which would
+                    # then retire it while still physically linked (a
+                    # use-after-free for later traversals).  Re-find —
+                    # the retry's own traversal unlinks the dying tower.
                     continue
-                # we own it: unlink everywhere, then retire exactly once
-                self._unlink_all(key, node, ctx)
-                return True
+                node.next_ref(0).set(curr, False)  # unpublished yet: plain set
+                if prev.next_ref(0).compare_exchange(curr, False,
+                                                     node, False):
+                    break
+            # link upper levels; node's own next pointers are updated via
+            # CAS-from-unmarked so a concurrent delete's mark is never lost
+            aborted = False
+            for lvl in range(1, height):
+                while True:
+                    if node.next_ref(0).get_mark():
+                        aborted = True
+                        break
+                    prev, curr, _ = self._find_level(key, lvl,
+                                                     srch=False, ctx=ctx)
+                    if curr is not None and curr is not node \
+                            and curr.key == key:
+                        continue  # dying equal-key tower at this level:
+                        # never link in front of it (see level-0 note)
+                    old, omark = node.next_ref(lvl).get()
+                    if omark:
+                        aborted = True
+                        break
+                    if not node.next_ref(lvl).compare_exchange(
+                            old, False, curr, False):
+                        aborted = True  # marked under us
+                        break
+                    if curr is node:  # defensive
+                        break
+                    if prev.next_ref(lvl).compare_exchange(
+                            curr, False, node, False):
+                        break
+                if aborted:
+                    break
+            # repair: if we were marked while linking, help unlink any
+            # levels we may have extended after the mark
+            if node.next_ref(0).get_mark():
+                for lvl in range(height - 1, -1, -1):
+                    self._find_level(key, lvl, srch=False, ctx=ctx)
+        finally:
+            node.link_pending.fetch_add(-1)
+        return True
+
+    def delete(self, key) -> bool:
+        with self.smr.guard() as ctx:
+            return self._delete(key, ctx)
+
+    def _delete(self, key, ctx) -> bool:
+        while True:
+            prev, curr, found = self._find_level(key, 0, srch=False,
+                                                 ctx=ctx)
+            if not found:
+                return False
+            node = curr
+            # mark top-down; marking level 0 linearizes the delete and
+            # makes us the *owner* who retires
+            for lvl in range(node.height - 1, 0, -1):
+                while True:
+                    nxt, mark = node.next_ref(lvl).get()
+                    if mark:
+                        break
+                    if node.next_ref(lvl).compare_exchange(
+                            nxt, False, nxt, True):
+                        break
+            nxt, mark = node.next_ref(0).get()
+            if mark:
+                continue  # somebody else owns the deletion; retry find
+            if not node.next_ref(0).compare_exchange(nxt, False, nxt, True):
+                continue
+            # we own it: unlink everywhere, then retire exactly once
+            self._unlink_all(key, node, ctx)
+            return True
 
     def search(self, key) -> bool:
-        smr = self.smr
-        with smr.guard() as ctx:
-            lvl = self.max_height - 1
-            prev = self.head
-            while lvl > 0:
-                prev, _, found = self._find_level(key, lvl, srch=True,
-                                                  start=prev, ctx=ctx)
-                if found:
-                    return True
-                lvl -= 1
-            _, _, found = self._find_level(key, 0, srch=True, start=prev,
-                                           ctx=ctx)
-            return found
+        with self.smr.guard() as ctx:
+            return self._search(key, ctx)
+
+    def _search(self, key, ctx) -> bool:
+        lvl = self.max_height - 1
+        prev = self.head
+        while lvl > 0:
+            prev, _, found = self._find_level(key, lvl, srch=True,
+                                              start=prev, ctx=ctx)
+            if found:
+                return True
+            lvl -= 1
+        _, _, found = self._find_level(key, 0, srch=True, start=prev,
+                                       ctx=ctx)
+        return found
 
     contains = search
+
+    # ------------------------------------------------------------ batched
+    def search_many(self, keys, ctx=None):
+        """Membership for many keys under ONE guard scope (DESIGN.md §4).
+
+        Under *cumulative* schemes (EBR/IBR/HLN/NR) the sorted batch resumes
+        each level's traversal from the previous key's predecessor — every
+        node observed inside the scope stays protected until the scope ends,
+        so the carried-over hints are dereferenceable (a marked hint makes
+        ``_find_level`` restart from the head).  Under one-shot schemes
+        (HP/HE) only slot-resident nodes are protected and a tower search
+        recycles its slots level by level, so stale cross-key hints could
+        dangle — those schemes do a per-key descent and amortize only the
+        guard."""
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        with self.smr.scope(ctx, len(keys)) as c:
+            self._search_many(keys, out, c)
+        return out
+
+    def _search_many(self, keys, out, ctx) -> None:
+        order = sorted(range(len(keys)), key=keys.__getitem__)
+        if not self.smr.cumulative_protection:
+            for i in order:
+                out[i] = self._search(keys[i], ctx)
+            return
+        top = self.max_height - 1
+        hints = [self.head] * self.max_height
+        for i in order:
+            key = keys[i]
+            prev = hints[top]
+            found = False
+            for lvl in range(top, -1, -1):
+                # resume from the further-along of (this level's hint, the
+                # predecessor carried down from the level above) — both are
+                # <= key and both stay protected for the whole batch scope
+                start = hints[lvl]
+                if prev is not self.head and (start is self.head
+                                              or start.key < prev.key):
+                    start = prev
+                prev, _, found = self._find_level(key, lvl, srch=True,
+                                                  start=start, ctx=ctx)
+                hints[lvl] = prev
+                if found:
+                    break
+            out[i] = found
+
+    def insert_many(self, keys, values=None, ctx=None):
+        """Insert many keys under ONE guard scope (sorted application;
+        results aligned with the input order)."""
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        order = sorted(range(len(keys)), key=keys.__getitem__)
+        with self.smr.scope(ctx, len(keys)) as c:
+            for i in order:
+                v = values[i] if values is not None else None
+                out[i] = self._insert(keys[i], v, c)
+        return out
+
+    def delete_many(self, keys, ctx=None):
+        """Delete many keys under ONE guard scope."""
+        out = [False] * len(keys)
+        if not len(keys):
+            return out
+        order = sorted(range(len(keys)), key=keys.__getitem__)
+        with self.smr.scope(ctx, len(keys)) as c:
+            for i in order:
+                out[i] = self._delete(keys[i], c)
+        return out
 
     # --------------------------------------------------------------- internals
     def _unlink_all(self, key, node: TowerNode, ctx=None) -> None:

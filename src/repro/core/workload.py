@@ -57,6 +57,7 @@ class WorkloadResult:
     max_not_reclaimed: int
     smr_stats: Dict[str, int] = field(default_factory=dict)
     ds_stats: Dict[str, int] = field(default_factory=dict)
+    batch_size: int = 1  # 1 = op-at-a-time; >1 = *_many batched driver
 
     def row(self) -> str:
         return (
@@ -77,6 +78,7 @@ def run_workload(
     sample_interval_s: float = 0.05,
     structure_kwargs: Optional[dict] = None,
     scheme_kwargs: Optional[dict] = None,
+    batch_size: int = 1,
 ) -> WorkloadResult:
     read_p, ins_p, _ = WORKLOADS[workload]
     smr: SmrScheme = make_scheme(scheme, **(scheme_kwargs or {}))
@@ -115,6 +117,46 @@ def run_workload(
             local_ops += 1
         ops[idx] = local_ops
 
+    def worker_batched(idx: int) -> None:
+        """Batched driver mode (DESIGN.md §4): each round draws
+        ``batch_size`` (key, op) pairs from the same mix, partitions them by
+        op, and issues them through the *_many entry points — one guard
+        scope and a resumed traversal per op group instead of one scope and
+        one head-restart per key."""
+        r = random.Random(seed * 7919 + idx)
+        randrange, rand = r.randrange, r.random
+        search_many = ds.search_many
+        insert_many = ds.insert_many
+        delete_many = ds.delete_many
+        stopped = stop.is_set
+        write_p = read_p + ins_p
+        local_ops = 0
+        ready.wait()
+        while not stopped():
+            reads: List[int] = []
+            inserts: List[int] = []
+            deletes: List[int] = []
+            for _ in range(batch_size):
+                k = randrange(key_range)
+                p = rand()
+                if p < read_p:
+                    reads.append(k)
+                elif p < write_p:
+                    inserts.append(k)
+                else:
+                    deletes.append(k)
+            if reads:
+                search_many(reads)
+            if inserts:
+                insert_many(inserts)
+            if deletes:
+                delete_many(deletes)
+            local_ops += batch_size
+        ops[idx] = local_ops
+
+    if batch_size > 1:
+        worker = worker_batched
+
     ts = [threading.Thread(target=worker, args=(i,), daemon=True)
           for i in range(threads)]
     for t in ts:
@@ -145,6 +187,7 @@ def run_workload(
         max_not_reclaimed=max(samples) if samples else 0,
         smr_stats=smr.stats(),
         ds_stats=ds.stats() if hasattr(ds, "stats") else {},
+        batch_size=batch_size,
     )
 
 

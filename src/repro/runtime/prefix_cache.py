@@ -8,6 +8,16 @@ Harris-vs-Harris-Michael throughput gap the paper measures (Fig. 8) is the
 admission-latency gap here; the NM-tree variant indexes prefixes *ordered*
 so eviction can scan ranges.
 
+Lookup is **single-pass** (DESIGN.md §4): the per-candidate FNV hash — which
+restarted from the first token for every prefix length, O(n²) in prompt
+tokens — is replaced by one rolling pass that emits every page boundary's
+key, and all candidates resolve under ONE ``guard_batch`` scope.  Under
+cumulative schemes (the serving default, IBR) candidates are grouped per
+bucket and each involved bucket is traversed once (sorted, resumed), longest
+-max bucket first with an early exit once no remaining bucket can beat the
+best validated hit; one-shot schemes (HP/HE) fall back to a per-candidate
+longest-first probe that still amortizes the guard and the hashing.
+
 Entries reference :class:`PageNode` runs; pages are pinned while cached, and
 retired through the same SMR instance when evicted — so a concurrent lookup
 that already protected an entry can safely finish reading its page run even
@@ -16,21 +26,51 @@ as the eviction proceeds (no page is recycled under it)."""
 from __future__ import annotations
 
 import threading
-from typing import List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
 
 from ..core.atomics import AtomicInt
-from ..core.smr.base import SmrScheme
+from ..core.smr.base import SmrScheme, ThreadCtx
 from ..core.structures.harris_list import HarrisList
 from ..core.structures.hm_list import HarrisMichaelList
 from .block_pool import BlockPool, PageNode
 
+_FNV_OFFSET = 1469598103934665603
+_FNV_PRIME = 1099511628211
+_MASK60 = (1 << 60) - 1
+
 
 def _prefix_key(tokens: Sequence[int]) -> int:
-    """Stable 60-bit hash of a token prefix."""
-    h = 1469598103934665603
+    """Stable 60-bit hash of a token prefix (reference implementation; the
+    rolling variant below must agree with it — property-tested)."""
+    h = _FNV_OFFSET
     for t in tokens:
-        h = ((h ^ (int(t) + 1)) * 1099511628211) & ((1 << 60) - 1)
+        h = ((h ^ (int(t) + 1)) * _FNV_PRIME) & _MASK60
     return h
+
+
+def _rolling_prefix_keys(tokens: Sequence[int], page_size: int,
+                         n_pages: int) -> List[int]:
+    """Keys of ALL page-aligned prefixes in ONE pass over the tokens.
+
+    ``out[i] == _prefix_key(tokens[:(i+1)*page_size])`` — the FNV state at a
+    page boundary is exactly the hash of that prefix, so emitting it while
+    rolling forward replaces the per-candidate restart (O(n²) → O(n))."""
+    out: List[int] = []
+    if n_pages <= 0:
+        return out
+    h = _FNV_OFFSET
+    boundary = page_size
+    i = 0
+    for t in tokens:  # single pass, no per-page slicing
+        h = ((h ^ (int(t) + 1)) * _FNV_PRIME) & _MASK60
+        i += 1
+        if i == boundary:
+            out.append(h)
+            if len(out) == n_pages:
+                break
+            boundary += page_size
+    return out
 
 
 class PrefixCache:
@@ -50,7 +90,9 @@ class PrefixCache:
         self.n_hits = AtomicInt(0)
         self.n_misses = AtomicInt(0)
         self._evict_lock = threading.Lock()
-        self._evict_ring: List[Tuple[int, int]] = []  # (bucket, key) FIFO
+        # (bucket, key) FIFO; deque so the hot evict path pops O(1) instead
+        # of shifting the whole ring under the lock
+        self._evict_ring: Deque[Tuple[int, int]] = deque()
 
     def _bucket(self, key: int):
         return self.buckets[key % self.num_buckets]
@@ -59,54 +101,158 @@ class PrefixCache:
     def lookup(self, tokens: Sequence[int]) -> Tuple[List[PageNode], int]:
         """Longest page-aligned cached prefix of ``tokens``.
 
-        Read-only optimistic traversal (zero CAS on hit path).  Returned
-        pages are pinned for the caller (caller must unpin when its block
-        table no longer references them)."""
-        best: Tuple[List[PageNode], int] = ([], 0)
+        Read-only optimistic traversal (zero CAS on hit path), single
+        rolling-hash pass, one guard scope for all candidate lengths.
+        Returned pages are pinned for the caller (caller must unpin when its
+        block table no longer references them)."""
         n_pages = len(tokens) // self.page_size
-        for np_ in range(n_pages, 0, -1):
-            key = _prefix_key(tokens[: np_ * self.page_size])
-            bucket = self._bucket(key)
-            with self.smr.guard() as ctx:
-                _, node, found = bucket._find(key, srch=True, ctx=ctx)
-                if not found:
-                    continue
-                pages = list(node.value)  # entry node protected ⇒ safe read
-                # SCOT-style validation one level up (DESIGN.md §2): pin the
-                # pages, then re-check the entry is still live (unmarked).
-                # If eviction raced us, unpin and treat as a miss — pins on
-                # recycled pages are inert by construction.
-                for p in pages:
-                    self.pool.pin(p)
-                if node.next_ref().get_mark():
-                    for p in pages:
-                        self.pool.unpin(p)
-                    continue
-                best = (pages, np_ * self.page_size)
-                break
+        if n_pages == 0:
+            self.n_misses.fetch_add(1)
+            return ([], 0)
+        with self.smr.guard_batch(n_pages) as ctx:
+            best = self._resolve_longest(tokens, n_pages, ctx)
         if best[1]:
             self.n_hits.fetch_add(1)
         else:
             self.n_misses.fetch_add(1)
         return best
 
+    def lookup_many(self, prompts: Sequence[Sequence[int]]
+                    ) -> List[Tuple[List[PageNode], int]]:
+        """Batched admission: every prompt's lookup under ONE guard scope
+        (one reservation lifecycle for the whole admission wave)."""
+        if not prompts:
+            return []
+        results: List[Tuple[List[PageNode], int]] = []
+        with self.smr.guard_batch(len(prompts)) as ctx:
+            for tokens in prompts:
+                n_pages = len(tokens) // self.page_size
+                if n_pages == 0:
+                    best = ([], 0)
+                else:
+                    best = self._resolve_longest(tokens, n_pages, ctx)
+                if best[1]:
+                    self.n_hits.fetch_add(1)
+                else:
+                    self.n_misses.fetch_add(1)
+                results.append(best)
+        return results
+
+    def _probe(self, key: int, np_: int, ctx: ThreadCtx
+               ) -> Optional[Tuple[List[PageNode], int]]:
+        """Try one candidate: find, pin its run, validate liveness.
+
+        Validation is SCOT one level up (DESIGN.md §2): pin the entry's
+        pages, then re-check the entry node is still live (unmarked).  If
+        eviction raced us, unpin and report a miss — pins on recycled
+        pages are inert by construction."""
+        node = self._bucket(key).get_node(key, ctx)
+        if node is None:
+            return None
+        pool = self.pool
+        pages = list(node.value)  # entry node protected ⇒ safe read
+        for p in pages:
+            pool.pin(p)
+        if node.next_ref().get_mark():
+            for p in pages:
+                pool.unpin(p)
+            return None
+        return (pages, np_ * self.page_size)
+
+    def _resolve_longest(self, tokens: Sequence[int], n_pages: int,
+                         ctx: ThreadCtx) -> Tuple[List[PageNode], int]:
+        """Longest validated page-aligned candidate, under the caller's
+        guard scope."""
+        pool = self.pool
+        # ONE rolling pass over the tokens emits every boundary's key (the
+        # pre-batching loop re-hashed from token 0 per candidate — O(n²)).
+        keys = _rolling_prefix_keys(tokens, self.page_size, n_pages)
+        # Fast path for the hot cache: the LONGEST candidate usually exists
+        # (insert caches every page-aligned prefix), and a validated hit on
+        # it beats every other candidate by construction — probe it before
+        # building any per-bucket grouping.
+        hit = self._probe(keys[-1], n_pages, ctx)
+        if hit is not None:
+            return hit
+        keys = keys[:-1]
+        if not keys:
+            return ([], 0)
+        if not self.smr.cumulative_protection:
+            # One-shot schemes (HP/HE): a node found in bucket A loses its
+            # hazard-slot protection once we traverse bucket B, so resolve
+            # per candidate, longest first — still one guard scope and one
+            # hashing pass for the whole loop.
+            for np_ in range(len(keys), 0, -1):
+                hit = self._probe(keys[np_ - 1], np_, ctx)
+                if hit is not None:
+                    return hit
+            return ([], 0)
+        # Cumulative schemes (EBR/IBR/HLN/NR): everything observed inside
+        # the scope stays protected until it exits, so group candidates by
+        # bucket and walk each involved bucket ONCE (sorted resumed
+        # traversal).  Buckets ordered by their longest candidate, with an
+        # early exit once no remaining bucket can beat the best hit — a
+        # fully-cached prompt touches exactly one bucket.
+        by_bucket: dict = {}
+        for np_, key in enumerate(keys, 1):
+            by_bucket.setdefault(key % self.num_buckets, []).append((np_, key))
+        best_pages: List[PageNode] = []
+        best_np = 0
+        for bidx, cands in sorted(by_bucket.items(),
+                                  key=lambda kv: kv[1][-1][0], reverse=True):
+            if cands[-1][0] <= best_np:
+                break  # no remaining bucket holds a longer candidate
+            bkeys = sorted(key for _, key in cands)
+            nodes = self.buckets[bidx].get_nodes(bkeys, ctx)
+            found = dict(zip(bkeys, nodes))
+            for np_, key in reversed(cands):  # longest candidate first
+                if np_ <= best_np:
+                    break
+                node = found.get(key)
+                if node is None:
+                    continue
+                pages = list(node.value)
+                for p in pages:
+                    pool.pin(p)
+                if node.next_ref().get_mark():
+                    for p in pages:
+                        pool.unpin(p)
+                    continue
+                # a longer hit supersedes the previous best — release the
+                # pins we took on the superseded run, or they leak forever
+                for p in best_pages:
+                    pool.unpin(p)
+                best_pages, best_np = pages, np_
+                break
+        if best_np:
+            return (best_pages, best_np * self.page_size)
+        return ([], 0)
+
     # ------------------------------------------------------------ insert
     def insert(self, tokens: Sequence[int], pages: Sequence[PageNode]) -> None:
         """Cache every page-aligned prefix of a finished sequence (one entry
-        per page boundary, so any future prompt can hit its longest match)."""
+        per page boundary, so any future prompt can hit its longest match).
+        One rolling-hash pass and one guard scope for all entries."""
         n_pages = min(len(tokens) // self.page_size, len(pages))
-        for np_ in range(1, n_pages + 1):
-            key = _prefix_key(tokens[: np_ * self.page_size])
-            run = list(pages[:np_])
-            for p in run:
-                self.pool.pin(p)
-            if self._bucket(key).insert(key, run):
-                self.n_entries.fetch_add(1)
-                with self._evict_lock:
-                    self._evict_ring.append((key % self.num_buckets, key))
-            else:
-                for p in run:  # lost the race; someone already cached it
-                    self.pool.unpin(p)
+        if n_pages == 0:
+            return
+        keys = _rolling_prefix_keys(tokens, self.page_size, n_pages)
+        added: List[Tuple[int, int]] = []
+        with self.smr.guard_batch(n_pages) as ctx:
+            for np_ in range(1, n_pages + 1):
+                key = keys[np_ - 1]
+                run = list(pages[:np_])
+                for p in run:
+                    self.pool.pin(p)
+                if self._bucket(key).insert(key, run, ctx):
+                    self.n_entries.fetch_add(1)
+                    added.append((key % self.num_buckets, key))
+                else:
+                    for p in run:  # lost the race; someone already cached it
+                        self.pool.unpin(p)
+        if added:
+            with self._evict_lock:
+                self._evict_ring.extend(added)
         self._maybe_evict()
 
     # ------------------------------------------------------------ evict
@@ -116,28 +262,39 @@ class PrefixCache:
                 return
 
     def evict_oldest(self, n: int = 1) -> int:
-        """FIFO-evict up to n entries (pool-pressure path); returns count."""
+        """FIFO-evict up to n entries (pool-pressure path); returns count.
+        A stale ring slot (its entry already evicted by a racing caller)
+        does not burn the budget — the next slot is tried instead, so
+        ``_maybe_evict`` cannot stall above ``max_entries`` behind stale
+        slots."""
         done = 0
-        for _ in range(n):
+        while done < n:
             with self._evict_lock:
                 if not self._evict_ring:
                     break
-                _, key = self._evict_ring.pop(0)
+                _, key = self._evict_ring.popleft()
             if self.evict(key):
                 done += 1
         return done
 
     def evict(self, key: int) -> bool:
         bucket = self._bucket(key)
-        # read the entry's value under protection, then delete
+        # pop() tells us exactly WHICH node we removed, so we unpin exactly
+        # the page run that entry referenced — a lookup-then-delete pair
+        # could observe one entry and delete a concurrently re-inserted
+        # successor, unpinning the wrong run
         with self.smr.guard() as ctx:
-            _, node, found = bucket._find(key, srch=True, ctx=ctx)
-            pages = list(node.value) if found else []
-        if bucket.delete(key):
+            node = bucket.pop(key, ctx)
+            pages = list(node.value) if node is not None else []
+        if node is not None:
             self.n_entries.fetch_add(-1)
             for p in pages:
                 self.pool.unpin(p)
             return True
+        # Lost the delete race: the entry was already removed (its winner
+        # unpinned the pages), and any concurrent RE-insert enqueues its own
+        # ring slot — nothing to re-queue here.  The caller (evict_oldest)
+        # just moves on to the next slot instead of burning its budget.
         return False
 
     def stats(self):

@@ -99,10 +99,8 @@ class PagedServingEngine:
         self.steps = 0
 
     # ---------------------------------------------------------- client API
-    def submit(self, req: Request) -> Request:
-        """Client-thread path: optimistic prefix lookup happens HERE,
-        concurrently with the engine and janitor threads."""
-        pages, n_tok = self.prefix_cache.lookup(req.prompt)
+    def _attach_hit(self, req: Request, pages: List[PageNode],
+                    n_tok: int) -> None:
         # only reuse *strictly shorter than prompt* prefixes (need ≥1 token
         # to prefill so we have logits for the first generated token)
         if n_tok >= len(req.prompt):
@@ -112,9 +110,27 @@ class PagedServingEngine:
             pages = pages[:len(pages) - drop]
             n_tok = len(pages) * self.page_size
         req._hit_pages, req._hit_tokens = pages, n_tok
+
+    def submit(self, req: Request) -> Request:
+        """Client-thread path: optimistic prefix lookup happens HERE,
+        concurrently with the engine and janitor threads."""
+        pages, n_tok = self.prefix_cache.lookup(req.prompt)
+        self._attach_hit(req, pages, n_tok)
         with self._wlock:
             self._waiting.append(req)
         return req
+
+    def submit_many(self, reqs: Sequence[Request]) -> Sequence[Request]:
+        """Batched admission (DESIGN.md §4): ALL prompts' prefix lookups run
+        under one SMR guard scope — one reservation lifecycle for the whole
+        admission wave instead of one per request — and the waiting queue is
+        extended under a single lock acquisition."""
+        hits = self.prefix_cache.lookup_many([r.prompt for r in reqs])
+        for req, (pages, n_tok) in zip(reqs, hits):
+            self._attach_hit(req, pages, n_tok)
+        with self._wlock:
+            self._waiting.extend(reqs)
+        return reqs
 
     # ------------------------------------------------------------- device fns
     def _layer_params(self, i):

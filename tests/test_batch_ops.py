@@ -1,0 +1,379 @@
+"""Batched-operation layer tests (DESIGN.md §4).
+
+* rolling prefix hashes == the reference ``_prefix_key`` on random streams
+  (property test);
+* ``search_many``/``insert_many``/``delete_many`` agree with op-at-a-time
+  results under ALL SIX schemes, for every structure that exposes them;
+* safety hammer: batched (resumed) traversals under HP churn never touch
+  reclaimed memory — the resumed-hint pinning argument, executed.
+"""
+
+import random
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import UseAfterFreeError, make_scheme
+from repro.core.smr import SCHEMES
+from repro.core.structures.harris_list import HarrisList
+from repro.core.structures.hashmap import LockFreeHashMap
+from repro.core.structures.hm_list import HarrisMichaelList
+from repro.core.structures.nm_tree import NMTree
+from repro.core.structures.skiplist import SkipList
+from repro.runtime.prefix_cache import _prefix_key, _rolling_prefix_keys
+
+ALL_SCHEMES = sorted(SCHEMES)
+
+STRUCTURES = {
+    "HList": lambda smr: HarrisList(smr),
+    "HMList": lambda smr: HarrisMichaelList(smr),
+    "SkipList": lambda smr: SkipList(smr, seed=9),
+    "NMTree": lambda smr: NMTree(smr),
+    "HashMap": lambda smr: LockFreeHashMap(smr, num_buckets=8),
+}
+
+
+# --------------------------------------------------------- rolling hashes
+def test_rolling_hash_matches_reference_random_streams():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(tokens=st.lists(st.integers(min_value=0, max_value=2**31 - 1),
+                           max_size=96),
+           page_size=st.integers(min_value=1, max_value=9))
+    def check(tokens, page_size):
+        n_pages = len(tokens) // page_size
+        rolling = _rolling_prefix_keys(tokens, page_size, n_pages)
+        reference = [_prefix_key(tokens[:(i + 1) * page_size])
+                     for i in range(n_pages)]
+        assert rolling == reference
+
+    check()
+
+
+def test_rolling_hash_matches_reference_seeded():
+    """Non-hypothesis fallback: same property over seeded random streams,
+    so the equivalence is exercised even where hypothesis is absent."""
+    r = random.Random(0xF17)
+    for _ in range(300):
+        page_size = r.randrange(1, 10)
+        tokens = [r.randrange(2**31) for _ in range(r.randrange(0, 97))]
+        n_pages = len(tokens) // page_size
+        assert _rolling_prefix_keys(tokens, page_size, n_pages) == \
+            [_prefix_key(tokens[:(i + 1) * page_size]) for i in range(n_pages)]
+
+
+def test_rolling_hash_empty_and_unaligned():
+    assert _rolling_prefix_keys([], 4, 0) == []
+    toks = [1, 2, 3, 4, 5]  # one full page + a remainder that must not leak
+    assert _rolling_prefix_keys(toks, 4, 1) == [_prefix_key(toks[:4])]
+
+
+# ------------------------------------------------- batch == sequential
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+@pytest.mark.parametrize("structure", sorted(STRUCTURES))
+def test_batch_matches_sequential(structure, scheme):
+    """Random mixed batches through *_many must produce exactly the results
+    and final contents of the same ops applied one at a time.  Batches apply
+    in ascending-key order, so the sequential twin replays them sorted."""
+    smr_b = make_scheme(scheme, retire_scan_freq=4, epoch_freq=4)
+    smr_s = make_scheme(scheme, retire_scan_freq=4, epoch_freq=4)
+    ds_b = STRUCTURES[structure](smr_b)
+    ds_s = STRUCTURES[structure](smr_s)
+    r = random.Random(hash((structure, scheme)) & 0xFFFF)
+
+    for _ in range(40):
+        keys = sorted(r.randrange(48) for _ in range(r.randrange(1, 10)))
+        op = r.random()
+        if op < 0.4:
+            got = ds_b.insert_many(keys)
+            want = [ds_s.insert(k) for k in keys]
+        elif op < 0.8:
+            got = ds_b.delete_many(keys)
+            want = [ds_s.delete(k) for k in keys]
+        else:
+            got = ds_b.search_many(keys)
+            want = [ds_s.search(k) for k in keys]
+        assert got == want, (structure, scheme, keys, got, want)
+    assert sorted(ds_b.snapshot()) == sorted(ds_s.snapshot())
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_get_node_and_pop(scheme):
+    smr = make_scheme(scheme)
+    ds = HarrisList(smr)
+    ds.insert(3, "three")
+    ds.insert(7, "seven")
+    with smr.guard() as ctx:
+        node = ds.get_node(7, ctx)
+        assert node is not None and node.value == "seven"
+        assert ds.get_node(5, ctx) is None
+        if smr.cumulative_protection:
+            nodes = ds.get_nodes([7, 5, 3], ctx)
+            assert nodes[0] is node
+            assert nodes[1] is None
+            assert nodes[2].value == "three"
+        else:
+            # one-shot schemes only keep the most recent find slot-pinned;
+            # multi-key get_nodes must refuse rather than hand back
+            # unprotected nodes
+            assert ds.get_nodes([7], ctx)[0] is node
+            with pytest.raises(AssertionError):
+                ds.get_nodes([7, 5, 3], ctx)
+    with smr.guard() as ctx:
+        popped = ds.pop(7, ctx)
+        assert popped is node and popped.value == "seven"
+        assert ds.pop(7, ctx) is None
+    assert ds.snapshot() == [3]
+
+
+def test_hashmap_get_uses_public_api():
+    smr = make_scheme("IBR")
+    m = LockFreeHashMap(smr, num_buckets=4)
+    m.insert("k", 123)
+    assert m.get("k") == 123
+    assert m.get("absent") is None
+
+
+def test_batch_guard_counts_logical_ops():
+    smr = make_scheme("EBR")
+    ds = HarrisList(smr)
+    ds.search_many(list(range(10)))
+    assert smr.stats()["ops"] >= 10  # one scope, ten logical operations
+
+
+# ------------------------------------------------------- safety hammer
+def _hammer_batched(ds, key_range, duration_s, threads=4, batch=6):
+    """Batched churn; returns the first safety failure seen (or None)."""
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-6)
+    caught = []
+    stop = threading.Event()
+
+    def worker(idx):
+        r = random.Random(idx)
+        try:
+            while not stop.is_set() and not caught:
+                keys = [r.randrange(key_range) for _ in range(batch)]
+                op = r.random()
+                if op < 0.35:
+                    ds.insert_many(keys)
+                elif op < 0.7:
+                    ds.delete_many(keys)
+                elif op < 0.9:
+                    ds.search_many(keys)
+                else:
+                    ds.search(keys[0])  # mix in single ops too
+        except UseAfterFreeError as e:
+            caught.append(e)
+        except AssertionError as e:  # double retire is also a safety failure
+            caught.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,), daemon=True)
+          for i in range(threads)]
+    try:
+        for t in ts:
+            t.start()
+        deadline = time.monotonic() + duration_s
+        while time.monotonic() < deadline and not caught:
+            time.sleep(0.02)
+        stop.set()
+        for t in ts:
+            t.join(timeout=10)
+    finally:
+        sys.setswitchinterval(old_interval)
+    return caught[0] if caught else None
+
+
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+def test_batched_harris_traversals_are_safe(scheme):
+    """The resumed-hint traversal must uphold SCOT safety: the hint stays
+    slot-pinned (HP/HE) or scope-protected (IBR/HLN) between the batch's
+    operations, and a marked hint restarts from the head."""
+    smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+    ds = HarrisList(smr, scot=True)
+    err = _hammer_batched(ds, key_range=16, duration_s=2.5)
+    assert err is None, f"batched traversal hit {err!r} under {scheme}"
+
+
+def test_batched_harris_hp_with_recycling_is_safe():
+    """Same hammer with the Recycler active: freed nodes come back with the
+    same identity, so a stale resumed hint would be an exploitable ABA."""
+    smr = make_scheme("HP", retire_scan_freq=1, epoch_freq=1)
+    ds = HarrisList(smr, scot=True, recycle=True)
+    err = _hammer_batched(ds, key_range=16, duration_s=2.5)
+    assert err is None, f"batched HP+recycler traversal hit {err!r}"
+
+
+@pytest.mark.parametrize("scheme", ["HP", "IBR"])
+def test_batched_skiplist_traversals_are_safe(scheme):
+    """Covers both batch modes: IBR exercises the per-level cumulative
+    hints; HP exercises the per-key descent under one guard."""
+    smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
+    ds = SkipList(smr, scot=True, seed=13)
+    err = _hammer_batched(ds, key_range=16, duration_s=2.0)
+    assert err is None, f"batched skip list hit {err!r} under {scheme}"
+
+
+def test_batched_nmtree_traversals_are_safe():
+    smr = make_scheme("HP", retire_scan_freq=1, epoch_freq=1)
+    ds = NMTree(smr, scot=True)
+    err = _hammer_batched(ds, key_range=16, duration_s=2.0)
+    assert err is None, f"batched NM tree hit {err!r}"
+
+
+# ------------------------------------------------------- prefix cache
+def _mk_cache(scheme, page_size=4, num_buckets=8, pages=64):
+    from repro.runtime.block_pool import BlockPool
+    from repro.runtime.prefix_cache import PrefixCache
+    smr = make_scheme(scheme, retire_scan_freq=8, epoch_freq=8)
+    pool = BlockPool(smr, pages)
+    return smr, pool, PrefixCache(smr, pool, page_size,
+                                  num_buckets=num_buckets, max_entries=48)
+
+
+def _legacy_lookup(cache, tokens):
+    """The pre-batching per-candidate loop, as the correctness oracle."""
+    best = ([], 0)
+    for np_ in range(len(tokens) // cache.page_size, 0, -1):
+        key = _prefix_key(tokens[: np_ * cache.page_size])
+        bucket = cache._bucket(key)
+        with cache.smr.guard() as ctx:
+            node = bucket.get_node(key, ctx)
+            if node is None:
+                continue
+            pages = list(node.value)
+            for p in pages:
+                cache.pool.pin(p)
+            if node.next_ref().get_mark():
+                for p in pages:
+                    cache.pool.unpin(p)
+                continue
+            best = (pages, np_ * cache.page_size)
+            break
+    return best
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_single_pass_lookup_matches_per_candidate(scheme):
+    """The single-pass resolve must return exactly what the per-candidate
+    loop returned — same longest match, same page run — on random mixtures
+    of cached runs and probe prompts."""
+    smr, pool, cache = _mk_cache(scheme)
+    r = random.Random(42)
+    streams = []
+    for _ in range(6):
+        n = r.randrange(2, 9)  # pages per cached sequence
+        toks = [r.randrange(12) for _ in range(n * cache.page_size)]
+        run = [pool.alloc(0) for _ in range(n)]
+        cache.insert(toks, run)
+        streams.append((toks, run))
+    probes = []
+    for toks, _ in streams:
+        probes.append(toks)                             # full hit
+        cut = (r.randrange(len(toks)) // 4) * 4
+        probes.append(toks[:cut] + [99] * (len(toks) - cut))  # partial
+    probes.append([77] * 24)                            # guaranteed miss
+    probes.append([])                                   # sub-page prompt
+    for prompt in probes:
+        got_pages, got_n = cache.lookup(prompt)
+        exp_pages, exp_n = _legacy_lookup(cache, prompt)
+        assert got_n == exp_n, (scheme, prompt, got_n, exp_n)
+        assert [p.page_id for p in got_pages] == \
+            [p.page_id for p in exp_pages]
+        for p in got_pages:
+            pool.unpin(p)
+        for p in exp_pages:
+            pool.unpin(p)
+
+
+def test_superseded_best_candidate_unpins():
+    """Regression: in the grouped (cumulative) resolve, a bucket processed
+    first may only validate a SHORT candidate; when a later bucket yields a
+    longer hit, the superseded run's pins must be released or its pages
+    leak (pin_count never returns to zero → the pool can never retire
+    them)."""
+    from repro.core.smr import make_scheme
+    from repro.runtime.block_pool import BlockPool
+    from repro.runtime.prefix_cache import PrefixCache, _rolling_prefix_keys
+
+    n_pages = 10
+    for seed in range(200):
+        r = random.Random(seed)
+        toks = [r.randrange(1000) for _ in range(n_pages)]
+        keys = _rolling_prefix_keys(toks, 1, n_pages)
+        buckets = [k % 2 for k in keys[:-1]]  # candidates np=1..9
+        # bucket A holds the longest remaining candidate → processed first;
+        # the scenario needs the OTHER bucket to hold something longer than
+        # A's shortest candidate, so a later bucket supersedes the best
+        a = buckets[-1]
+        a_cands = [i + 1 for i, b in enumerate(buckets) if b == a]
+        other = [i + 1 for i, b in enumerate(buckets) if b != a]
+        if other and max(other) > a_cands[0]:
+            break
+    else:
+        pytest.fail("no suitable token stream found")
+    smr = make_scheme("IBR", retire_scan_freq=4, epoch_freq=4)
+    pool = BlockPool(smr, 64)
+    cache = PrefixCache(smr, pool, page_size=1, num_buckets=2,
+                        max_entries=1024)
+    pages = [pool.alloc(0) for _ in range(n_pages)]
+    cache.insert(toks, pages)
+    # force the longest-candidate fast path to miss
+    assert cache.evict(keys[-1])
+    # leave only A's shortest candidate so A validates a short run first
+    for np_ in a_cands[1:]:
+        assert cache.evict(keys[np_ - 1])
+    got, n_tok = cache.lookup(toks)
+    assert n_tok == max(other)  # the longer candidate from the other bucket
+    for p in got:
+        pool.unpin(p)
+    # drain everything: every page must come back (no stranded pins)
+    for pg in pages:
+        pool.release(pg)
+    while cache.evict_oldest(4):
+        pass
+    smr.flush()
+    assert pool.free_count() == 64, "superseded candidate leaked pins"
+
+
+def test_eviction_drains_and_pages_return():
+    smr, pool, cache = _mk_cache("IBR", pages=64)
+    r = random.Random(7)
+    for _ in range(8):
+        n = r.randrange(1, 5)
+        toks = [r.randrange(30) for _ in range(n * cache.page_size)]
+        run = [pool.alloc(0) for _ in range(n)]
+        cache.insert(toks, run)
+        for pg in run:
+            pool.release(pg)
+    while cache.evict_oldest(4):
+        pass
+    smr.flush()
+    assert cache.stats()["entries"] == 0
+    assert pool.free_count() == 64
+
+
+def test_evict_oldest_skips_stale_slots():
+    """A stale ring slot (its entry already evicted by a racing caller)
+    must not burn the eviction budget: the sweep moves on to the next slot,
+    so pool-pressure eviction cannot stall behind lost races."""
+    smr, pool, cache = _mk_cache("IBR")
+    toks_a = [1, 2, 3, 4]
+    toks_b = [5, 6, 7, 8]
+    cache.insert(toks_a, [pool.alloc(0)])
+    cache.insert(toks_b, [pool.alloc(0)])
+    # make slot A stale, as a racing evict(key) winner would: the bucket
+    # entry is gone but A's FIFO slot is still queued ahead of B's
+    key_a = _prefix_key(toks_a)
+    with smr.guard() as ctx:
+        assert cache._bucket(key_a).pop(key_a, ctx) is not None
+    cache.n_entries.fetch_add(-1)
+    # one sweep with budget 1: the stale A slot fails, is skipped, and the
+    # live B entry is evicted — the pre-fix loop returned 0 here (budget
+    # burned on the stale slot) and _maybe_evict stalled
+    assert cache.evict_oldest(1) == 1
+    assert cache.stats()["entries"] == 0
