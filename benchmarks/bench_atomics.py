@@ -28,8 +28,8 @@ import threading
 import time
 from typing import Iterator, Optional, Tuple
 
+from repro import api
 from repro.core.atomics import AtomicMarkableRef
-from repro.core.smr import make_scheme
 from repro.core.structures.node import ListNode
 
 
@@ -123,8 +123,14 @@ def bench_atomics(quick: bool = True) -> Iterator[str]:
     head = AtomicMarkableRef(nodes[0], False)
     reps = max(1, (n // 10) // chain_len)
 
-    for scheme_name in ("EBR", "HP", "IBR"):
-        smr = make_scheme(scheme_name)
+    # one representative per capability family (registry query, not a
+    # hardcoded list): cumulative non-robust, one-shot robust, cumulative
+    # robust — the three protect-path shapes
+    rep_schemes = (api.schemes(robust=False, reclaims=True)[:1]
+                   + api.schemes(robust=True, cumulative_protection=False)[:1]
+                   + api.schemes(robust=True, cumulative_protection=True)[:1])
+    for scheme_name in rep_schemes:
+        smr = api.scheme(scheme_name)
 
         def chase(ctx: Optional[object]) -> None:
             node, _ = smr.protect(head, 0, ctx)

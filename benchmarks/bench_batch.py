@@ -26,8 +26,7 @@ from __future__ import annotations
 import time
 from typing import Iterator
 
-from repro.core.smr import make_scheme
-from repro.core.structures.harris_list import HarrisList
+from repro import api
 from repro.runtime.block_pool import BlockPool
 from repro.runtime.prefix_cache import PrefixCache, _prefix_key
 
@@ -70,10 +69,16 @@ def bench_batch(quick: bool = True) -> Iterator[str]:
     n_rounds = 120 if quick else 1200
 
     # ---- search: sequential vs search_many(K) per scheme ----------------
+    # representative capability families via registry query (one-shot
+    # robust, cumulative robust, cumulative non-robust)
     import random
-    for scheme_name in ("HP", "IBR", "EBR"):
-        smr = make_scheme(scheme_name)
-        ds = HarrisList(smr)
+    search_schemes = (api.schemes(robust=True, cumulative_protection=False)[:1]
+                      + api.schemes(robust=True,
+                                    cumulative_protection=True)[:1]
+                      + api.schemes(robust=False, reclaims=True)[:1])
+    for scheme_name in search_schemes:
+        smr = api.scheme(scheme_name)
+        ds = api.build("HList", smr=smr)
         for k in range(0, key_range, 2):
             ds.insert(k)
         r = random.Random(17)
@@ -97,9 +102,36 @@ def bench_batch(quick: bool = True) -> Iterator[str]:
         yield _row(f"batch/search_many-K{K}-HList-{scheme_name}", t_many,
                    f"speedup={t_seq / t_many:.2f}x")
 
+    # ---- wait-free traversal policy (§4, DESIGN.md §10) -----------------
+    # CI smoke for the wait-free configuration: same search_many probe,
+    # HList under HP with traversal="waitfree"; the in-process baseline is
+    # the default SCOT policy so the derived ratio isolates the anchor
+    # slot's cost on the uncontended fast path.
+    smr_wf = api.scheme("HP")
+    ds_wf = api.build("HList", smr=smr_wf, traversal="waitfree")
+    smr_base = api.scheme("HP")
+    ds_base = api.build("HList", smr=smr_base, traversal="scot")
+    for k in range(0, key_range, 2):
+        ds_wf.insert(k)
+        ds_base.insert(k)
+    r = random.Random(19)
+    batches = [sorted(r.randrange(key_range) for _ in range(K))
+               for _ in range(n_rounds)]
+    t0 = time.perf_counter()
+    for batch in batches:
+        ds_base.search_many(batch)
+    t_scot = (time.perf_counter() - t0) / (n_rounds * K)
+    t0 = time.perf_counter()
+    for batch in batches:
+        ds_wf.search_many(batch)
+    t_wf = (time.perf_counter() - t0) / (n_rounds * K)
+    yield _row(f"batch/search_many-K{K}-HList-HP-scot", t_scot)
+    yield _row(f"batch/search_many-K{K}-HList-HP-waitfree", t_wf,
+               f"speedup={t_scot / t_wf:.2f}x")
+
     # ---- write path: insert+delete cycle, sequential vs batched ---------
-    smr = make_scheme("IBR")
-    ds = HarrisList(smr)
+    smr = api.scheme("IBR")
+    ds = api.build("HList", smr=smr)
     r = random.Random(23)
     cycles = [sorted(r.sample(range(key_range), K))
               for _ in range(max(1, n_rounds // 2))]
@@ -125,7 +157,7 @@ def bench_batch(quick: bool = True) -> Iterator[str]:
     # ---- prefix cache: legacy per-candidate loop vs single-pass ---------
     page_size = 8
     n_prompt_pages = 24
-    smr = make_scheme("IBR")
+    smr = api.scheme("IBR")
     pool = BlockPool(smr, n_prompt_pages + 8)
     cache = PrefixCache(smr, pool, page_size, num_buckets=64,
                         max_entries=4096)

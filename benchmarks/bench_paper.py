@@ -8,10 +8,13 @@ counters are the reproducible signal, not absolute EPYC-scale Mops)."""
 
 from __future__ import annotations
 
+from repro import api
 from repro.core.workload import run_workload
 
-SCHEMES = ["NR", "EBR", "HP", "HE", "IBR", "HLN"]
-SCOT_SCHEMES = ["HP", "HE", "IBR", "HLN"]
+# registry capability queries, not hardcoded lists: a newly registered
+# scheme appears in every figure grid automatically
+SCHEMES = api.schemes()
+SCOT_SCHEMES = api.schemes(robust=True)
 
 
 def _row(name, result):
@@ -34,7 +37,7 @@ def fig7_recovery(quick=True):
                     r = run_workload(
                         structure="HList", scheme=scheme, threads=t,
                         key_range=kr, workload="50r-50w", duration_s=dur,
-                        structure_kwargs={"recovery": rec})
+                        traversal=api.OptimisticSCOT(recovery=rec))
                     tag = "rec" if rec else "norec"
                     yield _row(f"fig7/HList-{scheme}-k{kr}-t{t}-{tag}", r)
 
@@ -77,7 +80,7 @@ def fig10_11_memory(quick=True):
     dur = 0.4 if quick else 3.0
     t = 4
     for structure, kr in (("HMList", 512), ("HList", 512), ("NMTree", 128)):
-        for scheme in ["EBR", "HP", "HE", "IBR"]:
+        for scheme in [s for s in api.schemes(reclaims=True) if s != "HLN"]:
             r = run_workload(structure=structure, scheme=scheme, threads=t,
                              key_range=kr, workload="50r-50w", duration_s=dur)
             yield (f"fig10-11/{structure}-{scheme}-k{kr}-mem,"
@@ -105,10 +108,37 @@ def scot_mechanism_counters(quick=True):
            f"cleanup_cas={r.ds_stats['cleanup_cas']}")
 
 
+def fig_waitfree(quick=True, workload="50r-50w"):
+    """§4 wait-free traversal variant vs default SCOT under every robust
+    scheme (the paper's promised modification, DESIGN.md §10).  Derived
+    fields carry the wait-free mechanism counters: anchor recoveries (the
+    second-level escapes the extra hazard slot buys on HP/HE) and careful
+    escalations (fast-path budget exhaustions)."""
+    threads = [4] if quick else [1, 4, 8, 16]
+    dur = 0.4 if quick else 3.0
+    for structure, kr in (("HList", 512), ("NMTree", 128)):
+        for scheme in api.schemes(robust=True):
+            for t in threads:
+                for trav in ("scot", "waitfree"):
+                    r = run_workload(structure=structure, scheme=scheme,
+                                     threads=t, key_range=kr,
+                                     workload=workload, duration_s=dur,
+                                     traversal=trav)
+                    ds = r.ds_stats
+                    extra = (f"restarts={ds.get('restarts', 0)};"
+                             f"anchor_recov={ds.get('anchor_recoveries', 0)};"
+                             f"escalations={ds.get('wf_escalations', 0)};"
+                             f"helps={ds.get('wf_helps', 0)}")
+                    us = 1e6 / max(r.total_ops / r.duration_s, 1e-9)
+                    yield (f"waitfree/{structure}-{scheme}-k{kr}-t{t}-{trav},"
+                           f"{us:.3f},mops={r.mops_per_s:.4f};{extra}")
+
+
 ALL_FIGS = {
     "fig7": fig7_recovery,
     "fig8": fig8_list_throughput,
     "fig9": fig9_tree_throughput,
     "fig10_11": fig10_11_memory,
     "scot_counters": scot_mechanism_counters,
+    "waitfree": fig_waitfree,
 }

@@ -10,6 +10,7 @@ import time
 import jax
 import numpy as np
 
+from repro import api
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import PagedServingEngine, Request
@@ -19,14 +20,21 @@ def bench_serving(quick=True):
     cfg = get_config("tinyllama-1.1b").reduced().replace(dtype="float32")
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(7))
-    schemes = ["EBR", "IBR"] if quick else ["EBR", "HP", "HE", "IBR", "HLN"]
+    # registry query, not a hardcoded list: every scheme that actually
+    # reclaims (NR would leak the page pool); quick mode takes one
+    # representative per family — cheapest non-robust vs the robust
+    # cumulative serving default
+    full = api.schemes(reclaims=True)
+    quick_pick = (api.schemes(reclaims=True, robust=False)[:1] +
+                  api.schemes(robust=True, cumulative_protection=True)[:1])
+    schemes = quick_pick if quick else full
     n_reqs = 6 if quick else 24
     for smr in schemes:
-        for optimistic in (True, False):
+        for traversal in (None, "hm"):
             eng = PagedServingEngine(model, params, smr=smr, num_pages=128,
                                      page_size=8, max_batch=4,
                                      max_seq_len=64,
-                                     prefix_optimistic=optimistic)
+                                     prefix_traversal=traversal)
             rng = np.random.RandomState(0)
             shared = list(rng.randint(1, 200, size=16))
             reqs = [Request(prompt=shared + list(rng.randint(1, 200, size=4)),
@@ -43,7 +51,7 @@ def bench_serving(quick=True):
             t.join(timeout=10)
             toks = sum(len(r.out_tokens) for r in reqs)
             stats = eng.stats()
-            tag = "harris" if optimistic else "hm"
+            tag = "harris" if traversal is None else "hm"
             yield (f"serving/{smr}-{tag},{dt / max(toks, 1) * 1e6:.1f},"
                    f"tok_s={toks / dt:.1f};hits={stats['prefix_cache']['hits']};"
                    f"unreclaimed={stats['pool']['awaiting_reclaim']}")

@@ -1,29 +1,74 @@
-"""Quickstart: the paper's technique in 60 seconds.
+"""Quickstart: the paper's technique in 60 seconds — through ``repro.api``,
+the one construction surface.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import threading
 
-from repro.core import make_scheme, HarrisList, NMTree, UseAfterFreeError
+from repro import api
+from repro.core import UseAfterFreeError
 
 
 def demo_scot_traversals():
     print("== SCOT: Harris' list under Hazard Pointers ==")
-    smr = make_scheme("HP", retire_scan_freq=1)
-    lst = HarrisList(smr)                       # SCOT on (the fix)
+    lst = api.build("HList", smr="HP",
+                    smr_kwargs={"retire_scan_freq": 1})  # SCOT negotiated on
     for k in [3, 1, 4, 1, 5, 9, 2, 6]:
         lst.insert(k)
     assert lst.search(4) and not lst.search(7)
     lst.delete(4)
     print("   list:", lst.snapshot())
-    print("   stats:", lst.stats(), smr.stats())
+    print("   stats:", lst.stats(), lst.smr.stats())
+
+
+def demo_negotiation():
+    print("== Capability negotiation: illegal pairs fail fast ==")
+    try:
+        api.build("HList", smr="HP", traversal="optimistic")
+    except api.IncompatiblePairError as e:
+        print("   rejected:", str(e)[:72], "...")
+    ok, _ = api.compatible("HList", "EBR", "optimistic")
+    print(f"   HList+EBR+optimistic legal: {ok} "
+          f"(robust schemes: {api.schemes(robust=True)})")
+
+
+def demo_waitfree():
+    print("== §4 wait-free traversals: a stalled writer can't block ==")
+    smr = api.scheme("HP", retire_scan_freq=1)
+    lst = api.build("HList", smr=smr, traversal="waitfree")
+    for k in range(0, 40, 2):
+        lst.insert(k)
+
+    stall = threading.Event()
+    stalled = threading.Event()
+
+    def stalled_writer():
+        # logically delete key 20 (mark its edge) then stall INSIDE the
+        # guard, before the physical unlink — the adversarial schedule
+        with smr.guard() as ctx:
+            node = lst.get_node(20, ctx)
+            nxt, _ = node.next_ref().get()
+            node.next_ref().compare_exchange(nxt, False, nxt, True)
+            stalled.set()
+            stall.wait(timeout=30)
+
+    t = threading.Thread(target=stalled_writer, daemon=True)
+    t.start()
+    stalled.wait(timeout=30)
+    hits = sum(lst.search(k) for k in range(40))  # readers sail past the mark
+    stats = lst.stats()
+    print(f"   searches done under a stalled writer: {hits} hits, "
+          f"restarts={stats['restarts']}, "
+          f"escalations={stats['wf_escalations']}")
+    stall.set()
+    t.join(timeout=10)
 
 
 def demo_figure1_bug():
-    print("== Figure 1: the pre-paper bug (scot=False) ==")
-    smr = make_scheme("HP", retire_scan_freq=1)
-    lst = HarrisList(smr, scot=False, recovery=False)  # the unsafe original
+    print("== Figure 1: the pre-paper bug (allow_unsafe=True) ==")
+    lst = api.build("HList", smr="HP", smr_kwargs={"retire_scan_freq": 1},
+                    traversal="optimistic", allow_unsafe=True)
     caught = []
 
     def churn(i):
@@ -54,8 +99,9 @@ def demo_figure1_bug():
 def demo_robustness():
     print("== Robustness: stalled thread, EBR vs IBR ==")
     for scheme in ("EBR", "IBR"):
-        smr = make_scheme(scheme, retire_scan_freq=8, epoch_freq=8)
-        lst = HarrisList(smr)
+        lst = api.build("HList", smr=scheme,
+                        smr_kwargs={"retire_scan_freq": 8, "epoch_freq": 8})
+        smr = lst.smr
         smr.begin_op()          # main thread "stalls" inside an operation
         smr.protect(lst.head.next_ref(), 0)
 
@@ -74,8 +120,7 @@ def demo_robustness():
 
 def demo_nm_tree():
     print("== Natarajan-Mittal tree with SCOT (IBR) ==")
-    smr = make_scheme("IBR")
-    tree = NMTree(smr)
+    tree = api.build("NMTree", smr="IBR")
     for k in range(1, 20, 2):
         tree.insert(k)
     tree.delete(7)
@@ -85,6 +130,8 @@ def demo_nm_tree():
 
 if __name__ == "__main__":
     demo_scot_traversals()
+    demo_negotiation()
+    demo_waitfree()
     demo_nm_tree()
     demo_robustness()
     demo_figure1_bug()

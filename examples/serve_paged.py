@@ -11,6 +11,7 @@ import time
 import jax
 import numpy as np
 
+from repro import api
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import PagedServingEngine, Request
@@ -18,8 +19,16 @@ from repro.serving import PagedServingEngine, Request
 
 def main():
     ap = argparse.ArgumentParser()
+    # scheme choices come from the registry (NR excluded: it never
+    # reclaims, so the page pool would leak dry)
     ap.add_argument("--smr", default="IBR",
-                    choices=["EBR", "HP", "HE", "IBR", "HLN"])
+                    choices=api.schemes(reclaims=True))
+    ap.add_argument("--prefix-traversal", default=None,
+                    choices=api.traversal_policies(),
+                    help="prefix-cache bucket traversal policy (default: "
+                         "negotiated — SCOT iff the scheme is robust); "
+                         "'waitfree' demos the paper's §4 variant on the "
+                         "admission path")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--clients", type=int, default=3)
@@ -29,7 +38,8 @@ def main():
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(7))
     eng = PagedServingEngine(model, params, smr=args.smr, num_pages=128,
-                             page_size=8, max_batch=4, max_seq_len=64)
+                             page_size=8, max_batch=4, max_seq_len=64,
+                             prefix_traversal=args.prefix_traversal)
     engine_thread = threading.Thread(target=eng.run, daemon=True)
     engine_thread.start()
 
@@ -60,7 +70,9 @@ def main():
     engine_thread.join(timeout=10)
 
     toks = sum(len(r.out_tokens) for r in reqs)
-    print(f"scheme={args.smr} requests={len(reqs)} generated={toks} tokens "
+    print(f"scheme={args.smr} "
+          f"prefix_traversal={eng.prefix_cache.policy.name} "
+          f"requests={len(reqs)} generated={toks} tokens "
           f"in {dt:.2f}s ({toks / dt:.1f} tok/s)")
     print("engine:", eng.stats())
     print("sample output tokens:", reqs[0].out_tokens)

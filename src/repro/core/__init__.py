@@ -17,11 +17,17 @@ from .atomics import (
 )
 from .smr import EBR, HE, HP, IBR, NR, SCHEMES, Hyaline1S, SmrScheme, make_scheme
 from .structures import (
+    CarefulHM,
     HarrisList,
     HarrisMichaelList,
+    IncompatiblePairError,
     LockFreeHashMap,
     NMTree,
+    OptimisticSCOT,
+    PlainOptimistic,
     SkipList,
+    TraversalPolicy,
+    WaitFreeSCOT,
 )
 
 __all__ = [
@@ -46,4 +52,10 @@ __all__ = [
     "NMTree",
     "SkipList",
     "LockFreeHashMap",
+    "TraversalPolicy",
+    "PlainOptimistic",
+    "OptimisticSCOT",
+    "CarefulHM",
+    "WaitFreeSCOT",
+    "IncompatiblePairError",
 ]

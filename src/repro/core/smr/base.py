@@ -159,11 +159,35 @@ class BatchGuard(Guard):
 
 
 class SmrScheme:
-    """Base class; subclasses override the `_` hooks."""
+    """Base class; subclasses override the `_` hooks.
+
+    Subclasses *declare capabilities* as class attributes; the
+    :mod:`repro.api` registry reads them off the class so compatibility
+    negotiation (which structures / traversal policies / batching modes a
+    scheme legally supports) has a single source of truth here, instead of
+    ``if scheme in (...)`` guards scattered over call sites.
+    """
 
     name = "base"
     robust = False                 # bounded garbage with stalled threads?
     cumulative_protection = False  # protect() never cancels older reservations?
+    reclaims = True                # ever frees memory? (NR: no — leak baseline)
+    # Cross-operation resumed-traversal hints inside one batch scope
+    # (DESIGN.md §4): "all" — hints may span levels/buckets freely (every
+    # node observed in the scope stays protected); "flat" — only the flat
+    # lists' single pinned-prev hint is legal (one-shot slot reservations).
+    batch_hints = "flat"
+
+    @classmethod
+    def capabilities(cls) -> Dict[str, object]:
+        """The scheme's capability declaration (registry source of truth)."""
+        return {
+            "name": cls.name,
+            "robust": cls.robust,
+            "cumulative_protection": cls.cumulative_protection,
+            "reclaims": cls.reclaims,
+            "batch_hints": cls.batch_hints,
+        }
 
     def __init__(
         self,

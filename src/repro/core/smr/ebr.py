@@ -18,6 +18,7 @@ class EBR(SmrScheme):
     name = "EBR"
     robust = False
     cumulative_protection = True  # plain loads; no per-pointer reservations
+    batch_hints = "all"
 
     def _on_begin(self, c: ThreadCtx) -> None:
         c.epoch = self.era.load()

@@ -19,6 +19,7 @@ class HE(SmrScheme):
     name = "HE"
     robust = True
     cumulative_protection = False  # protect(idx) replaces the slot's era
+    batch_hints = "flat"           # only slot-resident eras stay published
 
     def _publish_read(self, c: ThreadCtx, idx: int, read):
         if idx >= c.hwm:

@@ -20,6 +20,7 @@ class HP(SmrScheme):
     name = "HP"
     robust = True
     cumulative_protection = False  # protect(idx) cancels the old slot content
+    batch_hints = "flat"           # only slot-resident nodes stay pinned
 
     # ------------------------------------------------------------ protect
     def _reserve_markable(self, c: ThreadCtx, src: AtomicMarkableRef, idx: int):

@@ -40,6 +40,7 @@ class Hyaline1S(SmrScheme):
     name = "HLN"
     robust = True
     cumulative_protection = True
+    batch_hints = "all"
 
     def __init__(self, *args, batch_size: int = 16, **kwargs):
         super().__init__(*args, **kwargs)

@@ -20,6 +20,7 @@ class IBR(SmrScheme):
     name = "IBR"
     robust = True
     cumulative_protection = True
+    batch_hints = "all"
 
     def _on_begin(self, c: ThreadCtx) -> None:
         e = self.era.load()

@@ -10,6 +10,8 @@ class NR(SmrScheme):
     name = "NR"
     robust = False
     cumulative_protection = True  # nothing is ever reclaimed → trivially safe
+    reclaims = False              # the leak is the point
+    batch_hints = "all"
 
     def _on_retire(self, c: ThreadCtx, node: SmrNode) -> None:
         # Leak: count it, never free.

@@ -1,4 +1,4 @@
-"""Non-blocking data structures (paper Table 1)."""
+"""Non-blocking data structures (paper Table 1) + traversal policies."""
 
 from .harris_list import HarrisList
 from .hashmap import LockFreeHashMap
@@ -6,6 +6,16 @@ from .hm_list import HarrisMichaelList
 from .nm_tree import NMTree
 from .node import ListNode, TowerNode, TreeNode
 from .skiplist import SkipList
+from .traversal import (
+    CarefulHM,
+    IncompatiblePairError,
+    OptimisticSCOT,
+    PlainOptimistic,
+    TraversalPolicy,
+    WaitFreeSCOT,
+    as_policy,
+    default_policy,
+)
 
 __all__ = [
     "HarrisList",
@@ -16,4 +26,12 @@ __all__ = [
     "ListNode",
     "TowerNode",
     "TreeNode",
+    "TraversalPolicy",
+    "PlainOptimistic",
+    "OptimisticSCOT",
+    "CarefulHM",
+    "WaitFreeSCOT",
+    "IncompatiblePairError",
+    "as_policy",
+    "default_policy",
 ]

@@ -24,10 +24,14 @@ uniform SMR API, plus the §3.2.1 recovery optimization:
   ``recovery_depth`` predecessors (Figure 6); HP/HE must restart from the
   head (extra hazard slots would cost barriers).
 
-``scot=False`` reproduces the **pre-paper buggy behaviour** (optimistic
-traversal without validation) so tests can demonstrate Figure 1's
-use-after-free: the shim raises :class:`UseAfterFreeError` where real
-hardware would SEGFAULT or silently corrupt.
+The traversal strategy is a pluggable :class:`~.traversal.TraversalPolicy`
+(``policy="optimistic" | "scot" | "waitfree"``): ``optimistic`` reproduces
+the **pre-paper buggy behaviour** (no validation) so tests can demonstrate
+Figure 1's use-after-free — the shim raises :class:`UseAfterFreeError`
+where real hardware would SEGFAULT; ``waitfree`` adds the paper's §4
+wait-free modification (anchor slot Hp4 + careful escalation, DESIGN.md
+§10).  The legacy ``scot=``/``recovery=`` booleans still map onto policies
+for one release (deprecated).
 """
 
 from __future__ import annotations
@@ -38,11 +42,13 @@ from ..atomics import AtomicInt, Recycler, UseAfterFreeError
 from ..smr.base import SmrScheme
 from .batched import BatchedListOps
 from .node import ListNode
+from .traversal import UNSET, TraversalPolicy, resolve_ctor_policy
 
 HP_NEXT = 0   # Hp0
 HP_CURR = 1   # Hp1
 HP_PREV = 2   # Hp2 — last safe node
 HP_UNSAFE = 3  # Hp3 — first unsafe node (SCOT's extra slot)
+HP_ANCHOR = 4  # Hp4 — trailing safe node (wait-free policy only, §4)
 
 _RESTART = object()  # sentinel: full restart requested
 
@@ -56,21 +62,32 @@ class HarrisList(BatchedListOps):
     (``_insert_from``/``_delete_from``) they are built from."""
 
     HP_SLOTS = 4
+    POLICIES = ("optimistic", "scot", "waitfree")
+
+    @classmethod
+    def slots_needed(cls, policy: TraversalPolicy) -> int:
+        return cls.HP_SLOTS + policy.extra_list_slots
 
     def __init__(
         self,
         smr: SmrScheme,
-        scot: Optional[bool] = None,
-        recovery: bool = True,
-        recovery_depth: int = 8,   # paper §3.2.1: ring of 8 is ~optimal
+        policy=None,
+        *,
+        scot=UNSET,
+        recovery=UNSET,
+        recovery_depth=UNSET,   # paper §3.2.1: ring of 8 is ~optimal
         recycle: bool = False,
     ):
         self.smr = smr
-        # SCOT is required exactly by the robust schemes (HP/HE/IBR/HLN);
-        # NR/EBR traverse safely without per-pointer validation (paper §5).
-        self.scot = smr.robust if scot is None else scot
-        self.recovery = recovery
-        self.recovery_depth = recovery_depth
+        # Default policy = the paper's rule: SCOT exactly under the robust
+        # schemes (HP/HE/IBR/HLN); NR/EBR traverse safely without validation.
+        self.policy = p = resolve_ctor_policy(
+            type(self), smr, policy,
+            scot=scot, recovery=recovery, recovery_depth=recovery_depth)
+        self.scot = p.validates
+        self.recovery = p.recovery
+        self.recovery_depth = p.recovery_depth
+        self.wait_free = p.wait_free
         self.head = ListNode(float("-inf"))  # sentinel, never retired
         self.recycler = Recycler(ListNode) if recycle else None
         if recycle:
@@ -81,6 +98,8 @@ class HarrisList(BatchedListOps):
         self.n_recoveries = AtomicInt()
         self.n_ring_recoveries = AtomicInt()
         self.n_validation_failures = AtomicInt()
+        self.n_anchor_recoveries = AtomicInt()   # wait-free: 2nd-level escapes
+        self.n_wf_escalations = AtomicInt()      # wait-free: careful fallbacks
 
     # ------------------------------------------------------------------ API
     def insert(self, key, value=None, ctx=None) -> bool:
@@ -152,17 +171,37 @@ class HarrisList(BatchedListOps):
               ) -> Tuple[ListNode, Optional[ListNode], bool]:
         if ctx is None:
             ctx = self.smr.ctx()
+        restarts = 0
+        max_restarts = self.policy.max_restarts
         while True:
             out = self._find_attempt(key, srch, ctx, start)
             if out is not _RESTART:
                 return out
             start = None  # restarts go back to the head
             self.n_restarts.fetch_add(1)
+            restarts += 1
+            if self.wait_free and restarts >= max_restarts:
+                # §4 escalation: the optimistic fast path has been knocked
+                # over `max_restarts` times by concurrent unlinks — switch
+                # to the careful walk, whose progress is monotone.
+                self.n_wf_escalations.fetch_add(1)
+                return self._find_careful(key, ctx)
 
     def _find_attempt(self, key, srch: bool, ctx, start=None):
         smr = self.smr
         cumulative = smr.cumulative_protection
         ring = [] if (self.recovery and cumulative) else None
+        wait_free = self.wait_free
+        # §4 anchor: the safe node one step behind `prev`, pinned in
+        # HP_ANCHOR.  Gives one-shot schemes (HP/HE) a second recovery
+        # level: a head restart then needs BOTH prev and anchor deleted.
+        anchor: Optional[ListNode] = None
+        # Whether `prev`'s pin provably lives in Hp2 RIGHT NOW.  False for
+        # the head and for a resumed-from hint: a hint returned by an
+        # anchor-recovered find is pinned in Hp4, not Hp2 (batched.py's
+        # Hp2 invariant holds only for normally-finished finds), so
+        # copying Hp2 up would record an unpinned node as the anchor.
+        prev_pinned = False
 
         prev: ListNode = start if start is not None else self.head
         curr, smark = smr.protect(prev.next_ref(), HP_CURR, ctx)
@@ -187,8 +226,23 @@ class HarrisList(BatchedListOps):
                     ring.append(curr)
                     if len(ring) > self.recovery_depth:
                         ring.pop(0)
+                if wait_free:
+                    if prev is anchor:
+                        pass      # pin already lives in Hp4 (anchor resume)
+                    elif prev_pinned:
+                        # prev's pin lives in Hp2; copy it up (ascending
+                        # dup 2→4, §3.2 rule) before Hp2 is overwritten —
+                        # never downward, a descending copy can lose the
+                        # pin to a concurrently ascending scan
+                        smr.dup(HP_PREV, HP_ANCHOR, ctx)
+                        anchor = prev
+                    else:
+                        # head / resumed hint: no provable slot pin ⇒ not
+                        # a legal anchor (one advance of lost coverage)
+                        anchor = None
                 smr.dup(HP_CURR, HP_PREV, ctx)   # Hp1[curr] → Hp2 (prev)
                 prev = curr
+                prev_pinned = True
                 smr.dup(HP_NEXT, HP_CURR, ctx)   # Hp0[next] → Hp1 (curr)
                 prev_next = nxt
                 curr = nxt
@@ -215,9 +269,13 @@ class HarrisList(BatchedListOps):
                     # previous protect) now pins it.
                     if prev.next_ref().get() != (chain_start, False):
                         self.n_validation_failures.fetch_add(1)
-                        resumed = self._recover(prev, ring, ctx)
+                        resumed = self._recover(prev, ring, ctx, anchor)
                         if resumed is _RESTART:
                             return _RESTART
+                        # a resume that MOVED prev (ring/anchor fallback)
+                        # invalidates the Hp2 pin claim; `prev is anchor`
+                        # keeps the anchor-resume case covered via Hp4
+                        prev_pinned = prev_pinned and resumed[0] is prev
                         prev, curr, nxt, nmark = resumed
                         prev_next = curr
                         if curr is None:
@@ -243,8 +301,17 @@ class HarrisList(BatchedListOps):
                 ring.append(curr)
                 if len(ring) > self.recovery_depth:
                     ring.pop(0)
+            if wait_free:
+                if prev is anchor:
+                    pass
+                elif prev_pinned:
+                    smr.dup(HP_PREV, HP_ANCHOR, ctx)  # same rule as Phase 1
+                    anchor = prev
+                else:
+                    anchor = None
             smr.dup(HP_CURR, HP_PREV, ctx)
             prev = curr
+            prev_pinned = True
             smr.dup(HP_NEXT, HP_CURR, ctx)   # Hp1 must pin nxt BEFORE Phase 1
             # re-reads its next word (which overwrites Hp0) — omitting this
             # shift leaves the new curr unpinned and, one step later, lets
@@ -254,8 +321,14 @@ class HarrisList(BatchedListOps):
             # loop back into Phase 1
 
     # ---------------------------------------------------------- recovery
-    def _recover(self, prev: ListNode, ring, ctx):
-        """§3.2.1: escape the dangerous zone instead of a full restart."""
+    def _recover(self, prev: ListNode, ring, ctx, anchor=None):
+        """§3.2.1: escape the dangerous zone instead of a full restart.
+
+        The wait-free policy (§4, DESIGN.md §10) adds a second level for
+        one-shot schemes: ``anchor`` — the safe node one step behind
+        ``prev``, pinned in its own hazard slot (Hp4) — is tried after
+        ``prev`` and the cumulative ring, so a head restart requires two
+        distinct successful unlink CASes landing on the reader's path."""
         if not self.recovery:
             return _RESTART
         smr = self.smr
@@ -271,21 +344,84 @@ class HarrisList(BatchedListOps):
             return (prev, curr, nxt, nmark)
         # prev itself got deleted.  Cumulative schemes (IBR/HLN) may fall
         # back through still-protected predecessors (Figure 6); HP/HE restart
-        # (extra hazard slots would cost barriers — paper §3.2.1).
-        if ring is None:
-            return _RESTART
-        while ring:
-            cand = ring.pop()
-            # ring nodes stay protected under cumulative schemes ⇒ deref safe
-            curr, cmark = smr.protect(cand.next_ref(), HP_CURR, ctx)
-            if cmark:
-                continue  # this predecessor was deleted too; fall further back
-            self.n_ring_recoveries.fetch_add(1)
-            if curr is None:
-                return (cand, None, None, False)
-            nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
-            return (cand, curr, nxt, nmark)
+        # (extra hazard slots would cost barriers — paper §3.2.1), unless
+        # the wait-free policy bought the anchor slot.
+        if ring is not None:
+            while ring:
+                cand = ring.pop()
+                # ring nodes stay protected under cumulative schemes ⇒ safe
+                curr, cmark = smr.protect(cand.next_ref(), HP_CURR, ctx)
+                if cmark:
+                    continue  # this predecessor was deleted too; fall back
+                self.n_ring_recoveries.fetch_add(1)
+                if curr is None:
+                    return (cand, None, None, False)
+                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
+                return (cand, curr, nxt, nmark)
+        if anchor is not None and anchor is not prev \
+                and anchor is not self.head:
+            # anchor is pinned in Hp4 ⇒ dereferenceable even under HP/HE;
+            # an unmarked edge out of it proves it is still linked, so the
+            # protected successor is reachable — same argument as the
+            # one-shot `prev` resume above.
+            curr, amark = smr.protect(anchor.next_ref(), HP_CURR, ctx)
+            if not amark:
+                self.n_anchor_recoveries.fetch_add(1)
+                if curr is None:
+                    return (anchor, None, None, False)
+                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
+                return (anchor, curr, nxt, nmark)
         return _RESTART
+
+    # ----------------------------------------------- §4 careful slow path
+    def _find_careful(self, key, ctx):
+        """Wait-free escalation (DESIGN.md §10): a Harris-Michael-style
+        walk.  Every marked node it meets is a *chain head* and is unlinked
+        by this traversal's own CAS (preserving Lemma 1: chains still only
+        ever shrink from their head, so concurrent SCOT validations stay
+        sound); a failed unlink CAS means another thread removed that exact
+        node — each marked obstruction is gone either way, it cannot knock
+        the walk back twice.  The walk is NOT wait-free against arbitrary
+        active writers: Michael's edge check also fails on a concurrent
+        *insert* between prev and curr, so every restart is charged to a
+        successful writer CAS (lock-free, same as the structure itself) —
+        the unconditional bound the policy guarantees is the stalled-writer
+        one (see DESIGN.md §10).  Trade-off (documented, §4): past the
+        restart budget even a read-only search may CAS — the
+        fast-path/slow-path shape of wait-free constructions."""
+        smr = self.smr
+        while True:
+            prev: ListNode = self.head
+            curr, _ = smr.protect(prev.next_ref(), HP_CURR, ctx)
+            restart = False
+            while True:
+                if curr is None:
+                    return (prev, None, False)
+                nxt, nmark = smr.protect(curr.next_ref(), HP_NEXT, ctx)
+                # re-validate the incoming edge (Michael's check)
+                if prev.next_ref().get() != (curr, False):
+                    restart = True
+                    break
+                if nmark:
+                    # curr is the head of a marked chain: unlink it (one
+                    # node, from the head — Lemma 1 shape) and retire it;
+                    # unlinker-retires matches the delete path's rule.
+                    if not prev.next_ref().compare_exchange(curr, False,
+                                                            nxt, False):
+                        restart = True
+                        break
+                    smr.retire(curr, ctx)
+                    smr.dup(HP_NEXT, HP_CURR, ctx)
+                    curr = nxt
+                    continue
+                if curr.key >= key:
+                    return (prev, curr, curr.key == key)
+                smr.dup(HP_CURR, HP_PREV, ctx)
+                prev = curr
+                smr.dup(HP_NEXT, HP_CURR, ctx)
+                curr = nxt
+            if restart:
+                self.n_restarts.fetch_add(1)
 
     # ------------------------------------------------------------ finish
     def _finish(self, prev, prev_next, curr, srch: bool, key, ctx):
@@ -323,4 +459,6 @@ class HarrisList(BatchedListOps):
             "recoveries": self.n_recoveries.load(),
             "ring_recoveries": self.n_ring_recoveries.load(),
             "validation_failures": self.n_validation_failures.load(),
+            "anchor_recoveries": self.n_anchor_recoveries.load(),
+            "wf_escalations": self.n_wf_escalations.load(),
         }

@@ -8,26 +8,37 @@ see ``repro/runtime/prefix_cache.py``).
 
 from __future__ import annotations
 
-from typing import Optional
-
 from ..smr.base import SmrScheme
 from .harris_list import HarrisList
 from .hm_list import HarrisMichaelList
+from .traversal import UNSET, TraversalPolicy, resolve_ctor_policy
 
 
 class LockFreeHashMap:
+    # delegates to the bucket lists: "hm" → Harris-Michael buckets, every
+    # other policy → Harris buckets running that policy
+    POLICIES = ("optimistic", "scot", "waitfree", "hm")
+
+    @classmethod
+    def slots_needed(cls, policy: TraversalPolicy) -> int:
+        if policy.careful:
+            return HarrisMichaelList.HP_SLOTS
+        return HarrisList.HP_SLOTS + policy.extra_list_slots
+
     def __init__(self, smr: SmrScheme, num_buckets: int = 64,
-                 optimistic: bool = True, scot: Optional[bool] = None,
-                 recovery: bool = True):
+                 policy=None, *, optimistic=UNSET, scot=UNSET,
+                 recovery=UNSET):
         self.smr = smr
         self.num_buckets = num_buckets
-        if optimistic:
-            self.buckets = [
-                HarrisList(smr, scot=scot, recovery=recovery)
-                for _ in range(num_buckets)
-            ]
+        self.policy = p = resolve_ctor_policy(
+            type(self), smr, policy,
+            optimistic=optimistic, scot=scot, recovery=recovery)
+        if p.careful:
+            self.buckets = [HarrisMichaelList(smr)
+                            for _ in range(num_buckets)]
         else:
-            self.buckets = [HarrisMichaelList(smr) for _ in range(num_buckets)]
+            self.buckets = [HarrisList(smr, policy=p)
+                            for _ in range(num_buckets)]
 
     def _bucket(self, key):
         return self.buckets[hash(key) % self.num_buckets]

@@ -14,6 +14,7 @@ from ..atomics import AtomicInt, Recycler
 from ..smr.base import SmrScheme
 from .batched import BatchedListOps
 from .node import ListNode
+from .traversal import CarefulHM, TraversalPolicy, resolve_ctor_policy
 
 HP_NEXT = 0
 HP_CURR = 1
@@ -24,9 +25,18 @@ _RESTART = object()
 
 class HarrisMichaelList(BatchedListOps):
     HP_SLOTS = 3
+    # the careful traversal IS this structure — no other policy applies
+    POLICIES = ("hm",)
 
-    def __init__(self, smr: SmrScheme, recycle: bool = False):
+    @classmethod
+    def slots_needed(cls, policy: TraversalPolicy) -> int:
+        return cls.HP_SLOTS
+
+    def __init__(self, smr: SmrScheme, policy=None, recycle: bool = False):
         self.smr = smr
+        self.policy = resolve_ctor_policy(type(self), smr,
+                                          policy if policy is not None
+                                          else CarefulHM())
         self.head = ListNode(float("-inf"))
         self.recycler = Recycler(ListNode) if recycle else None
         if recycle:

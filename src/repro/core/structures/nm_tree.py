@@ -31,6 +31,7 @@ from typing import NamedTuple, Optional
 from ..atomics import AtomicInt
 from ..smr.base import SmrScheme
 from .node import TreeNode
+from .traversal import UNSET, TraversalPolicy, resolve_ctor_policy
 
 # hazard slot indices — dup() requires ascending moves (paper §3.2)
 S_CURR = 0
@@ -57,10 +58,20 @@ class NMTree:
     """Lock-free external BST (set interface)."""
 
     HP_SLOTS = 5
+    POLICIES = ("optimistic", "scot", "waitfree")
 
-    def __init__(self, smr: SmrScheme, scot: Optional[bool] = None):
+    @classmethod
+    def slots_needed(cls, policy: TraversalPolicy) -> int:
+        # the tree's wait-free variant helps instead of anchoring (the paper
+        # found predecessor recovery unhelpful for trees) — no extra slot
+        return cls.HP_SLOTS
+
+    def __init__(self, smr: SmrScheme, policy=None, *, scot=UNSET):
         self.smr = smr
-        self.scot = smr.robust if scot is None else scot
+        self.policy = p = resolve_ctor_policy(type(self), smr, policy,
+                                              scot=scot)
+        self.scot = p.validates
+        self.wait_free = p.wait_free
         # R(inf2) / S(inf1) sentinel skeleton; sentinels are never retired.
         #        R(inf2)
         #       /      \
@@ -76,6 +87,8 @@ class NMTree:
         self.n_restarts = AtomicInt()
         self.n_validation_failures = AtomicInt()
         self.n_unlink_cas = AtomicInt()
+        self.n_wf_escalations = AtomicInt()  # wait-free: helping fallbacks
+        self.n_wf_helps = AtomicInt()        # wait-free: cleanups from seeks
 
     # ------------------------------------------------------------------ API
     def search(self, key) -> bool:
@@ -205,13 +218,25 @@ class NMTree:
     def _seek(self, key, ctx=None) -> _SeekRecord:
         if ctx is None:
             ctx = self.smr.ctx()
+        restarts = 0
+        helping = False
+        max_restarts = self.policy.max_restarts
         while True:
-            out = self._seek_attempt(key, ctx)
+            out = self._seek_attempt(key, ctx, helping)
             if out is not _RESTART:
                 return out
             self.n_restarts.fetch_add(1)
+            restarts += 1
+            if self.wait_free and not helping and restarts >= max_restarts:
+                # §4 escalation for the tree (DESIGN.md §10): convert the
+                # restart loop into *helping* — subsequent descents finish
+                # any pending flagged delete they collide with (the tree's
+                # own cleanup), removing the obstruction instead of
+                # spinning on it.
+                self.n_wf_escalations.fetch_add(1)
+                helping = True
 
-    def _seek_attempt(self, key, ctx):
+    def _seek_attempt(self, key, ctx, helping: bool = False):
         smr = self.smr
         ancestor: TreeNode = self.R
         successor: TreeNode = self.S
@@ -238,6 +263,18 @@ class NMTree:
                 if aref is not successor or atag:
                     self.n_validation_failures.fetch_add(1)
                     return _RESTART
+            if helping and f and child is not None and child.is_leaf:
+                # wait-free escalation: the edge into this leaf is flagged —
+                # a pending delete that keeps mutating our path.  Our seek
+                # record is exactly the helper record `_insert` would use
+                # (same key routes to the same leaf), and ancestor /
+                # successor / parent are pinned in their slots, so finish
+                # the removal and re-descend.  Flag/tag bits are monotone:
+                # each obstruction can be helped at most once.
+                self.n_wf_helps.fetch_add(1)
+                self._cleanup(key, _SeekRecord(ancestor, successor,
+                                               parent, child), ctx)
+                return _RESTART
             curr, cflag, ctag = child, f, t
         smr.dup(S_CURR, S_LEAF, ctx)
         return _SeekRecord(ancestor, successor, parent, curr)
@@ -327,4 +364,6 @@ class NMTree:
             "restarts": self.n_restarts.load(),
             "validation_failures": self.n_validation_failures.load(),
             "unlink_cas": self.n_unlink_cas.load(),
+            "wf_escalations": self.n_wf_escalations.load(),
+            "wf_helps": self.n_wf_helps.load(),
         }

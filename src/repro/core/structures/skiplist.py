@@ -24,6 +24,7 @@ from typing import List, Optional, Tuple
 from ..atomics import AtomicInt
 from ..smr.base import SmrScheme
 from .node import TowerNode
+from .traversal import UNSET, TraversalPolicy, resolve_ctor_policy
 
 HP_NEXT = 0
 HP_CURR = 1
@@ -35,11 +36,21 @@ _RESTART = object()
 
 class SkipList:
     HP_SLOTS = 4
+    # per-level Harris traversals: plain or SCOT-validated.  No wait-free
+    # variant — the level-0 deletion owner's unlink loop is where the
+    # structure's progress argument lives, not the traversal.
+    POLICIES = ("optimistic", "scot")
+
+    @classmethod
+    def slots_needed(cls, policy: TraversalPolicy) -> int:
+        return cls.HP_SLOTS
 
     def __init__(self, smr: SmrScheme, max_height: int = 12,
-                 scot: Optional[bool] = None, seed: Optional[int] = None):
+                 policy=None, *, scot=UNSET, seed: Optional[int] = None):
         self.smr = smr
-        self.scot = smr.robust if scot is None else scot
+        self.policy = p = resolve_ctor_policy(type(self), smr, policy,
+                                              scot=scot)
+        self.scot = p.validates
         self.max_height = max_height
         self.head = TowerNode(float("-inf"), max_height)
         self._rng = random.Random(seed)

@@ -16,30 +16,15 @@ import random
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
-from .smr import SCHEMES, SmrScheme, make_scheme
-from .structures.harris_list import HarrisList
-from .structures.hm_list import HarrisMichaelList
-from .structures.nm_tree import NMTree
-from .structures.hashmap import LockFreeHashMap
-from .structures.skiplist import SkipList
+from ..api import build
+from .smr import SmrScheme
 
 WORKLOADS = {
     "50r-50w": (0.50, 0.25, 0.25),
     "90r-10w": (0.90, 0.05, 0.05),
     "0r-100w": (0.00, 0.50, 0.50),
-}
-
-STRUCTURES: Dict[str, Callable] = {
-    "HList": lambda smr, **kw: HarrisList(smr, **kw),
-    "HMList": lambda smr, **kw: HarrisMichaelList(
-        smr, **{k: v for k, v in kw.items() if k in ("recycle",)}),
-    "NMTree": lambda smr, **kw: NMTree(
-        smr, **{k: v for k, v in kw.items() if k in ("scot",)}),
-    "HashMap": lambda smr, **kw: LockFreeHashMap(smr, **kw),
-    "SkipList": lambda smr, **kw: SkipList(
-        smr, **{k: v for k, v in kw.items() if k in ("scot",)}),
 }
 
 
@@ -58,6 +43,7 @@ class WorkloadResult:
     smr_stats: Dict[str, int] = field(default_factory=dict)
     ds_stats: Dict[str, int] = field(default_factory=dict)
     batch_size: int = 1  # 1 = op-at-a-time; >1 = *_many batched driver
+    traversal: str = ""  # resolved TraversalPolicy name
 
     def row(self) -> str:
         return (
@@ -79,10 +65,14 @@ def run_workload(
     structure_kwargs: Optional[dict] = None,
     scheme_kwargs: Optional[dict] = None,
     batch_size: int = 1,
+    traversal=None,
 ) -> WorkloadResult:
     read_p, ins_p, _ = WORKLOADS[workload]
-    smr: SmrScheme = make_scheme(scheme, **(scheme_kwargs or {}))
-    ds = STRUCTURES[structure](smr, **(structure_kwargs or {}))
+    # the ONLY construction path: the facade negotiates (structure, scheme,
+    # traversal) and raises IncompatiblePairError on illegal grids
+    ds = build(structure=structure, smr=scheme, traversal=traversal,
+               smr_kwargs=scheme_kwargs, **(structure_kwargs or {}))
+    smr: SmrScheme = ds.smr
 
     # prefill with 50% of the key range (paper §5)
     rng = random.Random(seed)
@@ -188,6 +178,7 @@ def run_workload(
         smr_stats=smr.stats(),
         ds_stats=ds.stats() if hasattr(ds, "stats") else {},
         batch_size=batch_size,
+        traversal=ds.policy.name,
     )
 
 

@@ -26,13 +26,14 @@ as the eviction proceeds (no page is recycled under it)."""
 from __future__ import annotations
 
 import threading
+import warnings
 from collections import deque
 from typing import Deque, List, Optional, Sequence, Tuple
 
+from .. import api
 from ..core.atomics import AtomicInt
 from ..core.smr.base import SmrScheme, ThreadCtx
-from ..core.structures.harris_list import HarrisList
-from ..core.structures.hm_list import HarrisMichaelList
+from ..core.structures.traversal import UNSET
 from .block_pool import BlockPool, PageNode
 
 _FNV_OFFSET = 1469598103934665603
@@ -77,15 +78,27 @@ class PrefixCache:
     """Bucketed SCOT lists mapping prefix-hash → (pages, n_tokens)."""
 
     def __init__(self, smr: SmrScheme, pool: BlockPool, page_size: int,
-                 num_buckets: int = 64, optimistic: bool = True,
-                 max_entries: int = 4096):
+                 num_buckets: int = 64, optimistic=UNSET,
+                 max_entries: int = 4096, traversal=None):
         self.smr = smr
         self.pool = pool
         self.page_size = page_size
         self.num_buckets = num_buckets
         self.max_entries = max_entries
-        mk = HarrisList if optimistic else HarrisMichaelList
-        self.buckets = [mk(smr) for _ in range(num_buckets)]
+        if optimistic is not UNSET:
+            if traversal is not None:
+                raise TypeError("PrefixCache: pass either traversal= or "
+                                "the deprecated optimistic= flag, not both")
+            warnings.warn("PrefixCache(optimistic=...) is deprecated; pass "
+                          "traversal='hm' for the Harris-Michael buckets",
+                          DeprecationWarning, stacklevel=2)
+            traversal = None if optimistic else "hm"
+        structure = "HMList" if (traversal is not None and
+                                 api.as_policy(traversal).careful) else "HList"
+        # negotiate once, then build every bucket through the facade
+        self.policy = api.check(structure, smr, traversal)
+        self.buckets = [api.build(structure, smr=smr, traversal=self.policy)
+                        for _ in range(num_buckets)]
         self.n_entries = AtomicInt(0)
         self.n_hits = AtomicInt(0)
         self.n_misses = AtomicInt(0)

@@ -23,6 +23,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -30,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.smr import make_scheme
+from .. import api
 from ..kernels import ops
 from ..models.layers import apply_rope, rms_norm, rope_angles
 from ..models.transformer import _qkv
@@ -69,7 +70,8 @@ class PagedServingEngine:
                  num_pages: int = 256, page_size: int = 8,
                  max_batch: int = 4, max_seq_len: int = 256,
                  prefix_cache_entries: int = 128,
-                 prefix_optimistic: bool = True):
+                 prefix_optimistic: Optional[bool] = None,
+                 prefix_traversal=None):
         cfg = model.cfg
         assert cfg.family == "dense", "engine v1 serves dense models"
         self.model = model
@@ -78,14 +80,28 @@ class PagedServingEngine:
         self.page_size = page_size
         self.max_batch = max_batch
         self.max_pages = max_seq_len // page_size
-        self.smr = make_scheme(smr, retire_scan_freq=16, epoch_freq=16)
+        # facade-resolved scheme: `smr` may be a registry name or an
+        # already-constructed SmrScheme shared with other subsystems
+        self.smr = api.scheme(smr) if not isinstance(smr, str) else \
+            api.scheme(smr, retire_scan_freq=16, epoch_freq=16)
         self.pool = BlockPool(self.smr, num_pages)
         # page 0 is reserved scratch: padded/dummy batch rows write to it
         with self.pool._lock:
             self.pool._free_ids.remove(0)
+        if prefix_optimistic is not None:
+            # thin shim for the pre-facade flag (one release)
+            if prefix_traversal is not None:
+                raise TypeError("PagedServingEngine: pass either "
+                                "prefix_traversal= or the deprecated "
+                                "prefix_optimistic= flag, not both")
+            warnings.warn("PagedServingEngine(prefix_optimistic=...) is "
+                          "deprecated; pass prefix_traversal='hm' for the "
+                          "Harris-Michael prefix-cache buckets",
+                          DeprecationWarning, stacklevel=2)
+            prefix_traversal = None if prefix_optimistic else "hm"
         self.prefix_cache = PrefixCache(self.smr, self.pool, page_size,
                                         max_entries=prefix_cache_entries,
-                                        optimistic=prefix_optimistic)
+                                        traversal=prefix_traversal)
         L = cfg.n_layers
         kv = (L, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
         self.k_pages = jnp.zeros(kv, getattr(jnp, cfg.dtype))

@@ -18,17 +18,18 @@ import threading
 import time
 from typing import Callable, Dict, Optional
 
+from .. import api
 from ..core.atomics import AtomicInt
-from ..core.smr import make_scheme
-from ..core.structures.harris_list import HarrisList
 
 
 class HeartbeatRegistry:
     """node_id → last-heartbeat, on a SCOT list under a robust scheme."""
 
     def __init__(self, smr_name: str = "IBR", stale_after_s: float = 5.0):
-        self.smr = make_scheme(smr_name, retire_scan_freq=16, epoch_freq=16)
-        self.members = HarrisList(self.smr)
+        self.members = api.build(
+            "HList", smr=smr_name,
+            smr_kwargs={"retire_scan_freq": 16, "epoch_freq": 16})
+        self.smr = self.members.smr
         self.stale_after_s = stale_after_s
         self._beats: Dict[int, float] = {}
         self._lock = threading.Lock()

@@ -243,6 +243,7 @@ def test_ds_stats_counters_survive_refactor():
         ds.delete(k)
     st = ds.stats()
     assert set(st) == {"restarts", "recoveries", "ring_recoveries",
-                      "validation_failures"}
+                       "validation_failures", "anchor_recoveries",
+                       "wf_escalations"}
     assert all(v >= 0 for v in st.values())
     assert ds.snapshot() == sorted(range(1, 32, 2))

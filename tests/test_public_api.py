@@ -1,0 +1,88 @@
+"""Public-API snapshot: the exported surface of ``repro.api`` and
+``repro.core`` is part of the contract this repo ships.
+
+A change that adds/removes/renames an exported name must update this
+snapshot deliberately (reviewed diff) — accidental surface drift fails CI.
+"""
+
+import repro.api as api
+import repro.core as core
+
+API_SURFACE = sorted([
+    "IncompatiblePairError",
+    "TraversalPolicy",
+    "PlainOptimistic",
+    "OptimisticSCOT",
+    "CarefulHM",
+    "WaitFreeSCOT",
+    "SchemeInfo",
+    "StructureInfo",
+    "build",
+    "scheme",
+    "schemes",
+    "structures",
+    "traversal_policies",
+    "scheme_info",
+    "structure_info",
+    "check",
+    "compatible",
+    "capability_matrix",
+    "as_policy",
+    "default_policy",
+])
+
+CORE_SURFACE = sorted([
+    # atomics substrate
+    "AtomicFlaggedRef", "AtomicInt", "AtomicMarkableRef", "AtomicRef",
+    "Recycler", "SmrNode", "UseAfterFreeError",
+    # schemes
+    "EBR", "HE", "HP", "IBR", "NR", "Hyaline1S", "SmrScheme",
+    "SCHEMES", "make_scheme",
+    # structures
+    "HarrisList", "HarrisMichaelList", "NMTree", "SkipList",
+    "LockFreeHashMap",
+    # traversal policies
+    "TraversalPolicy", "PlainOptimistic", "OptimisticSCOT", "CarefulHM",
+    "WaitFreeSCOT", "IncompatiblePairError",
+])
+
+
+def test_api_surface_snapshot():
+    assert sorted(api.__all__) == API_SURFACE
+    for name in api.__all__:
+        assert hasattr(api, name), f"repro.api.__all__ lists missing {name}"
+
+
+def test_core_surface_snapshot():
+    assert sorted(core.__all__) == CORE_SURFACE
+    for name in core.__all__:
+        assert hasattr(core, name), f"repro.core.__all__ lists missing {name}"
+
+
+def test_registry_names_snapshot():
+    assert api.schemes() == ["NR", "EBR", "HP", "HE", "IBR", "HLN"]
+    assert api.structures() == ["HList", "HMList", "NMTree", "SkipList",
+                                "HashMap"]
+    assert api.traversal_policies() == ["optimistic", "scot", "hm",
+                                        "waitfree"]
+
+
+def test_scheme_capability_snapshot():
+    caps = api.capability_matrix()["schemes"]
+    assert caps["HP"] == {"name": "HP", "robust": True,
+                          "cumulative_protection": False, "reclaims": True,
+                          "batch_hints": "flat"}
+    assert caps["IBR"] == {"name": "IBR", "robust": True,
+                           "cumulative_protection": True, "reclaims": True,
+                           "batch_hints": "all"}
+    assert caps["NR"]["reclaims"] is False
+    assert caps["EBR"]["robust"] is False
+
+
+def test_structure_requirement_snapshot():
+    hl = api.structure_info("HList")
+    assert hl.policies == ("optimistic", "scot", "waitfree")
+    assert hl.slots_needed(api.OptimisticSCOT()) == 4
+    assert hl.slots_needed(api.WaitFreeSCOT()) == 5  # the anchor slot
+    assert api.structure_info("NMTree").slots_needed(api.WaitFreeSCOT()) == 5
+    assert api.structure_info("HMList").slots_needed(api.CarefulHM()) == 3
