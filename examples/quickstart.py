@@ -118,6 +118,28 @@ def demo_robustness():
         smr.end_op()
 
 
+def demo_serving_surface():
+    print("== Serving sessions: one config, sharded SMR domains ==")
+    from repro import serving
+    # registry-resolved policy names, validated at config construction
+    print("   admission:", api.admission_policies(),
+          " eviction:", api.eviction_policies())
+    cfg = serving.ServingConfig(smr="IBR", num_shards=2, eviction="lru",
+                                admission="priority")
+    print("   config:", cfg.summary())
+    try:
+        serving.ServingConfig(smr="NR")
+    except ValueError as e:
+        print("   rejected:", str(e)[:60], "...")
+    # shared page-aligned prefixes land on the same shard's cache
+    router = serving.PrefixRouter(num_shards=2, page_size=8)
+    shared = list(range(100, 108))
+    a, b = router.shard_of(shared + [1, 2]), router.shard_of(shared + [9])
+    print(f"   router: shared-prefix prompts co-located "
+          f"(shard {a} == shard {b}); run examples/serve_paged.py "
+          f"--shards 2 for the full engine")
+
+
 def demo_nm_tree():
     print("== Natarajan-Mittal tree with SCOT (IBR) ==")
     tree = api.build("NMTree", smr="IBR")
@@ -132,6 +154,7 @@ if __name__ == "__main__":
     demo_scot_traversals()
     demo_negotiation()
     demo_waitfree()
+    demo_serving_surface()
     demo_nm_tree()
     demo_robustness()
     demo_figure1_bug()

@@ -1,28 +1,39 @@
-"""End-to-end serving driver: continuous batching with the SMR-managed paged
-KV pool + SCOT prefix cache, concurrent client threads.
+"""End-to-end serving driver: a sharded serving session over SMR-managed
+paged KV pools + SCOT prefix caches, with concurrent client threads.
 
-    PYTHONPATH=src python examples/serve_paged.py --smr IBR --requests 12
+    PYTHONPATH=src python examples/serve_paged.py --smr IBR --shards 2 \\
+        --eviction lru --requests 12
 """
 
 import argparse
-import threading
-import time
 
 import jax
-import numpy as np
 
-from repro import api
+from repro import api, serving
 from repro.configs import get_config
+from repro.core.workload import run_serving_workload
 from repro.models import build_model
-from repro.serving import PagedServingEngine, Request
 
 
 def main():
     ap = argparse.ArgumentParser()
-    # scheme choices come from the registry (NR excluded: it never
-    # reclaims, so the page pool would leak dry)
+    # every choice list is a registry query — scheme names (NR excluded:
+    # it never reclaims, so the page pool would leak dry), traversal
+    # policies, and the serving admission/eviction policies
     ap.add_argument("--smr", default="IBR",
                     choices=api.schemes(reclaims=True))
+    ap.add_argument("--shards", type=int, default=2,
+                    help="independent SMR domains (pool + prefix cache + "
+                         "scheme instance per shard)")
+    ap.add_argument("--shard-smr", default="per_shard",
+                    choices=["per_shard", "shared"],
+                    help="per_shard: each shard reclaims independently "
+                         "(stall isolation); shared: one scheme instance "
+                         "spans all shards")
+    ap.add_argument("--admission", default="fifo",
+                    choices=api.admission_policies())
+    ap.add_argument("--eviction", default="fifo",
+                    choices=api.eviction_policies())
     ap.add_argument("--prefix-traversal", default=None,
                     choices=api.traversal_policies(),
                     help="prefix-cache bucket traversal policy (default: "
@@ -37,45 +48,34 @@ def main():
     cfg = get_config("tinyllama-1.1b").reduced().replace(dtype="float32")
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(7))
-    eng = PagedServingEngine(model, params, smr=args.smr, num_pages=128,
-                             page_size=8, max_batch=4, max_seq_len=64,
-                             prefix_traversal=args.prefix_traversal)
-    engine_thread = threading.Thread(target=eng.run, daemon=True)
-    engine_thread.start()
 
-    rng = np.random.RandomState(0)
-    shared_prefix = list(rng.randint(1, 200, size=16))
-    reqs = []
-    lock = threading.Lock()
+    config = serving.ServingConfig(
+        smr=args.smr, num_shards=args.shards, shard_smr=args.shard_smr,
+        num_pages=128, page_size=8, max_batch=4, max_seq_len=64,
+        admission=args.admission, eviction=args.eviction,
+        prefix_traversal=args.prefix_traversal)
+    with serving.serve(model, params, config) as session:
+        res = run_serving_workload(
+            session, n_requests=args.requests, clients=args.clients,
+            shared_prefix_len=16, tail_len=4,
+            distinct_prefixes=max(2, args.shards),
+            max_new_tokens=args.max_new, wait_each=True)
+        stats = session.stats()
 
-    def client(cid):
-        r = np.random.RandomState(cid)
-        for i in range(args.requests // args.clients):
-            prompt = shared_prefix + list(r.randint(1, 200, size=4))
-            req = eng.submit(Request(prompt=prompt,
-                                     max_new_tokens=args.max_new))
-            with lock:
-                reqs.append(req)
-            req.done.wait(timeout=300)
-
-    t0 = time.perf_counter()
-    clients = [threading.Thread(target=client, args=(i,))
-               for i in range(args.clients)]
-    for c in clients:
-        c.start()
-    for c in clients:
-        c.join()
-    dt = time.perf_counter() - t0
-    eng.stop()
-    engine_thread.join(timeout=10)
-
-    toks = sum(len(r.out_tokens) for r in reqs)
-    print(f"scheme={args.smr} "
-          f"prefix_traversal={eng.prefix_cache.policy.name} "
-          f"requests={len(reqs)} generated={toks} tokens "
-          f"in {dt:.2f}s ({toks / dt:.1f} tok/s)")
-    print("engine:", eng.stats())
-    print("sample output tokens:", reqs[0].out_tokens)
+    print(f"scheme={args.smr} shards={args.shards} "
+          f"admission={args.admission} eviction={args.eviction} "
+          f"requests={res.requests} generated={res.tokens} tokens "
+          f"in {res.duration_s:.2f}s ({res.tok_per_s:.1f} tok/s, "
+          f"prefix hits={res.prefix_hits})")
+    print("totals:", stats["totals"])
+    for shard in stats["shards"]:
+        pc = shard["prefix_cache"]
+        print(f"  shard {shard['shard']}: steps={shard['steps']} "
+              f"pool_free={shard['pool']['free']} "
+              f"cache(hits={pc['hits']} entries={pc['entries']} "
+              f"eviction={pc['eviction']}) "
+              f"smr(retired={shard['smr']['retired']} "
+              f"reclaimed={shard['smr']['reclaimed']})")
 
 
 if __name__ == "__main__":

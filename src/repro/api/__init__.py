@@ -80,6 +80,8 @@ __all__ = [
     "schemes",
     "structures",
     "traversal_policies",
+    "admission_policies",
+    "eviction_policies",
     "scheme_info",
     "structure_info",
     "check",
@@ -88,6 +90,20 @@ __all__ = [
     "as_policy",
     "default_policy",
 ]
+
+
+def admission_policies():
+    """Serving admission-policy names (registry query, like
+    :func:`traversal_policies`).  Lazy import: the serving layer depends on
+    this facade, not the other way round."""
+    from ..serving.policies import admission_policies as _q
+    return _q()
+
+
+def eviction_policies():
+    """Prefix-cache eviction-policy names (registry query)."""
+    from ..runtime.eviction import eviction_policies as _q
+    return _q()
 
 
 def scheme(name: Union[str, SmrScheme] = "EBR", **kwargs) -> SmrScheme:

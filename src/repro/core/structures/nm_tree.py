@@ -106,6 +106,18 @@ class NMTree:
         sr = self._seek(key, ctx)
         return sr.leaf if sr.leaf.key == key else None
 
+    def min_key(self):
+        """Smallest live key, or ``None`` when the tree is empty.
+
+        A leftmost descent is just a seek for ``-inf`` (every routing
+        comparison goes left), so it inherits the policy's full SCOT
+        validation / wait-free escalation machinery.  This is what makes the
+        tree usable as an *ordered eviction index* (LRU: stamps ascend, the
+        minimum stamp is the least-recently-used entry)."""
+        with self.smr.guard() as ctx:
+            leaf_key = self._seek(float("-inf"), ctx).leaf.key
+        return None if leaf_key == INF0 else leaf_key
+
     def insert(self, key, value=None) -> bool:
         with self.smr.guard() as ctx:
             return self._insert(key, value, ctx)

@@ -184,3 +184,107 @@ def run_workload(
 
 CSV_HEADER = ("structure,scheme,threads,key_range,workload,total_ops,"
               "mops_per_s,avg_not_reclaimed,max_not_reclaimed")
+
+
+# --------------------------------------------------------------- serving
+@dataclass
+class ServingWorkloadResult:
+    """One serving-session drive: throughput + the session's stats snapshot."""
+
+    requests: int
+    tokens: int
+    duration_s: float
+    tok_per_s: float
+    prefix_hits: int
+    incomplete: int                     # handles not done at the deadline
+    session_stats: Dict = field(default_factory=dict)
+
+    def row(self) -> str:
+        return (f"requests={self.requests},tokens={self.tokens},"
+                f"tok_s={self.tok_per_s:.1f},hits={self.prefix_hits}")
+
+
+def run_serving_workload(
+    session,
+    n_requests: int = 12,
+    clients: int = 3,
+    shared_prefix_len: int = 16,
+    tail_len: int = 4,
+    distinct_prefixes: int = 1,
+    max_new_tokens: int = 8,
+    seed: int = 0,
+    timeout_s: float = 300.0,
+    wait_each: bool = False,
+    prompts: Optional[List[List[int]]] = None,
+) -> ServingWorkloadResult:
+    """Drive a serving session with concurrent client threads — the serving
+    analogue of :func:`run_workload` (one shared request-mix loop instead of
+    a copy in every example/benchmark/test).
+
+    ``session`` is duck-typed: anything with ``submit(prompt,
+    max_new_tokens=...) -> handle-with-done`` and ``stats()`` works (a
+    :class:`repro.serving.ServingSession` in practice).  Prompts draw from
+    ``distinct_prefixes`` shared prefixes (page-aligned reuse *and*, with
+    more than one, shard spread under the prefix router) plus a random tail.
+
+    ``wait_each=True`` makes every client wait for each request before
+    submitting the next (prefix lookups then see earlier completions —
+    cross-request cache hits become visible); the default submits each
+    client's whole slice up front (maximum queueing pressure, the
+    throughput-scaling configuration).  ``prompts=`` overrides the
+    generated mix entirely (e.g. router-balanced prompts for the sharded
+    smoke).
+    """
+    rng = random.Random(seed)
+    if prompts is None:
+        prefixes = [[rng.randrange(1, 200) for _ in range(shared_prefix_len)]
+                    for _ in range(max(1, distinct_prefixes))]
+        prompts = [prefixes[i % len(prefixes)] +
+                   [rng.randrange(1, 200) for _ in range(tail_len)]
+                   for i in range(n_requests)]
+    else:
+        n_requests = len(prompts)
+
+    handles: List = []
+    hlock = threading.Lock()
+    ready = threading.Barrier(clients + 1)
+
+    def client(cid: int) -> None:
+        mine = prompts[cid::clients]
+        ready.wait()
+        local = []
+        for prompt in mine:
+            h = session.submit(prompt, max_new_tokens=max_new_tokens)
+            local.append(h)
+            if wait_each:
+                h.done.wait(timeout=timeout_s)
+        with hlock:
+            handles.extend(local)
+        for h in local:
+            h.done.wait(timeout=timeout_s)
+
+    ts = [threading.Thread(target=client, args=(i,), daemon=True)
+          for i in range(clients)]
+    for t in ts:
+        t.start()
+    ready.wait()
+    t0 = time.perf_counter()
+    for t in ts:
+        t.join(timeout=timeout_s)
+    elapsed = time.perf_counter() - t0
+
+    tokens = sum(len(h.out_tokens) for h in handles)
+    incomplete = sum(0 if h.done.is_set() else 1 for h in handles)
+    stats = session.stats() if hasattr(session, "stats") else {}
+    hits = stats.get("totals", {}).get("prefix_hits",
+                                       stats.get("prefix_cache",
+                                                 {}).get("hits", 0))
+    return ServingWorkloadResult(
+        requests=len(handles),
+        tokens=tokens,
+        duration_s=elapsed,
+        tok_per_s=tokens / elapsed if elapsed > 0 else 0.0,
+        prefix_hits=int(hits),
+        incomplete=incomplete,
+        session_stats=stats,
+    )

@@ -4,40 +4,40 @@ for the multi-client driver)."""
 from __future__ import annotations
 
 import argparse
-import threading
 
 import jax
 import numpy as np
 
 from ..configs import get_config
 from ..models import build_model
-from ..serving import PagedServingEngine, Request
+from ..serving import ServingConfig, serve
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smr", default="IBR")
+    ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--requests", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced().replace(dtype="float32")
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
-    eng = PagedServingEngine(model, params, smr=args.smr,
-                             num_pages=128, page_size=8, max_batch=4,
-                             max_seq_len=64)
-    t = threading.Thread(target=eng.run, daemon=True)
-    t.start()
+    config = ServingConfig(smr=args.smr, num_shards=args.shards,
+                           num_pages=128, page_size=8, max_batch=4,
+                           max_seq_len=64)
     rng = np.random.RandomState(0)
-    reqs = [eng.submit(Request(prompt=list(rng.randint(1, 200, size=12)),
-                               max_new_tokens=8))
-            for _ in range(args.requests)]
-    for r in reqs:
-        r.done.wait(timeout=300)
-    eng.stop()
-    t.join(timeout=10)
-    print(f"[serve] {cfg.name} smr={args.smr}: {eng.stats()}")
+    with serve(model, params, config) as session:
+        handles = session.submit_many(
+            [list(rng.randint(1, 200, size=12))
+             for _ in range(args.requests)],
+            max_new_tokens=8)
+        for h in handles:
+            h.wait(timeout=300)
+        totals = session.stats()["totals"]
+    print(f"[serve] {cfg.name} smr={args.smr} shards={args.shards}: "
+          f"{totals}")
 
 
 if __name__ == "__main__":

@@ -33,23 +33,37 @@ class PageNode(SmrNode):
     """A physical KV page.  ``page_id`` indexes the device-side page pool
     (k_pages/v_pages arrays consumed by the paged-attention kernel)."""
 
-    __slots__ = ("page_id", "pin_count", "seq_id", "_plock")
+    __slots__ = ("page_id", "pin_count", "seq_id", "owner", "_plock")
 
     def __init__(self, page_id: int):
         super().__init__()
         self.page_id = page_id
         self.pin_count = AtomicInt(0)   # prefix-cache pins
         self.seq_id: Optional[int] = None
+        self.owner: Optional["BlockPool"] = None
         self._plock = threading.Lock()  # linearizes pin/retire decisions
 
     def reinit(self, page_id: int):
         self.page_id = page_id
         self.pin_count = AtomicInt(0)   # fresh object: stale unpins are inert
         self.seq_id = None
+        self.owner = None
         # _plock is deliberately REUSED across incarnations: a stale holder
         # still serializes against the new lifetime (swapping the lock object
         # would let old and new holders interleave), and recycling skips a
         # Lock allocation per page churn.
+
+
+def _reclaim_dispatch(node) -> None:
+    """Scheme-level free hook that routes each freed node to the pool that
+    owns it — several :class:`BlockPool`\\ s (e.g. shards in ``shared`` SMR
+    mode) and the index structures can all share ONE scheme instance without
+    the last-constructed pool capturing everyone's frees."""
+    owner = getattr(node, "owner", None)
+    if owner is not None:
+        owner._reclaim(node)
+    else:
+        node.poison()  # index nodes (lists/trees) just get poisoned
 
 
 class OutOfPagesError(RuntimeError):
@@ -63,11 +77,14 @@ class BlockPool:
         self.smr = smr
         self.num_pages = num_pages
         self._free_ids: List[int] = list(range(num_pages))
+        self._reserved_ids: List[int] = []
         self._lock = threading.Lock()
         self._recycler = Recycler(PageNode)
         # reclamation path: when the SMR scheme frees a PageNode, its id
-        # returns to the free list and the node object is recycled
-        smr._free_fn = self._reclaim
+        # returns to the free list (of the pool that owns it — the dispatch
+        # keeps a shared scheme instance safe across several pools) and the
+        # node object is recycled
+        smr._free_fn = _reclaim_dispatch
         self.n_alloc = AtomicInt(0)
         self.n_retired = AtomicInt(0)
         self.n_reclaimed = AtomicInt(0)
@@ -81,10 +98,32 @@ class BlockPool:
                     f"{self.smr.not_yet_reclaimed()} awaiting reclamation)")
             pid = self._free_ids.pop()
         node = self._recycler.alloc(pid)
+        node.owner = self
         self.smr.alloc_stamp(node)
         node.seq_id = seq_id
         self.n_alloc.fetch_add(1)
         return node
+
+    def reserve(self, page_id: int) -> int:
+        """Take ``page_id`` out of circulation (e.g. the engine's scratch
+        page that padded batch rows write to).  The id never becomes a
+        :class:`PageNode`, is excluded from ``free``/accounting, and comes
+        back via :meth:`unreserve`.  Raises ``ValueError`` if the id is not
+        currently free."""
+        with self._lock:
+            try:
+                self._free_ids.remove(page_id)
+            except ValueError:
+                raise ValueError(
+                    f"page {page_id} is not free (cannot reserve)") from None
+            self._reserved_ids.append(page_id)
+        return page_id
+
+    def unreserve(self, page_id: int) -> None:
+        """Return a :meth:`reserve`-d id to the free list."""
+        with self._lock:
+            self._reserved_ids.remove(page_id)
+            self._free_ids.append(page_id)
 
     def try_alloc(self, seq_id: Optional[int] = None) -> Optional[PageNode]:
         try:
@@ -116,12 +155,10 @@ class BlockPool:
                     and not page._retired and not page.is_freed:
                 self.smr.retire(page)
 
-    def _reclaim(self, node) -> None:
+    def _reclaim(self, node: PageNode) -> None:
         # one SMR instance governs pages AND the index structures that
-        # reference them (prefix-cache list nodes); only pages recycle here
-        if not isinstance(node, PageNode):
-            node.poison()
-            return
+        # reference them (prefix-cache list nodes); only pages route here
+        # (via _reclaim_dispatch — index nodes carry no ``owner``)
         pid = node.page_id
         self.n_reclaimed.fetch_add(1)
         self._recycler.free(node)  # poisons; resurrected on next alloc
@@ -134,8 +171,12 @@ class BlockPool:
             return len(self._free_ids)
 
     def stats(self):
+        with self._lock:
+            free = len(self._free_ids)
+            reserved = len(self._reserved_ids)
         return {
-            "free": self.free_count(),
+            "free": free,
+            "reserved": reserved,
             "alloc": self.n_alloc.load(),
             "retired": self.n_retired.load(),
             "reclaimed": self.n_reclaimed.load(),

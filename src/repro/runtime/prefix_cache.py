@@ -25,16 +25,15 @@ as the eviction proceeds (no page is recycled under it)."""
 
 from __future__ import annotations
 
-import threading
 import warnings
-from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 from .. import api
 from ..core.atomics import AtomicInt
 from ..core.smr.base import SmrScheme, ThreadCtx
 from ..core.structures.traversal import UNSET
 from .block_pool import BlockPool, PageNode
+from .eviction import EvictionPolicy, as_eviction_policy
 
 _FNV_OFFSET = 1469598103934665603
 _FNV_PRIME = 1099511628211
@@ -79,7 +78,8 @@ class PrefixCache:
 
     def __init__(self, smr: SmrScheme, pool: BlockPool, page_size: int,
                  num_buckets: int = 64, optimistic=UNSET,
-                 max_entries: int = 4096, traversal=None):
+                 max_entries: int = 4096, traversal=None,
+                 eviction: Union[str, EvictionPolicy, None] = None):
         self.smr = smr
         self.pool = pool
         self.page_size = page_size
@@ -102,10 +102,10 @@ class PrefixCache:
         self.n_entries = AtomicInt(0)
         self.n_hits = AtomicInt(0)
         self.n_misses = AtomicInt(0)
-        self._evict_lock = threading.Lock()
-        # (bucket, key) FIFO; deque so the hot evict path pops O(1) instead
-        # of shifting the whole ring under the lock
-        self._evict_ring: Deque[Tuple[int, int]] = deque()
+        # named eviction policy (fifo/pressure/lru) — owns the victim index
+        # (the FIFO ring / the NM-tree LRU index) and the pressure quota
+        self.eviction = as_eviction_policy(eviction)
+        self.eviction.bind(self)
 
     def _bucket(self, key: int):
         return self.buckets[key % self.num_buckets]
@@ -123,12 +123,17 @@ class PrefixCache:
             self.n_misses.fetch_add(1)
             return ([], 0)
         with self.smr.guard_batch(n_pages) as ctx:
-            best = self._resolve_longest(tokens, n_pages, ctx)
-        if best[1]:
+            pages, n_tok, hit_key = self._resolve_longest(tokens, n_pages,
+                                                          ctx)
+        if n_tok:
             self.n_hits.fetch_add(1)
+            # recency signal OUTSIDE the guard scope (the LRU policy opens
+            # its own guard on the index tree; nesting scopes on one scheme
+            # would reset the outer reservations)
+            self.eviction.record_use(hit_key)
         else:
             self.n_misses.fetch_add(1)
-        return best
+        return (pages, n_tok)
 
     def lookup_many(self, prompts: Sequence[Sequence[int]]
                     ) -> List[Tuple[List[PageNode], int]]:
@@ -137,18 +142,22 @@ class PrefixCache:
         if not prompts:
             return []
         results: List[Tuple[List[PageNode], int]] = []
+        hit_keys: List[int] = []
         with self.smr.guard_batch(len(prompts)) as ctx:
             for tokens in prompts:
                 n_pages = len(tokens) // self.page_size
                 if n_pages == 0:
-                    best = ([], 0)
+                    best = ([], 0, None)
                 else:
                     best = self._resolve_longest(tokens, n_pages, ctx)
                 if best[1]:
                     self.n_hits.fetch_add(1)
+                    hit_keys.append(best[2])
                 else:
                     self.n_misses.fetch_add(1)
-                results.append(best)
+                results.append(best[:2])
+        for key in hit_keys:  # outside the guard (see lookup())
+            self.eviction.record_use(key)
         return results
 
     def _probe(self, key: int, np_: int, ctx: ThreadCtx
@@ -173,9 +182,11 @@ class PrefixCache:
         return (pages, np_ * self.page_size)
 
     def _resolve_longest(self, tokens: Sequence[int], n_pages: int,
-                         ctx: ThreadCtx) -> Tuple[List[PageNode], int]:
-        """Longest validated page-aligned candidate, under the caller's
-        guard scope."""
+                         ctx: ThreadCtx
+                         ) -> Tuple[List[PageNode], int, Optional[int]]:
+        """Longest validated page-aligned candidate ``(pages, n_tok, key)``,
+        under the caller's guard scope (``key`` feeds the eviction policy's
+        recency index — outside the scope)."""
         pool = self.pool
         # ONE rolling pass over the tokens emits every boundary's key (the
         # pre-batching loop re-hashed from token 0 per candidate — O(n²)).
@@ -186,10 +197,10 @@ class PrefixCache:
         # building any per-bucket grouping.
         hit = self._probe(keys[-1], n_pages, ctx)
         if hit is not None:
-            return hit
+            return (hit[0], hit[1], keys[-1])
         keys = keys[:-1]
         if not keys:
-            return ([], 0)
+            return ([], 0, None)
         if not self.smr.cumulative_protection:
             # One-shot schemes (HP/HE): a node found in bucket A loses its
             # hazard-slot protection once we traverse bucket B, so resolve
@@ -198,8 +209,8 @@ class PrefixCache:
             for np_ in range(len(keys), 0, -1):
                 hit = self._probe(keys[np_ - 1], np_, ctx)
                 if hit is not None:
-                    return hit
-            return ([], 0)
+                    return (hit[0], hit[1], keys[np_ - 1])
+            return ([], 0, None)
         # Cumulative schemes (EBR/IBR/HLN/NR): everything observed inside
         # the scope stays protected until it exits, so group candidates by
         # bucket and walk each involved bucket ONCE (sorted resumed
@@ -211,6 +222,7 @@ class PrefixCache:
             by_bucket.setdefault(key % self.num_buckets, []).append((np_, key))
         best_pages: List[PageNode] = []
         best_np = 0
+        best_key: Optional[int] = None
         for bidx, cands in sorted(by_bucket.items(),
                                   key=lambda kv: kv[1][-1][0], reverse=True):
             if cands[-1][0] <= best_np:
@@ -235,11 +247,11 @@ class PrefixCache:
                 # pins we took on the superseded run, or they leak forever
                 for p in best_pages:
                     pool.unpin(p)
-                best_pages, best_np = pages, np_
+                best_pages, best_np, best_key = pages, np_, key
                 break
         if best_np:
-            return (best_pages, best_np * self.page_size)
-        return ([], 0)
+            return (best_pages, best_np * self.page_size, best_key)
+        return ([], 0, None)
 
     # ------------------------------------------------------------ insert
     def insert(self, tokens: Sequence[int], pages: Sequence[PageNode]) -> None:
@@ -263,9 +275,8 @@ class PrefixCache:
                 else:
                     for p in run:  # lost the race; someone already cached it
                         self.pool.unpin(p)
-        if added:
-            with self._evict_lock:
-                self._evict_ring.extend(added)
+        for bidx, key in added:  # outside the guard (LRU opens its own)
+            self.eviction.record_insert(bidx, key)
         self._maybe_evict()
 
     # ------------------------------------------------------------ evict
@@ -275,23 +286,52 @@ class PrefixCache:
                 return
 
     def evict_oldest(self, n: int = 1) -> int:
-        """FIFO-evict up to n entries (pool-pressure path); returns count.
-        A stale ring slot (its entry already evicted by a racing caller)
-        does not burn the budget — the next slot is tried instead, so
-        ``_maybe_evict`` cannot stall above ``max_entries`` behind stale
-        slots."""
+        """Evict up to n entries in the policy's victim order (fifo /
+        pressure: insertion order; lru: least-recently-used); returns the
+        count actually evicted.  A stale victim (its entry already evicted
+        by a racing caller) does not burn the budget — the next one is
+        tried instead, so ``_maybe_evict`` cannot stall above
+        ``max_entries`` behind stale index slots."""
         done = 0
         while done < n:
-            with self._evict_lock:
-                if not self._evict_ring:
-                    break
-                _, key = self._evict_ring.popleft()
+            key = self.eviction.next_victim()
+            if key is None:
+                break
             if self.evict(key):
                 done += 1
         return done
 
+    def pressure_evict(self) -> int:
+        """Pool-pressure response: evict the policy's quota for one event
+        (replaces the engine's hardcoded ``evict_oldest(4)``)."""
+        return self.evict_oldest(self.eviction.pressure_quota(self,
+                                                              self.pool))
+
+    def clear(self) -> int:
+        """Teardown sweep (engine ``stop()`` drain): evict every entry so
+        all cache pins are dropped.  Drains the policy's victim index, then
+        sweeps the buckets directly for any entry the index lost track of
+        (e.g. a victim consumed by a racing evictor that then failed).
+        Caller must have quiesced concurrent inserts."""
+        n = 0
+        while True:
+            key = self.eviction.next_victim()
+            if key is None:
+                break
+            if self.evict(key):
+                n += 1
+        for bucket in self.buckets:
+            for key in list(bucket.snapshot()):
+                if self.evict(key):
+                    n += 1
+        return n
+
     def evict(self, key: int) -> bool:
         bucket = self._bucket(key)
+        # recency token BEFORE the pop: forget() below must only drop the
+        # index state of the incarnation we actually removed — a racing
+        # re-insert of the same key stamps a newer token and keeps its slot
+        token = self.eviction.peek(key)
         # pop() tells us exactly WHICH node we removed, so we unpin exactly
         # the page run that entry referenced — a lookup-then-delete pair
         # could observe one entry and delete a concurrently re-inserted
@@ -303,6 +343,7 @@ class PrefixCache:
             self.n_entries.fetch_add(-1)
             for p in pages:
                 self.pool.unpin(p)
+            self.eviction.forget(key, token)  # drop THIS incarnation's state
             return True
         # Lost the delete race: the entry was already removed (its winner
         # unpinned the pages), and any concurrent RE-insert enqueues its own
@@ -311,8 +352,18 @@ class PrefixCache:
         return False
 
     def stats(self):
+        # aggregate the bucket structures' traversal counters (restarts,
+        # validation failures, and the wait-free anchor_recoveries /
+        # wf_escalations) so per-shard serving stats surface the paper's
+        # mechanism counters without reaching into buckets
+        traversal: dict = {}
+        for bucket in self.buckets:
+            for k, v in bucket.stats().items():
+                traversal[k] = traversal.get(k, 0) + v
         return {
             "entries": self.n_entries.load(),
             "hits": self.n_hits.load(),
             "misses": self.n_misses.load(),
+            "eviction": self.eviction.name,
+            "traversal": traversal,
         }

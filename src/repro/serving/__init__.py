@@ -1,4 +1,38 @@
-"""Paged serving engine (continuous batching over the SMR block pool)."""
-from .engine import PagedServingEngine, Request
+"""``repro.serving`` — the one serving surface.
 
-__all__ = ["PagedServingEngine", "Request"]
+Sessions (:func:`serve` → :class:`ServingSession` → :class:`RequestHandle`)
+over sharded, SMR-isolated engines; named admission/eviction policies; the
+legacy :class:`PagedServingEngine` kwargs survive one release as
+``DeprecationWarning`` shims over :class:`ServingConfig`.
+"""
+
+from .config import ServingConfig
+from .engine import PagedServingEngine, Request
+from .policies import (
+    admission_policies,
+    as_admission_policy,
+    as_eviction_policy,
+    eviction_policies,
+)
+from .session import (
+    PrefixRouter,
+    RequestHandle,
+    ServingSession,
+    ShardedEngine,
+    serve,
+)
+
+__all__ = [
+    "serve",
+    "ServingConfig",
+    "ServingSession",
+    "RequestHandle",
+    "ShardedEngine",
+    "PrefixRouter",
+    "Request",
+    "PagedServingEngine",
+    "admission_policies",
+    "eviction_policies",
+    "as_admission_policy",
+    "as_eviction_policy",
+]

@@ -1,0 +1,120 @@
+"""``ServingConfig`` — the one configuration surface for serving sessions.
+
+Mirrors what :func:`repro.api.build` did for structure construction: every
+knob the old ``PagedServingEngine(...)`` kwargs scattered is a named,
+validated field here, and the new knobs (shards, SMR domain placement,
+admission/eviction policies) are negotiated against their registries at
+construction time — an unknown policy or scheme name fails in
+``ServingConfig``, not three threads deep in an engine loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .. import api
+
+__all__ = ["ServingConfig"]
+
+# the engine's historical scheme tuning (frequent scans keep the page pool
+# tight under serving churn); used when smr_kwargs is left empty
+_DEFAULT_SMR_KWARGS: Dict[str, int] = {"retire_scan_freq": 16,
+                                       "epoch_freq": 16}
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Session-level serving configuration.
+
+    Capacity fields (``num_pages``, ``max_batch``, ``prefix_cache_entries``)
+    are **per shard**: a 2-shard session holds twice the pages and serves
+    twice the decode batch of a 1-shard session with the same config.
+    """
+
+    # -- SMR domain --------------------------------------------------------
+    smr: str = "IBR"                    # scheme registry name
+    smr_kwargs: Optional[Dict] = None   # None → the serving default tuning
+    shard_smr: str = "per_shard"        # "per_shard" | "shared"
+
+    # -- shape (per shard) -------------------------------------------------
+    num_shards: int = 1
+    num_pages: int = 256
+    page_size: int = 8
+    max_batch: int = 4
+    max_seq_len: int = 256
+    prefix_cache_entries: int = 128
+    prefix_traversal: Optional[str] = None  # None → negotiated via repro.api
+
+    # -- policies ----------------------------------------------------------
+    admission: str = "fifo"             # "fifo" | "priority"
+    eviction: str = "fifo"              # "fifo" | "pressure" | "lru"
+
+    # -- loop pacing -------------------------------------------------------
+    poll_s: float = 0.005               # engine-thread idle sleep
+    janitor_interval_s: float = 0.02    # session janitor sweep period
+
+    def __post_init__(self):
+        from .policies import admission_policies  # late: avoids a cycle
+        from ..runtime.eviction import eviction_policies
+
+        # raises ValueError on an unknown scheme name
+        if not api.scheme_info(self.smr).reclaims:
+            raise ValueError(
+                f"scheme {self.smr!r} never reclaims — the page pool would "
+                f"leak dry; choose from {api.schemes(reclaims=True)}")
+        if self.shard_smr not in ("per_shard", "shared"):
+            raise ValueError("shard_smr must be 'per_shard' or 'shared', "
+                             f"got {self.shard_smr!r}")
+        if self.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got "
+                             f"{self.num_shards}")
+        if self.page_size < 1 or self.num_pages < 2:
+            raise ValueError("need page_size >= 1 and num_pages >= 2 "
+                             "(page 0 is reserved scratch)")
+        if self.max_seq_len % self.page_size:
+            raise ValueError(f"max_seq_len ({self.max_seq_len}) must be a "
+                             f"multiple of page_size ({self.page_size})")
+        if self.prefix_traversal is not None and \
+                self.prefix_traversal not in api.traversal_policies():
+            raise ValueError(
+                f"unknown prefix_traversal {self.prefix_traversal!r}; "
+                f"choose from {api.traversal_policies()}")
+        if self.admission not in admission_policies():
+            raise ValueError(f"unknown admission policy {self.admission!r};"
+                             f" choose from {admission_policies()}")
+        if self.eviction not in eviction_policies():
+            raise ValueError(f"unknown eviction policy {self.eviction!r}; "
+                             f"choose from {eviction_policies()}")
+
+    # ---------------------------------------------------------------- utils
+    @property
+    def max_pages(self) -> int:
+        return self.max_seq_len // self.page_size
+
+    def resolved_smr_kwargs(self) -> Dict:
+        return dict(self.smr_kwargs) if self.smr_kwargs is not None \
+            else dict(_DEFAULT_SMR_KWARGS)
+
+    def build_scheme(self):
+        """One fresh SMR domain (per-shard mode builds one per shard)."""
+        return api.scheme(self.smr, **self.resolved_smr_kwargs())
+
+    def replace(self, **changes) -> "ServingConfig":
+        return dataclasses.replace(self, **changes)
+
+    def summary(self) -> Dict[str, object]:
+        """Flat snapshot embedded in ``session.stats()``."""
+        return {
+            "smr": self.smr,
+            "shard_smr": self.shard_smr,
+            "num_shards": self.num_shards,
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "max_batch": self.max_batch,
+            "max_seq_len": self.max_seq_len,
+            "admission": self.admission,
+            "eviction": self.eviction,
+            "prefix_traversal": self.prefix_traversal,
+        }

@@ -1,18 +1,29 @@
-"""Paged serving engine — continuous batching over the SMR-managed pool.
+"""Shard engine — continuous batching over one SMR-managed pool.
 
 Thread roles (this is where the paper's concurrency actually happens):
   * client threads: ``submit()`` does the *optimistic prefix-cache lookup*
     (SCOT Harris-list traversal) and pins any hit pages;
-  * the engine thread: admission, paged prefill, batched paged decode
-    (kernels/ops.paged_attention), page alloc/release;
-  * a janitor thread: evicts prefix entries under pool pressure (retiring
-    entry nodes and unpinning pages through the SMR scheme).
+  * the shard's engine thread: admission (via the named admission policy),
+    paged prefill, batched paged decode (kernels/ops.paged_attention), page
+    alloc/release;
+  * the session janitor thread: evicts prefix entries under pool pressure
+    (retiring entry nodes and unpinning pages through the SMR scheme).
 
 A page freed by the SMR is recycled to another sequence — if any of the
 above threads still held an unprotected reference, decode would read another
 request's KV (the serving-world version of Figure 1's SEGFAULT).  The SMR +
 SCOT discipline prevents exactly that; tests/test_serving.py checks paged
 outputs equal the contiguous-cache reference decode, token for token.
+
+One :class:`_ShardEngine` is one SMR domain: in a :class:`ShardedEngine`
+session each shard owns its own pool + prefix cache + (by default) its own
+scheme instance, so a stalled thread pins O(K) pages *of one shard* and the
+others keep reclaiming — the paper's robustness property applied as an
+architecture decision (DESIGN.md §11).
+
+:class:`PagedServingEngine` survives one release as a ``DeprecationWarning``
+shim mapping the old kwargs onto :class:`ServingConfig`; new code goes
+through :func:`repro.serving.serve`.
 
 Dense-family models only (engine v1) — the restriction is the usual one for
 paged serving stacks, recorded in DESIGN.md.
@@ -25,27 +36,35 @@ import threading
 import time
 import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import api
+from ..core.smr.base import SmrScheme
 from ..kernels import ops
 from ..models.layers import apply_rope, rms_norm, rope_angles
 from ..models.transformer import _qkv
 from ..runtime.block_pool import BlockPool, PageNode
 from ..runtime.prefix_cache import PrefixCache
+from .config import ServingConfig
+from .policies import as_admission_policy
 
 
 @dataclass
 class Request:
     prompt: List[int]
     max_new_tokens: int = 16
+    priority: int = 0               # consumed by the 'priority' admission
     req_id: int = field(default_factory=itertools.count().__next__)
     out_tokens: List[int] = field(default_factory=list)
     done: threading.Event = field(default_factory=threading.Event)
+    cancelled: threading.Event = field(default_factory=threading.Event)
+    # "waiting" → "active" → "done" | "cancelled" | "failed" (engine-owned)
+    status: str = "waiting"
+    # set on every generated token and on completion (stream wakeups)
+    _progress: threading.Event = field(default_factory=threading.Event)
     # filled at submit time (client thread): prefix-cache hit
     _hit_pages: List[PageNode] = field(default_factory=list)
     _hit_tokens: int = 0
@@ -65,60 +84,77 @@ class _Seq:
         self.page_row = page_row
 
 
-class PagedServingEngine:
-    def __init__(self, model, params, *, smr: str = "IBR",
-                 num_pages: int = 256, page_size: int = 8,
-                 max_batch: int = 4, max_seq_len: int = 256,
-                 prefix_cache_entries: int = 128,
-                 prefix_optimistic: Optional[bool] = None,
+# id of the scratch page padded/dummy batch rows write to
+_SCRATCH_PAGE = 0
+
+
+class _ShardEngine:
+    """One shard: one pool, one prefix cache, one SMR domain, one thread."""
+
+    def __init__(self, model, params, config: ServingConfig, *,
+                 smr: Optional[SmrScheme] = None, shard_id: int = 0,
                  prefix_traversal=None):
         cfg = model.cfg
         assert cfg.family == "dense", "engine v1 serves dense models"
         self.model = model
         self.cfg = cfg
         self.params = params
-        self.page_size = page_size
-        self.max_batch = max_batch
-        self.max_pages = max_seq_len // page_size
-        # facade-resolved scheme: `smr` may be a registry name or an
-        # already-constructed SmrScheme shared with other subsystems
-        self.smr = api.scheme(smr) if not isinstance(smr, str) else \
-            api.scheme(smr, retire_scan_freq=16, epoch_freq=16)
-        self.pool = BlockPool(self.smr, num_pages)
-        # page 0 is reserved scratch: padded/dummy batch rows write to it
-        with self.pool._lock:
-            self.pool._free_ids.remove(0)
-        if prefix_optimistic is not None:
-            # thin shim for the pre-facade flag (one release)
-            if prefix_traversal is not None:
-                raise TypeError("PagedServingEngine: pass either "
-                                "prefix_traversal= or the deprecated "
-                                "prefix_optimistic= flag, not both")
-            warnings.warn("PagedServingEngine(prefix_optimistic=...) is "
-                          "deprecated; pass prefix_traversal='hm' for the "
-                          "Harris-Michael prefix-cache buckets",
-                          DeprecationWarning, stacklevel=2)
-            prefix_traversal = None if prefix_optimistic else "hm"
-        self.prefix_cache = PrefixCache(self.smr, self.pool, page_size,
-                                        max_entries=prefix_cache_entries,
-                                        traversal=prefix_traversal)
+        self.config = config
+        self.shard_id = shard_id
+        self.page_size = config.page_size
+        self.max_batch = config.max_batch
+        self.max_pages = config.max_pages
+        # SMR domain: per-shard fresh instance unless the session shares one
+        self.smr = smr if smr is not None else config.build_scheme()
+        self.pool = BlockPool(self.smr, config.num_pages)
+        # page 0 is reserved scratch through the pool's public API — it
+        # never becomes a PageNode and never enters retire/reclaim
+        self._scratch_id: Optional[int] = self.pool.reserve(_SCRATCH_PAGE)
+        self.prefix_cache = PrefixCache(
+            self.smr, self.pool, config.page_size,
+            max_entries=config.prefix_cache_entries,
+            # prefix_traversal= lets the legacy shim pass a live
+            # TraversalPolicy instance (config carries names only)
+            traversal=(prefix_traversal if prefix_traversal is not None
+                       else config.prefix_traversal),
+            eviction=config.eviction)
+        self.admission = as_admission_policy(config.admission)
         L = cfg.n_layers
-        kv = (L, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        kv = (L, config.num_pages, config.page_size, cfg.n_kv_heads,
+              cfg.head_dim)
         self.k_pages = jnp.zeros(kv, getattr(jnp, cfg.dtype))
         self.v_pages = jnp.zeros(kv, getattr(jnp, cfg.dtype))
-        self._waiting: List[Request] = []
+        self._waiting = self.admission.new_queue()
         self._wlock = threading.Lock()
         self._active: List[_Seq] = []
         self._stop = threading.Event()
-        self._decode = jax.jit(self._paged_decode_step)
-        self._prefill = jax.jit(self._paged_prefill)
+        self._run_started = threading.Event()
+        self._run_done = threading.Event()
+        # serializes step()/drain: stop() may not tear pages out from under
+        # a decode iteration that already read the block tables
+        self._step_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        # donate the page arrays: the KV cache is updated in place instead
+        # of being copied through every prefill/decode call (the copy was
+        # ~MBs per step — it dwarfed the actual decode compute)
+        self._decode = jax.jit(self._paged_decode_step,
+                               donate_argnums=(1, 2))
+        self._prefill = jax.jit(self._paged_prefill, donate_argnums=(1, 2))
         self.steps = 0
+        self.n_completed = 0
+        self.n_cancelled = 0
+        self.n_failed = 0
 
     # ---------------------------------------------------------- client API
     def _attach_hit(self, req: Request, pages: List[PageNode],
                     n_tok: int) -> None:
         # only reuse *strictly shorter than prompt* prefixes (need ≥1 token
-        # to prefill so we have logits for the first generated token)
+        # to prefill so we have logits for the first generated token).
+        # lookup() caps n_tok at the longest page-aligned prefix, so the
+        # boundary case is exactly n_tok == len(prompt) with a page-aligned,
+        # fully-cached prompt — drop is then 1 (the last page), and each
+        # dropped page gives back exactly the one pin lookup took on it
+        # (tests/test_serving.py::test_attach_hit_page_aligned_boundary).
         if n_tok >= len(req.prompt):
             drop = (n_tok - len(req.prompt)) // self.page_size + 1
             for p in pages[len(pages) - drop:]:
@@ -127,26 +163,68 @@ class PagedServingEngine:
             n_tok = len(pages) * self.page_size
         req._hit_pages, req._hit_tokens = pages, n_tok
 
+    def _check_open(self):
+        if self._stop.is_set():
+            raise RuntimeError("engine is stopped; no new submissions")
+
+    def _validate(self, req: Request) -> None:
+        total = len(req.prompt) + req.max_new_tokens
+        if total > self.config.max_seq_len:
+            raise ValueError(
+                f"request {req.req_id} needs {total} tokens but "
+                f"max_seq_len={self.config.max_seq_len}; raise the config "
+                f"limit or shorten the request")
+
     def submit(self, req: Request) -> Request:
         """Client-thread path: optimistic prefix lookup happens HERE,
         concurrently with the engine and janitor threads."""
+        self._check_open()
+        self._validate(req)
         pages, n_tok = self.prefix_cache.lookup(req.prompt)
         self._attach_hit(req, pages, n_tok)
         with self._wlock:
-            self._waiting.append(req)
+            # re-check under the queue lock: stop() sets the flag BEFORE its
+            # drain takes this lock, so a push that wins the lock after the
+            # drain must see the flag — no request can strand in a dead
+            # queue with its hit pages pinned
+            stopped = self._stop.is_set()
+            if not stopped:
+                self.admission.push(self._waiting, req)
+        if stopped:
+            self._drop_hits([req])
         return req
+
+    def _drop_hits(self, reqs: Sequence[Request]):
+        for req in reqs:
+            for pg in req._hit_pages:
+                self.pool.unpin(pg)
+            req._hit_pages = []
+            req._hit_tokens = 0
+        raise RuntimeError("engine is stopped; no new submissions")
 
     def submit_many(self, reqs: Sequence[Request]) -> Sequence[Request]:
         """Batched admission (DESIGN.md §4): ALL prompts' prefix lookups run
         under one SMR guard scope — one reservation lifecycle for the whole
         admission wave instead of one per request — and the waiting queue is
         extended under a single lock acquisition."""
+        self._check_open()
+        for req in reqs:
+            self._validate(req)
         hits = self.prefix_cache.lookup_many([r.prompt for r in reqs])
         for req, (pages, n_tok) in zip(reqs, hits):
             self._attach_hit(req, pages, n_tok)
         with self._wlock:
-            self._waiting.extend(reqs)
+            stopped = self._stop.is_set()  # see submit(): drain-vs-push race
+            if not stopped:
+                for req in reqs:
+                    self.admission.push(self._waiting, req)
+        if stopped:
+            self._drop_hits(reqs)
         return reqs
+
+    def waiting_count(self) -> int:
+        with self._wlock:
+            return len(self._waiting)
 
     # ------------------------------------------------------------- device fns
     def _layer_params(self, i):
@@ -193,7 +271,11 @@ class PagedServingEngine:
                 vw.astype(v_pages.dtype))
         x = rms_norm(x, params["final_norm"])
         logits = x[:, -1] @ params["lm_head"]
-        return logits[0], k_pages, v_pages
+        # greedy argmax ON DEVICE: the engine only ever consumes the next
+        # token id, so ship one int32 to the host instead of a vocab-sized
+        # logits row (the host-side np.argmax was a GIL-held cost on every
+        # step — it capped multi-shard thread scaling)
+        return jnp.argmax(logits[0]).astype(jnp.int32), k_pages, v_pages
 
     def _paged_decode_step(self, params, k_pages, v_pages, block_tables,
                            ctx_lens, tokens):
@@ -225,15 +307,34 @@ class PagedServingEngine:
             x = x + ff @ p["ffn"]["wo"]
         x = rms_norm(x, params["final_norm"])
         logits = x[:, 0] @ params["lm_head"]
-        return logits, k_pages, v_pages
+        # greedy argmax on device (see _paged_prefill): (B,) token ids out
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
+            k_pages, v_pages
 
     # ------------------------------------------------------------- engine
+    def _fail_out(self, req: Request, status: str) -> None:
+        """Drop a request that will never run: give back its hit pins."""
+        for pg in req._hit_pages:
+            self.pool.unpin(pg)
+        req._hit_pages = []
+        req._hit_tokens = 0
+        req.status = status
+        if status == "cancelled":
+            self.n_cancelled += 1
+        else:
+            self.n_failed += 1
+        req._progress.set()
+        req.done.set()
+
     def _admit(self):
         while len(self._active) < self.max_batch:
             with self._wlock:
-                if not self._waiting:
-                    return
-                req = self._waiting.pop(0)
+                req = self.admission.pop(self._waiting)
+            if req is None:
+                return
+            if req.cancelled.is_set():
+                self._fail_out(req, "cancelled")
+                continue
             n_prompt = len(req.prompt)
             total = n_prompt + req.max_new_tokens
             n_pages_needed = -(-total // self.page_size)
@@ -246,81 +347,206 @@ class PagedServingEngine:
                     ok = False
                     break
                 pages.append(pg)
-            if not ok:  # pool pressure: evict + help reclamation, requeue
+            if not ok:
+                # pool pressure: shed the eviction policy's quota for one
+                # event, help reclamation, requeue ahead of peers
                 for pg in pages[owned_from:]:
                     self.pool.release(pg)
-                self.prefix_cache.evict_oldest(4)
+                self.prefix_cache.pressure_evict()
                 self.smr.help_reclaim()
                 with self._wlock:
-                    self._waiting.insert(0, req)
+                    self.admission.requeue(self._waiting, req)
                 return
             page_ids = np.zeros((self.max_pages,), np.int32)
             for j, pg in enumerate(pages):
                 page_ids[j] = pg.page_id
             seq = _Seq(req, pages, owned_from, page_ids)
-            logits, self.k_pages, self.v_pages = self._prefill(
+            req.status = "active"
+            first_tok, self.k_pages, self.v_pages = self._prefill(
                 self.params, self.k_pages, self.v_pages,
                 jnp.asarray([req.prompt], jnp.int32),
                 jnp.asarray(page_ids), jnp.int32(req._hit_tokens))
-            nxt = int(np.argmax(np.asarray(logits, np.float32)))
+            nxt = int(first_tok)
             seq.tokens.append(nxt)
             seq.req.out_tokens.append(nxt)
+            seq.req._progress.set()
             seq.new_tokens = 1
             self._active.append(seq)
 
-    def _finish(self, seq: _Seq):
-        # cache this sequence's page-aligned prefix, then release ownership
-        self.prefix_cache.insert(seq.tokens, seq.pages)
+    def _release_seq(self, seq: _Seq) -> None:
         for pg in seq.pages[seq.owned_from:]:
             self.pool.release(pg)
         for pg in seq.pages[:seq.owned_from]:  # drop admission pins
             self.pool.unpin(pg)
+
+    def _finish(self, seq: _Seq, status: str = "done"):
+        # cache this sequence's page-aligned prefix (cancelled sequences are
+        # not worth caching — their generation was cut short), then release
+        # ownership
+        if status == "done":
+            self.prefix_cache.insert(seq.tokens, seq.pages)
+            self.n_completed += 1
+        elif status == "cancelled":
+            self.n_cancelled += 1
+        else:
+            self.n_failed += 1
+        self._release_seq(seq)
+        seq.req.status = status
+        seq.req._progress.set()
         seq.req.done.set()
 
     def step(self) -> bool:
         """One engine iteration; returns False when idle."""
+        with self._step_lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> bool:
         self._admit()
         if not self._active:
             return False
-        b = len(self._active)
-        bt = np.zeros((self.max_batch, self.max_pages), np.int32)
+        bt = np.full((self.max_batch, self.max_pages), _SCRATCH_PAGE,
+                     np.int32)
         ctx = np.ones((self.max_batch,), np.int32)  # dummy rows: ctx=1
         toks = np.zeros((self.max_batch, 1), np.int32)
         for i, seq in enumerate(self._active):
             bt[i, :] = seq.page_row
             ctx[i] = len(seq.tokens)
             toks[i, 0] = seq.tokens[-1]
-        logits, self.k_pages, self.v_pages = self._decode(
+        next_toks, self.k_pages, self.v_pages = self._decode(
             self.params, self.k_pages, self.v_pages,
             jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(toks[:, 0]))
-        logits = np.asarray(logits, np.float32)
+        next_toks = np.asarray(next_toks)
         done = []
         for i, seq in enumerate(self._active):
-            nxt = int(np.argmax(logits[i]))
+            nxt = int(next_toks[i])
             seq.tokens.append(nxt)
             seq.req.out_tokens.append(nxt)
+            seq.req._progress.set()
             seq.new_tokens += 1
-            if seq.new_tokens >= seq.req.max_new_tokens:
+            if seq.new_tokens >= seq.req.max_new_tokens \
+                    or seq.req.cancelled.is_set():
                 done.append(seq)
         for seq in done:
             self._active.remove(seq)
-            self._finish(seq)
+            self._finish(seq, "cancelled" if seq.req.cancelled.is_set()
+                         else "done")
         self.steps += 1
         return True
 
-    def run(self, poll_s: float = 0.005):
-        """Engine loop (run in its own thread)."""
-        while not self._stop.is_set():
-            if not self.step():
-                time.sleep(poll_s)
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        """Spawn the shard's own engine thread (session mode)."""
+        assert self._thread is None, "shard already started"
+        self._thread = threading.Thread(
+            target=self.run, name=f"shard-{self.shard_id}-engine",
+            daemon=True)
+        self._thread.start()
 
-    def stop(self):
+    def run(self, poll_s: Optional[float] = None):
+        """Engine loop (the shard thread, or a caller-owned thread)."""
+        sleep_s = self.config.poll_s if poll_s is None else poll_s
+        self._run_started.set()
+        try:
+            while not self._stop.is_set():
+                if not self.step():
+                    time.sleep(sleep_s)
+        finally:
+            self._run_done.set()
+
+    def stop(self, drain: bool = True, timeout: float = 30.0):
+        """Stop the engine and (by default) drain it clean: join the engine
+        thread, fail out waiting + active sequences (releasing/unpinning
+        their pages), purge the prefix cache, flush reclamation, and give
+        back the scratch reservation — after which ``pool.stats()`` shows
+        every page back on the free list (zero leaks)."""
         self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        elif self._run_started.is_set():
+            # legacy mode: the caller owns the run() thread — wait for the
+            # loop to acknowledge the stop before tearing state down
+            self._run_done.wait(timeout)
+        if drain:
+            self._drain()
+
+    def _drain(self) -> None:
+        with self._step_lock:
+            with self._wlock:
+                leftover = self.admission.drain(self._waiting)
+            for req in leftover:
+                self._fail_out(req, "cancelled" if req.cancelled.is_set()
+                               else "failed")
+            for seq in self._active:
+                self._finish(seq, "failed")
+            self._active.clear()
+            self.prefix_cache.clear()
+            self.smr.flush()
+            if self._scratch_id is not None:
+                self.pool.unreserve(self._scratch_id)
+                self._scratch_id = None
 
     def stats(self):
         return {
+            "shard": self.shard_id,
             "pool": self.pool.stats(),
             "prefix_cache": self.prefix_cache.stats(),
+            "smr": self.smr.stats(),
             "steps": self.steps,
             "active": len(self._active),
+            "waiting": self.waiting_count(),
+            "completed": self.n_completed,
+            "cancelled": self.n_cancelled,
+            "failed": self.n_failed,
         }
+
+
+class PagedServingEngine(_ShardEngine):
+    """One-release compatibility shim: the pre-session construction surface.
+
+    ``PagedServingEngine(model, params, smr=..., num_pages=..., ...)`` maps
+    the old kwargs onto a :class:`ServingConfig` (with a
+    ``DeprecationWarning``) and behaves as a single shard.  New code builds
+    a config and calls :func:`repro.serving.serve`.
+    """
+
+    def __init__(self, model, params, *, smr="IBR",
+                 num_pages: int = 256, page_size: int = 8,
+                 max_batch: int = 4, max_seq_len: int = 256,
+                 prefix_cache_entries: int = 128,
+                 prefix_optimistic: Optional[bool] = None,
+                 prefix_traversal=None,
+                 config: Optional[ServingConfig] = None):
+        if config is not None:
+            super().__init__(model, params, config)
+            return
+        warnings.warn(
+            "PagedServingEngine(...) kwargs are deprecated; build a "
+            "repro.serving.ServingConfig and open a session with "
+            "repro.serving.serve(model, params, config)",
+            DeprecationWarning, stacklevel=2)
+        if prefix_optimistic is not None:
+            # thin shim for the pre-facade flag (one release)
+            if prefix_traversal is not None:
+                raise TypeError("PagedServingEngine: pass either "
+                                "prefix_traversal= or the deprecated "
+                                "prefix_optimistic= flag, not both")
+            warnings.warn("PagedServingEngine(prefix_optimistic=...) is "
+                          "deprecated; pass prefix_traversal='hm' for the "
+                          "Harris-Michael prefix-cache buckets",
+                          DeprecationWarning, stacklevel=2)
+            prefix_traversal = None if prefix_optimistic else "hm"
+        # an already-constructed scheme instance (shared with other
+        # subsystems) bypasses the config's name-based construction
+        shared = smr if isinstance(smr, SmrScheme) else None
+        is_name = isinstance(prefix_traversal, str) or \
+            prefix_traversal is None
+        cfg = ServingConfig(
+            smr=smr if isinstance(smr, str) else smr.name,
+            num_pages=num_pages, page_size=page_size, max_batch=max_batch,
+            max_seq_len=max_seq_len,
+            prefix_cache_entries=prefix_cache_entries,
+            prefix_traversal=prefix_traversal if is_name else None)
+        super().__init__(model, params, cfg, smr=shared,
+                         prefix_traversal=None if is_name
+                         else prefix_traversal)

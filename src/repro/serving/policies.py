@@ -1,0 +1,150 @@
+"""Named admission policies for the serving session — plus the eviction
+registry re-exported from :mod:`repro.runtime.eviction`, so
+``repro.serving.policies`` is the one place serving-policy names resolve
+(mirroring how :mod:`repro.api` resolves traversal-policy names).
+
+An admission policy owns the *waiting queue representation* of one shard:
+the engine only ever calls ``push`` / ``pop`` / ``requeue`` / ``drain``
+under its own lock, so a policy is pure ordering logic.
+
+* ``fifo`` — arrival order (the old ``list.pop(0)``, now a deque).
+* ``priority`` — max-heap on ``Request.priority`` (ties arrival-ordered);
+  a pool-pressure ``requeue`` goes back ahead of equal-priority peers, so
+  pressure cannot starve a request behind its own cohort.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import deque
+from typing import List, Optional, Union
+
+from ..runtime.eviction import (  # noqa: F401  (re-exported surface)
+    EVICTION_POLICIES,
+    EvictionPolicy,
+    FifoEviction,
+    LruEviction,
+    PressureEviction,
+    as_eviction_policy,
+    eviction_policies,
+)
+
+__all__ = [
+    "AdmissionPolicy",
+    "FifoAdmission",
+    "PriorityAdmission",
+    "ADMISSION_POLICIES",
+    "admission_policies",
+    "as_admission_policy",
+    # re-exported eviction surface
+    "EvictionPolicy",
+    "FifoEviction",
+    "PressureEviction",
+    "LruEviction",
+    "EVICTION_POLICIES",
+    "eviction_policies",
+    "as_eviction_policy",
+]
+
+
+class AdmissionPolicy:
+    """Queue discipline for one shard's waiting requests.  All methods are
+    called with the shard's queue lock held — implementations need no
+    locking of their own."""
+
+    name = "base"
+
+    def new_queue(self):
+        raise NotImplementedError
+
+    def push(self, queue, req) -> None:
+        raise NotImplementedError
+
+    def pop(self, queue) -> Optional[object]:
+        raise NotImplementedError
+
+    def requeue(self, queue, req) -> None:
+        """Pool-pressure path: the request could not be admitted and must
+        come back *before* its peers."""
+        raise NotImplementedError
+
+    def drain(self, queue) -> List[object]:
+        """Remove and return every queued request (shutdown)."""
+        raise NotImplementedError
+
+
+class FifoAdmission(AdmissionPolicy):
+    name = "fifo"
+
+    def new_queue(self):
+        return deque()
+
+    def push(self, queue, req) -> None:
+        queue.append(req)
+
+    def pop(self, queue):
+        return queue.popleft() if queue else None
+
+    def requeue(self, queue, req) -> None:
+        queue.appendleft(req)
+
+    def drain(self, queue):
+        out = list(queue)
+        queue.clear()
+        return out
+
+
+class PriorityAdmission(AdmissionPolicy):
+    """Heap of ``(-priority, seq, req)``: higher ``Request.priority`` pops
+    first, equal priorities in arrival order.  ``requeue`` uses a counter
+    that only decreases, so a pressure-bounced request sorts ahead of every
+    same-priority arrival."""
+
+    name = "priority"
+
+    def __init__(self):
+        self._arrivals = itertools.count()
+        self._bounces = itertools.count(start=-1, step=-1)
+
+    def new_queue(self):
+        return []
+
+    def push(self, queue, req) -> None:
+        heapq.heappush(queue, (-getattr(req, "priority", 0),
+                               next(self._arrivals), req))
+
+    def pop(self, queue):
+        return heapq.heappop(queue)[2] if queue else None
+
+    def requeue(self, queue, req) -> None:
+        heapq.heappush(queue, (-getattr(req, "priority", 0),
+                               next(self._bounces), req))
+
+    def drain(self, queue):
+        out = [heapq.heappop(queue)[2] for _ in range(len(queue))]
+        return out
+
+
+ADMISSION_POLICIES = {
+    cls.name: cls for cls in (FifoAdmission, PriorityAdmission)
+}
+
+
+def admission_policies() -> List[str]:
+    return list(ADMISSION_POLICIES)
+
+
+def as_admission_policy(policy: Union[str, AdmissionPolicy, None]
+                        ) -> AdmissionPolicy:
+    """Name → fresh policy instance (stateful: one per shard); instances
+    pass through; ``None`` picks ``fifo``."""
+    if policy is None:
+        return FifoAdmission()
+    if isinstance(policy, AdmissionPolicy):
+        return policy
+    try:
+        return ADMISSION_POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown admission policy {policy!r}; choose "
+                         f"from {admission_policies()}") from None

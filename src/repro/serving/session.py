@@ -1,0 +1,330 @@
+"""``repro.serving`` sessions — many SMR domains behind one handle API.
+
+The paper's robustness property (a stalled thread pins O(K) objects) turns
+into an architecture rule here: a :class:`ShardedEngine` gives every shard
+its own ``BlockPool`` + ``PrefixCache`` + (by default) its own SMR scheme
+instance, so a stall or pool-pressure event inside one shard cannot pin
+pages, delay reclamation, or block admission anywhere else — the serving
+restatement of Hyaline's multi-instance design (DESIGN.md §11).
+
+Construction is one call::
+
+    from repro import serving
+
+    session = serving.serve(model, params,
+                            serving.ServingConfig(num_shards=2, smr="IBR",
+                                                  eviction="lru"))
+    handle = session.submit(prompt, max_new_tokens=16)
+    for tok in handle:          # stream tokens as they decode
+        ...
+    session.close()             # drains every shard clean
+
+Routing: the :class:`PrefixRouter` keys on the rolling-FNV hash of the
+prompt's FIRST page (the same hash family the prefix cache keys entries
+with), so two prompts sharing a page-aligned prefix always land on the same
+shard — cross-request prefix hits survive sharding.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+from ..runtime.prefix_cache import _prefix_key
+from .config import ServingConfig
+from .engine import Request, _ShardEngine
+
+__all__ = ["PrefixRouter", "ShardedEngine", "RequestHandle",
+           "ServingSession", "serve"]
+
+
+class PrefixRouter:
+    """Deterministic prompt → shard placement by first-page prefix key."""
+
+    def __init__(self, num_shards: int, page_size: int):
+        self.num_shards = num_shards
+        self.page_size = page_size
+
+    def shard_of(self, prompt: Sequence[int]) -> int:
+        if self.num_shards == 1:
+            return 0
+        # the FNV key of the first page boundary — identical to the key the
+        # prefix cache files that page under, so "same shard" and "same
+        # cache bucket universe" coincide for shared prefixes.  FNV's low
+        # bits are weak (short uniform prompts collapse onto one residue),
+        # so Fibonacci-mix before the modulo: the placement must depend on
+        # the whole 60-bit key, not its last two bits.
+        key = _prefix_key(prompt[:self.page_size])
+        mixed = (key * 0x9E3779B97F4A7C15) & ((1 << 64) - 1)
+        return (mixed >> 32) % self.num_shards
+
+
+class RequestHandle:
+    """Future-style handle for one submitted request."""
+
+    __slots__ = ("req", "shard")
+
+    def __init__(self, req: Request, shard: int):
+        self.req = req
+        self.shard = shard
+
+    # ------------------------------------------------------------- status
+    @property
+    def req_id(self) -> int:
+        return self.req.req_id
+
+    @property
+    def status(self) -> str:
+        return self.req.status
+
+    @property
+    def done(self) -> threading.Event:
+        return self.req.done
+
+    @property
+    def out_tokens(self) -> List[int]:
+        return self.req.out_tokens
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self.req.done.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> List[int]:
+        """Block until completion; the generated tokens.  Raises
+        ``TimeoutError`` if the deadline expires and ``RuntimeError`` if the
+        engine failed the request (e.g. drained at shutdown)."""
+        if not self.req.done.wait(timeout):
+            raise TimeoutError(f"request {self.req.req_id} not done")
+        if self.req.status == "failed":
+            raise RuntimeError(f"request {self.req.req_id} failed "
+                               f"(engine drained before completion)")
+        return list(self.req.out_tokens)
+
+    def cancel(self) -> None:
+        """Ask the engine to stop decoding this request.  Waiting requests
+        are dropped at their next admission look; active ones finish their
+        in-flight step and release their pages."""
+        self.req.cancelled.set()
+        self.req._progress.set()
+
+    # ------------------------------------------------------------- stream
+    def tokens(self, poll_s: float = 0.05) -> Iterator[int]:
+        """Stream generated tokens as the engine produces them; ends when
+        the request completes (however it completes)."""
+        req = self.req
+        i = 0
+        while True:
+            out = req.out_tokens
+            while i < len(out):
+                yield out[i]
+                i += 1
+            if req.done.is_set():
+                out = req.out_tokens
+                while i < len(out):  # drain the tail
+                    yield out[i]
+                    i += 1
+                return
+            # event-with-timeout: a cleared-flag race just means one extra
+            # poll interval, never a lost token
+            req._progress.wait(poll_s)
+            req._progress.clear()
+
+    __iter__ = tokens
+
+
+class ShardedEngine:
+    """N independent shard engines + a router + a session janitor."""
+
+    def __init__(self, model, params, config: ServingConfig):
+        self.config = config
+        # "shared" SMR mode: one scheme instance spans every shard (the
+        # pools disambiguate frees per PageNode owner); "per_shard" (the
+        # default) gives each shard its own reclamation domain
+        shared = config.build_scheme() if config.shard_smr == "shared" \
+            else None
+        self.shards = [
+            _ShardEngine(model, params, config, smr=shared, shard_id=i)
+            for i in range(config.num_shards)
+        ]
+        self.router = PrefixRouter(config.num_shards, config.page_size)
+        self._janitor_stop = threading.Event()
+        self._janitor: Optional[threading.Thread] = None
+        self._started = False
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        for shard in self.shards:
+            shard.start()
+        self._janitor = threading.Thread(target=self._janitor_loop,
+                                         name="serving-janitor", daemon=True)
+        self._janitor.start()
+
+    def _janitor_loop(self) -> None:
+        """Session-level pressure sweep: when a shard's pool cannot cover
+        one more admission, shed that shard's eviction quota and help its
+        reclamation — from OUTSIDE the shard's engine thread, so a shard
+        stuck in a long decode still gets pages freed."""
+        interval = self.config.janitor_interval_s
+        while not self._janitor_stop.wait(interval):
+            for shard in self.shards:
+                if shard.pool.free_count() < shard.max_pages:
+                    shard.prefix_cache.pressure_evict()
+                    shard.smr.help_reclaim()
+
+    def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
+        self._janitor_stop.set()
+        if self._janitor is not None:
+            self._janitor.join(timeout)
+            self._janitor = None
+        for shard in self.shards:
+            shard.stop(drain=drain, timeout=timeout)
+
+    # ------------------------------------------------------------- traffic
+    def submit(self, req: Request) -> int:
+        shard = self.router.shard_of(req.prompt)
+        self.shards[shard].submit(req)
+        return shard
+
+    def submit_many(self, reqs: Sequence[Request]) -> List[int]:
+        """Route a whole admission wave, one batched ``submit_many`` per
+        involved shard (one guard scope per shard, not per request)."""
+        placement = [self.router.shard_of(r.prompt) for r in reqs]
+        by_shard: Dict[int, List[Request]] = {}
+        for shard, req in zip(placement, reqs):
+            by_shard.setdefault(shard, []).append(req)
+        for shard, group in by_shard.items():
+            self.shards[shard].submit_many(group)
+        return placement
+
+    def stats(self) -> List[dict]:
+        return [shard.stats() for shard in self.shards]
+
+
+class ServingSession:
+    """The serving handle: submit prompts, stream tokens, read stats."""
+
+    def __init__(self, model, params, config: Optional[ServingConfig] = None,
+                 *, start: bool = True):
+        self.config = config if config is not None else ServingConfig()
+        self.engine = ShardedEngine(model, params, self.config)
+        self._submitted = 0
+        self._lock = threading.Lock()
+        self._closed = False
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        self.engine.start()
+
+    def close(self, drain: bool = True, timeout: float = 30.0) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.engine.stop(drain=drain, timeout=timeout)
+
+    def __enter__(self) -> "ServingSession":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # ------------------------------------------------------------- traffic
+    def _as_request(self, prompt, max_new_tokens: int,
+                    priority: int) -> Request:
+        if isinstance(prompt, Request):
+            return prompt
+        return Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
+                       priority=priority)
+
+    def submit(self, prompt: Union[Sequence[int], Request], *,
+               max_new_tokens: int = 16, priority: int = 0) -> RequestHandle:
+        """Async submission: returns immediately with a
+        :class:`RequestHandle` (done-event, token stream, cancel)."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        req = self._as_request(prompt, max_new_tokens, priority)
+        shard = self.engine.submit(req)
+        with self._lock:
+            self._submitted += 1
+        return RequestHandle(req, shard)
+
+    def submit_many(self, prompts: Sequence[Union[Sequence[int], Request]],
+                    *, max_new_tokens: int = 16,
+                    priority: int = 0) -> List[RequestHandle]:
+        """Batched admission wave: per-shard grouped lookups under one SMR
+        guard scope each (DESIGN.md §4)."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        reqs = [self._as_request(p, max_new_tokens, priority)
+                for p in prompts]
+        placement = self.engine.submit_many(reqs)
+        with self._lock:
+            self._submitted += len(reqs)
+        return [RequestHandle(req, shard)
+                for req, shard in zip(reqs, placement)]
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Structured observability snapshot: config summary, request
+        counters, per-shard pool/cache/SMR counters (including the paper's
+        ``anchor_recoveries``/``wf_escalations`` mechanism counters inside
+        ``prefix_cache.traversal``), and cross-shard totals."""
+        shards = self.engine.stats()
+        totals: Dict[str, float] = {
+            "steps": sum(s["steps"] for s in shards),
+            "active": sum(s["active"] for s in shards),
+            "waiting": sum(s["waiting"] for s in shards),
+            "completed": sum(s["completed"] for s in shards),
+            "cancelled": sum(s["cancelled"] for s in shards),
+            "failed": sum(s["failed"] for s in shards),
+            "pool_free": sum(s["pool"]["free"] for s in shards),
+            "pool_alloc": sum(s["pool"]["alloc"] for s in shards),
+            "pool_awaiting_reclaim": sum(s["pool"]["awaiting_reclaim"]
+                                         for s in shards),
+            "prefix_hits": sum(s["prefix_cache"]["hits"] for s in shards),
+            "prefix_misses": sum(s["prefix_cache"]["misses"]
+                                 for s in shards),
+            "prefix_entries": sum(s["prefix_cache"]["entries"]
+                                  for s in shards),
+            "smr_retired": sum(s["smr"]["retired"] for s in shards),
+            "smr_reclaimed": sum(s["smr"]["reclaimed"] for s in shards),
+        }
+        if self.config.shard_smr == "shared":
+            # one scheme instance spans every shard: its counters (and the
+            # scheme-global awaiting_reclaim each pool reports) would be
+            # summed num_shards times — count them once instead
+            totals["smr_retired"] = shards[0]["smr"]["retired"]
+            totals["smr_reclaimed"] = shards[0]["smr"]["reclaimed"]
+            totals["pool_awaiting_reclaim"] = \
+                shards[0]["pool"]["awaiting_reclaim"]
+        with self._lock:
+            submitted = self._submitted
+        return {
+            "config": self.config.summary(),
+            "requests": {"submitted": submitted,
+                         "completed": int(totals["completed"]),
+                         "cancelled": int(totals["cancelled"]),
+                         "failed": int(totals["failed"])},
+            "shards": shards,
+            "totals": totals,
+        }
+
+
+def serve(model, params, config: Optional[ServingConfig] = None, *,
+          start: bool = True, **overrides) -> ServingSession:
+    """Open a serving session — THE construction surface for serving.
+
+    ``config`` may be omitted and built from keyword overrides
+    (``serve(model, params, num_shards=2, eviction="lru")``), or passed and
+    refined (``serve(model, params, cfg, max_batch=8)``).
+    """
+    if config is None:
+        config = ServingConfig(**overrides)
+    elif overrides:
+        config = config.replace(**overrides)
+    return ServingSession(model, params, config, start=start)

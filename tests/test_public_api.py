@@ -22,6 +22,8 @@ API_SURFACE = sorted([
     "schemes",
     "structures",
     "traversal_policies",
+    "admission_policies",
+    "eviction_policies",
     "scheme_info",
     "structure_info",
     "check",
@@ -47,6 +49,22 @@ CORE_SURFACE = sorted([
 ])
 
 
+SERVING_SURFACE = sorted([
+    "serve", "ServingConfig", "ServingSession", "RequestHandle",
+    "ShardedEngine", "PrefixRouter", "Request", "PagedServingEngine",
+    "admission_policies", "eviction_policies",
+    "as_admission_policy", "as_eviction_policy",
+])
+
+
+def test_serving_surface_snapshot():
+    import repro.serving as serving
+    assert sorted(serving.__all__) == SERVING_SURFACE
+    for name in serving.__all__:
+        assert hasattr(serving, name), \
+            f"repro.serving.__all__ lists missing {name}"
+
+
 def test_api_surface_snapshot():
     assert sorted(api.__all__) == API_SURFACE
     for name in api.__all__:
@@ -65,6 +83,8 @@ def test_registry_names_snapshot():
                                 "HashMap"]
     assert api.traversal_policies() == ["optimistic", "scot", "hm",
                                         "waitfree"]
+    assert api.admission_policies() == ["fifo", "priority"]
+    assert api.eviction_policies() == ["fifo", "pressure", "lru"]
 
 
 def test_scheme_capability_snapshot():

@@ -1,19 +1,22 @@
-"""Serving engine end-to-end: paged decode over the SMR-managed pool must
-reproduce the contiguous-cache reference decode token-for-token; prefix-cache
-hits must not change outputs; pool accounting must balance; a stalled client
-must not leak the pool under robust schemes."""
+"""Serving sessions end-to-end: paged decode over the SMR-managed pools must
+reproduce the contiguous-cache reference decode token-for-token (single- and
+multi-shard); prefix-cache hits must not change outputs; ``close()`` must
+drain every shard to a zero-leak pool; the legacy ``PagedServingEngine``
+kwargs must keep working behind a ``DeprecationWarning``; a stalled client
+must not leak the pool, and a stalled *shard* must not block admission on
+its siblings."""
 
 import threading
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import serving
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serving import PagedServingEngine, Request
+from repro.serving import PagedServingEngine, Request, ServingConfig
 
 
 def _reference_greedy(model, params, prompt, n_new):
@@ -39,6 +42,15 @@ def _reference_greedy(model, params, prompt, n_new):
     return out
 
 
+def _prompt_for_shard(router, rng, shard, length):
+    """A random prompt the router places on ``shard``."""
+    for _ in range(200):
+        p = list(rng.randint(1, 200, size=length))
+        if router.shard_of(p) == shard:
+            return p
+    raise AssertionError("router never produced the wanted shard")
+
+
 @pytest.fixture(scope="module")
 def small_model():
     cfg = get_config("tinyllama-1.1b").reduced().replace(dtype="float32")
@@ -50,65 +62,207 @@ def small_model():
 @pytest.mark.parametrize("smr", ["EBR", "HP", "IBR", "HLN"])
 def test_paged_equals_reference(small_model, smr):
     model, params = small_model
-    eng = PagedServingEngine(model, params, smr=smr, num_pages=64,
-                             page_size=8, max_batch=2, max_seq_len=64)
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr=smr, num_pages=64, page_size=8, max_batch=2,
+                      max_seq_len=64))
     rng = np.random.RandomState(0)
     prompts = [list(rng.randint(1, 200, size=n)) for n in (9, 17, 12)]
-    reqs = [eng.submit(Request(prompt=p, max_new_tokens=6)) for p in prompts]
-    t = threading.Thread(target=eng.run, daemon=True)
-    t.start()
-    for r in reqs:
-        assert r.done.wait(timeout=120), "engine stalled"
-    eng.stop()
-    t.join(timeout=10)
-    for p, r in zip(prompts, reqs):
+    handles = [session.submit(p, max_new_tokens=6) for p in prompts]
+    outs = [h.result(timeout=120) for h in handles]
+    session.close()
+    for p, out in zip(prompts, outs):
         want = _reference_greedy(model, params, p, 6)
-        assert r.out_tokens == want, (smr, p[:4], r.out_tokens, want)
+        assert out == want, (smr, p[:4], out, want)
 
 
 def test_prefix_cache_hit_preserves_outputs(small_model):
     model, params = small_model
-    eng = PagedServingEngine(model, params, smr="IBR", num_pages=64,
-                             page_size=4, max_batch=2, max_seq_len=64)
-    t = threading.Thread(target=eng.run, daemon=True)
-    t.start()
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_pages=64, page_size=4, max_batch=2,
+                      max_seq_len=64))
     rng = np.random.RandomState(1)
     shared = list(rng.randint(1, 200, size=12))
     p1 = shared + [5, 6]
     p2 = shared + [9]            # shares three 4-token pages with p1
-    r1 = eng.submit(Request(prompt=p1, max_new_tokens=5))
-    assert r1.done.wait(timeout=120)
-    hits_before = eng.prefix_cache.stats()["hits"]
-    r2 = eng.submit(Request(prompt=p2, max_new_tokens=5))
-    assert r2.done.wait(timeout=120)
-    eng.stop()
-    t.join(timeout=10)
-    assert eng.prefix_cache.stats()["hits"] > hits_before, "no prefix hit"
-    assert r2.out_tokens == _reference_greedy(model, params, p2, 5)
+    session.submit(p1, max_new_tokens=5).result(timeout=120)
+    hits_before = session.stats()["totals"]["prefix_hits"]
+    out2 = session.submit(p2, max_new_tokens=5).result(timeout=120)
+    stats = session.stats()
+    session.close()
+    assert stats["totals"]["prefix_hits"] > hits_before, "no prefix hit"
+    assert out2 == _reference_greedy(model, params, p2, 5)
 
 
-@pytest.mark.parametrize("smr", ["IBR", "HLN", "HP"])
-def test_pool_accounting_balances(small_model, smr):
+def test_multi_shard_matches_reference_with_cross_request_hits(small_model):
+    """Sharded outputs equal the contiguous reference token-for-token, and
+    shared-prefix requests land on the same shard and hit its cache."""
     model, params = small_model
-    eng = PagedServingEngine(model, params, smr=smr, num_pages=48,
-                             page_size=8, max_batch=2, max_seq_len=48,
-                             prefix_cache_entries=2)
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_shards=2, num_pages=64, page_size=4,
+                      max_batch=2, max_seq_len=64))
+    router = session.engine.router
+    rng = np.random.RandomState(4)
+    # one shared 12-token (3-page) prefix per shard, so both shards serve
+    # traffic and each sees a cross-request prefix reuse
+    prompts = []
+    for shard in (0, 1):
+        base = _prompt_for_shard(router, rng, shard, 12)
+        prompts += [base + [5, 6], base + [9]]
+    handles = session.submit_many(prompts, max_new_tokens=5)
+    outs = [h.result(timeout=120) for h in handles]
+    assert {h.shard for h in handles} == {0, 1}
+    # second wave re-uses the prefixes: hits must land on the SAME shard
+    placements = {tuple(p[:4]): h.shard for p, h in zip(prompts, handles)}
+    hits_before = [s["prefix_cache"]["hits"] for s in session.stats()["shards"]]
+    wave2 = [prompts[0][:12] + [77], prompts[2][:12] + [78]]
+    handles2 = session.submit_many(wave2, max_new_tokens=5)
+    outs2 = [h.result(timeout=120) for h in handles2]
+    hits_after = [s["prefix_cache"]["hits"] for s in session.stats()["shards"]]
+    for p, h in zip(wave2, handles2):
+        assert h.shard == placements[tuple(p[:4])], "prefix left its shard"
+    assert sum(hits_after) > sum(hits_before), "no cross-request hit"
+    session.close()
+    for p, out in zip(prompts + wave2, outs + outs2):
+        assert out == _reference_greedy(model, params, p, 5), p[:4]
+
+
+def test_legacy_engine_kwargs_deprecated_but_working(small_model):
+    """The pre-session construction surface: one release of compatibility,
+    with a DeprecationWarning, on top of ServingConfig."""
+    model, params = small_model
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        eng = PagedServingEngine(model, params, smr="EBR", num_pages=64,
+                                 page_size=8, max_batch=2, max_seq_len=64)
+    assert eng.config.smr == "EBR"
+    rng = np.random.RandomState(5)
+    prompt = list(rng.randint(1, 200, size=9))
+    req = eng.submit(Request(prompt=prompt, max_new_tokens=4))
     t = threading.Thread(target=eng.run, daemon=True)
     t.start()
-    rng = np.random.RandomState(2)
-    reqs = [eng.submit(Request(prompt=list(rng.randint(1, 200, size=8 + i)),
-                               max_new_tokens=4))
-            for i in range(6)]
-    for r in reqs:
-        assert r.done.wait(timeout=180), f"stall: {eng.stats()}"
+    assert req.done.wait(timeout=120), "legacy engine stalled"
     eng.stop()
     t.join(timeout=10)
-    # force eviction of all cached entries, then reclamation
-    eng.prefix_cache.evict_oldest(100)
-    eng.smr.flush()
+    assert req.out_tokens == _reference_greedy(model, params, prompt, 4)
+    # stop() drained: scratch unreserved, cache purged, zero leaked pages
     stats = eng.pool.stats()
-    # every allocated page must return to the free list (47 usable pages)
-    assert stats["free"] == 47, stats
+    assert stats["free"] == 64 and stats["awaiting_reclaim"] == 0, stats
+
+
+def test_pool_accounting_balances(small_model):
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_pages=48, page_size=8, max_batch=2,
+                      max_seq_len=48, prefix_cache_entries=2))
+    rng = np.random.RandomState(2)
+    handles = [session.submit(list(rng.randint(1, 200, size=8 + i)),
+                              max_new_tokens=4)
+               for i in range(6)]
+    for h in handles:
+        assert h.wait(timeout=180), f"stall: {session.stats()}"
+    session.close()
+    # close() drains: every page back on the free list, nothing awaiting
+    stats = session.engine.shards[0].pool.stats()
+    assert stats["free"] == 48 and stats["awaiting_reclaim"] == 0, stats
+
+
+def test_stop_mid_flight_drains_pool_clean(small_model):
+    """Satellite regression: stop() with live sequences must finish or
+    requeue-fail them and release/unpin every page — zero leaks."""
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_pages=64, page_size=8, max_batch=2,
+                      max_seq_len=64))
+    rng = np.random.RandomState(6)
+    handles = [session.submit(list(rng.randint(1, 200, size=10)),
+                              max_new_tokens=50)  # long enough to interrupt
+               for _ in range(5)]
+    # wait until the engine actually has active sequences
+    deadline = 60
+    while session.stats()["totals"]["active"] == 0 and deadline:
+        threading.Event().wait(0.05)
+        deadline -= 1
+    session.close()
+    for h in handles:
+        assert h.done.is_set(), "drain left a handle unresolved"
+        assert h.status in ("done", "failed", "cancelled"), h.status
+    assert any(h.status == "failed" for h in handles), \
+        "close() arrived after everything finished — shrink the wait"
+    stats = session.engine.shards[0].pool.stats()
+    assert stats["free"] == 64, stats
+    assert stats["awaiting_reclaim"] == 0, stats
+    assert stats["reserved"] == 0, stats
+
+
+def test_attach_hit_page_aligned_boundary(small_model):
+    """Satellite: a fully-cached, page-aligned prompt (n_tok == len(prompt))
+    must drop exactly one page of the hit — pins stay balanced."""
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_pages=32, page_size=4, max_batch=2,
+                      max_seq_len=32),
+        start=False)
+    shard = session.engine.shards[0]
+    prompt = list(range(50, 58))          # 8 tokens == exactly 2 pages
+    pages = [shard.pool.alloc(0), shard.pool.alloc(0)]
+    shard.prefix_cache.insert(prompt, pages)   # caches 1- and 2-page runs
+    for pg in pages:
+        shard.pool.release(pg)            # cache pins keep them alive
+    req = Request(prompt=prompt, max_new_tokens=4)
+    shard.submit(req)
+    # the full 2-page hit was trimmed to 1 page so prefill has >= 1 token
+    assert req._hit_tokens == 4
+    assert len(req._hit_pages) == 1 and req._hit_pages[0] is pages[0]
+    # pins: page0 = 2 cache entries + 1 hit pin; page1 = 1 cache entry
+    # (the dropped page gave back exactly the one pin lookup took)
+    assert pages[0].pin_count.load() == 3
+    assert pages[1].pin_count.load() == 1
+    session.close()   # drains the queued request + cache; pool must be clean
+    stats = shard.pool.stats()
+    assert stats["free"] == 32 and stats["awaiting_reclaim"] == 0, stats
+
+
+def test_stalled_shard_does_not_block_admission_on_others(small_model):
+    """Satellite robustness: per-shard SMR domains + engine threads mean one
+    shard's stalled worker cannot block admission or decode on siblings."""
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_shards=2, num_pages=64, page_size=8,
+                      max_batch=2, max_seq_len=64),
+        start=False)
+    shard0 = session.engine.shards[0]
+    entered = threading.Event()
+    release = threading.Event()
+    orig_step = shard0.step
+
+    def stalled_step():
+        entered.set()
+        release.wait(timeout=120)   # the stalled worker
+        return orig_step()
+
+    shard0.step = stalled_step
+    session.start()
+    rng = np.random.RandomState(7)
+    router = session.engine.router
+    blocked = session.submit(_prompt_for_shard(router, rng, 0, 10),
+                             max_new_tokens=3)
+    assert entered.wait(timeout=60), "shard 0 never picked up work"
+    # admission AND completion on shard 1 while shard 0 is stalled
+    others = [session.submit(_prompt_for_shard(router, rng, 1, 10),
+                             max_new_tokens=3) for _ in range(4)]
+    for h in others:
+        assert h.shard == 1
+        assert h.wait(timeout=120), "healthy shard starved by stalled peer"
+    assert not blocked.done.is_set(), "test setup: shard 0 was not stalled"
+    release.set()
+    assert blocked.wait(timeout=120)
+    session.close()
 
 
 def test_stalled_reader_bounds_pool_leak(small_model):
@@ -116,31 +270,117 @@ def test_stalled_reader_bounds_pool_leak(small_model):
     stalled mid-lookup pins only O(1) pages under IBR, and the engine keeps
     serving."""
     model, params = small_model
-    eng = PagedServingEngine(model, params, smr="IBR", num_pages=96,
-                             page_size=8, max_batch=2, max_seq_len=48,
-                             prefix_cache_entries=4)
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_pages=96, page_size=8, max_batch=2,
+                      max_seq_len=48, prefix_cache_entries=4))
+    shard = session.engine.shards[0]
     stalled_in = threading.Event()
     release = threading.Event()
 
     def stalled_client():
-        eng.smr.begin_op()
-        eng.smr.protect(eng.prefix_cache.buckets[0].head.next_ref(), 0)
+        shard.smr.begin_op()
+        shard.smr.protect(shard.prefix_cache.buckets[0].head.next_ref(), 0)
         stalled_in.set()
         release.wait(timeout=60)
-        eng.smr.end_op()
+        shard.smr.end_op()
 
     ts = threading.Thread(target=stalled_client, daemon=True)
     ts.start()
     stalled_in.wait(timeout=10)
 
-    t = threading.Thread(target=eng.run, daemon=True)
-    t.start()
     rng = np.random.RandomState(3)
-    reqs = [eng.submit(Request(prompt=list(rng.randint(1, 200, size=10)),
-                               max_new_tokens=3)) for _ in range(8)]
-    for r in reqs:
-        assert r.done.wait(timeout=180), f"engine starved: {eng.stats()}"
+    # single shard: all prompts route to shard 0 regardless of content
+    handles = [session.submit(list(rng.randint(1, 200, size=10)),
+                              max_new_tokens=3) for _ in range(8)]
+    for h in handles:
+        assert h.wait(timeout=180), f"engine starved: {session.stats()}"
     release.set()
-    eng.stop()
-    t.join(timeout=10)
     ts.join(timeout=10)
+    session.close()
+
+
+def test_cancel_and_stream(small_model):
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_pages=64, page_size=8, max_batch=2,
+                      max_seq_len=64))
+    rng = np.random.RandomState(8)
+    prompt = list(rng.randint(1, 200, size=9))
+    h = session.submit(prompt, max_new_tokens=5)
+    streamed = list(h.tokens())
+    assert streamed == h.out_tokens and len(streamed) == 5
+    with pytest.raises(ValueError, match="max_seq_len"):
+        session.submit(prompt, max_new_tokens=4000)  # cannot ever fit
+    long = session.submit(prompt, max_new_tokens=50)
+    for _ in long.tokens():
+        long.cancel()       # cancel after the first streamed token
+        break
+    assert long.wait(timeout=120)
+    assert long.status == "cancelled"
+    assert len(long.out_tokens) < 50
+    session.close()
+    stats = session.engine.shards[0].pool.stats()
+    assert stats["free"] == 64, stats
+
+
+def test_shared_smr_mode(small_model):
+    """shard_smr='shared': one scheme instance spans both shards — frees
+    route to the owning pool (PageNode.owner dispatch), totals count the
+    shared scheme once, and the drain still leaves both pools clean."""
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_shards=2, shard_smr="shared",
+                      num_pages=64, page_size=8, max_batch=2,
+                      max_seq_len=64))
+    shards = session.engine.shards
+    assert shards[0].smr is shards[1].smr
+    rng = np.random.RandomState(11)
+    router = session.engine.router
+    handles = [session.submit(_prompt_for_shard(router, rng, s, 10),
+                              max_new_tokens=3)
+               for s in (0, 1, 0, 1)]
+    for h in handles:
+        assert h.wait(timeout=120)
+    stats = session.stats()
+    # the shared scheme's counters are counted once, not per shard
+    assert stats["totals"]["smr_retired"] == \
+        stats["shards"][0]["smr"]["retired"]
+    session.close()
+    for shard in shards:
+        ps = shard.pool.stats()
+        assert ps["free"] == 64 and ps["awaiting_reclaim"] == 0, ps
+
+
+def test_session_stats_surface(small_model):
+    """Acceptance: per-shard stats() surfaces pool/cache/SMR counters,
+    including the paper's wait-free mechanism counters."""
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_shards=2, num_pages=64, page_size=8,
+                      max_batch=2, max_seq_len=64, eviction="pressure",
+                      admission="priority"))
+    rng = np.random.RandomState(9)
+    handles = session.submit_many(
+        [list(rng.randint(1, 200, size=10)) for _ in range(4)],
+        max_new_tokens=3)
+    for h in handles:
+        assert h.wait(timeout=120)
+    stats = session.stats()
+    assert stats["config"]["num_shards"] == 2
+    assert stats["config"]["eviction"] == "pressure"
+    assert stats["requests"]["submitted"] == 4
+    assert len(stats["shards"]) == 2
+    for shard in stats["shards"]:
+        for key in ("pool", "prefix_cache", "smr", "steps"):
+            assert key in shard
+        assert {"retired", "reclaimed", "barriers",
+                "scans"} <= set(shard["smr"])
+        trav = shard["prefix_cache"]["traversal"]
+        assert {"anchor_recoveries", "wf_escalations",
+                "restarts"} <= set(trav)
+    assert stats["totals"]["completed"] == 4
+    session.close()

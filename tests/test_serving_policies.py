@@ -1,0 +1,222 @@
+"""Serving-policy registries and runtime satellites — no model required:
+admission ordering (fifo/priority), eviction victim order (fifo/pressure/
+lru via the NM-tree ordered index), ServingConfig validation, PrefixRouter
+placement, BlockPool.reserve, and NMTree.min_key."""
+
+import pytest
+
+from repro import api
+from repro.core.structures.nm_tree import NMTree
+from repro.runtime.block_pool import BlockPool
+from repro.runtime.eviction import (
+    as_eviction_policy,
+    eviction_policies,
+)
+from repro.runtime.prefix_cache import PrefixCache, _prefix_key
+from repro.serving import (
+    PrefixRouter,
+    Request,
+    ServingConfig,
+    admission_policies,
+    as_admission_policy,
+)
+
+
+# ----------------------------------------------------------- registries
+def test_policy_registries():
+    assert admission_policies() == ["fifo", "priority"]
+    assert eviction_policies() == ["fifo", "pressure", "lru"]
+    # the facade exposes the same queries as with traversal policies
+    assert api.admission_policies() == admission_policies()
+    assert api.eviction_policies() == eviction_policies()
+    with pytest.raises(ValueError, match="unknown admission"):
+        as_admission_policy("nope")
+    with pytest.raises(ValueError, match="unknown eviction"):
+        as_eviction_policy("nope")
+    # stateful policies: every resolution is a fresh instance
+    assert as_admission_policy("fifo") is not as_admission_policy("fifo")
+    assert as_eviction_policy("lru") is not as_eviction_policy("lru")
+
+
+# ------------------------------------------------------------ admission
+def _reqs(*prios):
+    return [Request(prompt=[i], priority=p) for i, p in enumerate(prios)]
+
+
+def test_fifo_admission_order_and_requeue():
+    pol = as_admission_policy("fifo")
+    q = pol.new_queue()
+    a, b, c = _reqs(0, 0, 0)
+    for r in (a, b, c):
+        pol.push(q, r)
+    assert pol.pop(q) is a
+    pol.requeue(q, a)           # pressure bounce goes back to the front
+    assert pol.pop(q) is a
+    assert pol.drain(q) == [b, c] and len(q) == 0
+
+
+def test_priority_admission_order():
+    pol = as_admission_policy("priority")
+    q = pol.new_queue()
+    low1, high, low2, mid = _reqs(0, 5, 0, 2)
+    for r in (low1, high, low2, mid):
+        pol.push(q, r)
+    assert pol.pop(q) is high
+    assert pol.pop(q) is mid
+    # equal priorities keep arrival order
+    assert pol.pop(q) is low1
+    assert pol.pop(q) is low2
+    # a requeued request beats same-priority arrivals
+    pol.push(q, low1)
+    pol.requeue(q, low2)
+    assert pol.pop(q) is low2
+    assert pol.drain(q) == [low1]
+    assert pol.pop(q) is None
+
+
+# ------------------------------------------------------------- eviction
+def _cache(eviction, page_size=4, num_pages=32):
+    smr = api.scheme("IBR", retire_scan_freq=4, epoch_freq=4)
+    pool = BlockPool(smr, num_pages)
+    return PrefixCache(smr, pool, page_size, max_entries=1024,
+                       eviction=eviction), pool
+
+
+def _insert_prompt(cache, pool, prompt):
+    pages = [pool.alloc(0) for _ in range(len(prompt) // cache.page_size)]
+    cache.insert(prompt, pages)
+    for pg in pages:
+        pool.release(pg)
+    return pages
+
+
+def test_fifo_eviction_order_and_quota():
+    cache, pool = _cache("fifo")
+    p1 = list(range(10, 14))
+    p2 = list(range(20, 24))
+    _insert_prompt(cache, pool, p1)
+    _insert_prompt(cache, pool, p2)
+    assert cache.eviction.pressure_quota(cache, pool) == 4  # the old magic 4
+    assert cache.evict_oldest(1) == 1
+    # oldest-inserted entry (p1) is gone, p2 still hits
+    assert cache.lookup(p1) == ([], 0)
+    pages, n = cache.lookup(p2)
+    assert n == 4
+    for pg in pages:
+        pool.unpin(pg)
+
+
+def test_pressure_eviction_quota_scales():
+    cache, pool = _cache("pressure", num_pages=64)
+    for base in range(0, 48, 4):
+        _insert_prompt(cache, pool, list(range(base * 10, base * 10 + 4)))
+    entries = cache.n_entries.load()
+    assert entries >= 12
+    assert cache.eviction.pressure_quota(cache, pool) == max(4, entries // 8)
+    freed = cache.pressure_evict()
+    assert freed == max(4, entries // 8)
+
+
+def test_lru_eviction_evicts_least_recently_used():
+    cache, pool = _cache("lru")
+    p1 = list(range(10, 14))
+    p2 = list(range(20, 24))
+    p3 = list(range(30, 34))
+    for p in (p1, p2, p3):
+        _insert_prompt(cache, pool, p)
+    # touch p1 (a hit refreshes its stamp) → p2 becomes the LRU victim
+    pages, n = cache.lookup(p1)
+    assert n == 4
+    for pg in pages:
+        pool.unpin(pg)
+    assert cache.evict_oldest(1) == 1
+    assert cache.lookup(p2) == ([], 0), "LRU evicted the wrong entry"
+    for p in (p1, p3):
+        pages, n = cache.lookup(p)
+        assert n == 4, "recently-used entry was evicted"
+        for pg in pages:
+            pool.unpin(pg)
+    # direct evict keeps the index consistent (forget path)
+    key = _prefix_key(p1)
+    assert cache.evict(key)
+    assert cache.lookup(p1) == ([], 0)
+
+
+def test_cache_clear_drains_all_entries_and_pins():
+    for eviction in ("fifo", "lru"):
+        cache, pool = _cache(eviction)
+        for base in (10, 20, 30):
+            _insert_prompt(cache, pool, list(range(base, base + 8)))
+        assert cache.n_entries.load() == 6   # two page-runs per prompt
+        assert cache.clear() == 6
+        assert cache.n_entries.load() == 0
+        cache.smr.flush()
+        assert pool.stats()["free"] == 32, (eviction, pool.stats())
+
+
+# ------------------------------------------------------------ NMTree min
+def test_nm_tree_min_key():
+    tree = NMTree(api.scheme("IBR"))
+    assert tree.min_key() is None
+    for k in (17, 3, 99, 41):
+        tree.insert(k)
+    assert tree.min_key() == 3
+    tree.delete(3)
+    assert tree.min_key() == 17
+    for k in (17, 41, 99):
+        tree.delete(k)
+    assert tree.min_key() is None
+
+
+# ------------------------------------------------------------ block pool
+def test_block_pool_reserve_unreserve():
+    smr = api.scheme("IBR")
+    pool = BlockPool(smr, 8)
+    assert pool.reserve(0) == 0
+    stats = pool.stats()
+    assert stats["free"] == 7 and stats["reserved"] == 1
+    with pytest.raises(ValueError, match="not free"):
+        pool.reserve(0)
+    # a reserved id is never handed out by alloc
+    pages = [pool.alloc(0) for _ in range(7)]
+    assert all(pg.page_id != 0 for pg in pages)
+    for pg in pages:
+        pool.release(pg)
+    pool.unreserve(0)
+    smr.flush()
+    assert pool.stats()["free"] == 8
+
+
+# ---------------------------------------------------------------- config
+def test_serving_config_validation():
+    with pytest.raises(ValueError, match="never reclaims"):
+        ServingConfig(smr="NR")
+    with pytest.raises(ValueError, match="num_shards"):
+        ServingConfig(num_shards=0)
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        ServingConfig(max_seq_len=60, page_size=8)
+    with pytest.raises(ValueError, match="unknown admission"):
+        ServingConfig(admission="lifo")
+    with pytest.raises(ValueError, match="unknown eviction"):
+        ServingConfig(eviction="mru")
+    with pytest.raises(ValueError, match="unknown prefix_traversal"):
+        ServingConfig(prefix_traversal="zigzag")
+    with pytest.raises(ValueError, match="shard_smr"):
+        ServingConfig(shard_smr="global")
+    cfg = ServingConfig(num_shards=2).replace(eviction="lru")
+    assert cfg.eviction == "lru" and cfg.num_shards == 2
+    assert cfg.max_pages == cfg.max_seq_len // cfg.page_size
+
+
+# ---------------------------------------------------------------- router
+def test_prefix_router_placement():
+    router = PrefixRouter(num_shards=4, page_size=8)
+    shared = list(range(100, 108))
+    # same first page → same shard, whatever follows
+    shards = {router.shard_of(shared + tail)
+              for tail in ([], [1], [2, 3], list(range(30)))}
+    assert len(shards) == 1
+    # and the router actually spreads distinct prefixes
+    spread = {router.shard_of([seed] * 8) for seed in range(1, 64)}
+    assert len(spread) == 4
+    assert PrefixRouter(1, 8).shard_of(shared) == 0
