@@ -76,6 +76,36 @@ def bench_serving(quick=True):
                    f"tok_s={res.tok_per_s:.1f};hits={res.prefix_hits};"
                    f"unreclaimed={st['pool_awaiting_reclaim']:.0f}")
 
+    # chunked-prefill mixed workload: long prompts interleaved through
+    # short shared-prefix decoders (core.workload long_prompts= mode), the
+    # traffic shape the scheduler rewrite exists for.  Rows carry TTFT and
+    # p99 inter-token latency; the chunked row vs the oneshot baseline is
+    # the "admission never stalls the decode batch" acceptance signal — a
+    # long prompt's prefill is sliced into page-aligned chunks, so p99 ITL
+    # stays near one chunk's work instead of one prompt's.
+    mixed_reqs = 16 if quick else 48
+    for sched in ("chunked", "oneshot"):
+        session = serving.serve(
+            model, params,
+            serving.ServingConfig(smr="IBR", num_pages=256, page_size=8,
+                                  max_batch=8, max_seq_len=256,
+                                  scheduler=sched,
+                                  prefill_chunk_tokens=32))
+        _warmup(session)
+        res = run_serving_workload(session, n_requests=mixed_reqs,
+                                   clients=4, shared_prefix_len=16,
+                                   tail_len=4, distinct_prefixes=2,
+                                   max_new_tokens=16, seed=0,
+                                   long_prompts=3, long_prompt_len=192)
+        session.close()
+        yield (f"serving/mixed-{sched},"
+               f"{res.duration_s / max(res.tokens, 1) * 1e6:.1f},"
+               f"tok_s={res.tok_per_s:.1f};"
+               f"ttft_avg_ms={res.ttft_avg_s * 1e3:.1f};"
+               f"ttft_p99_ms={res.ttft_p99_s * 1e3:.1f};"
+               f"itl_avg_ms={res.itl_avg_s * 1e3:.1f};"
+               f"itl_p99_ms={res.itl_p99_s * 1e3:.1f}")
+
     # sharded smoke: the SAME mix against 1 vs 2 shards (IBR, the serving
     # default), full queueing pressure.  Prefixes are router-probed so each
     # shard owns the same number of them — the smoke measures the ENGINE's

@@ -123,12 +123,20 @@ def demo_serving_surface():
     from repro import serving
     # registry-resolved policy names, validated at config construction
     print("   admission:", api.admission_policies(),
-          " eviction:", api.eviction_policies())
+          " eviction:", api.eviction_policies(),
+          " scheduler:", api.scheduler_policies())
     cfg = serving.ServingConfig(smr="IBR", num_shards=2, eviction="lru",
-                                admission="priority")
+                                admission="priority",
+                                prefill_chunk_tokens=32)
     print("   config:", cfg.summary())
     try:
         serving.ServingConfig(smr="NR")
+    except ValueError as e:
+        print("   rejected:", str(e)[:60], "...")
+    try:
+        # chunk boundaries must stay page-aligned (prefix-cache reuse)
+        serving.ServingConfig(prefill_chunk_tokens=12, page_size=8,
+                              max_seq_len=256)
     except ValueError as e:
         print("   rejected:", str(e)[:60], "...")
     # shared page-aligned prefixes land on the same shard's cache

@@ -34,6 +34,16 @@ def main():
                     choices=api.admission_policies())
     ap.add_argument("--eviction", default="fifo",
                     choices=api.eviction_policies())
+    ap.add_argument("--scheduler", default="chunked",
+                    choices=api.scheduler_policies(),
+                    help="chunked-prefill fairness: 'chunked' bounds how "
+                         "long one prompt's ingestion can stall in-flight "
+                         "decoders; 'oneshot' is the stall-prone baseline")
+    ap.add_argument("--chunk-tokens", type=int, default=16,
+                    help="per-step prefill token budget (page multiple)")
+    ap.add_argument("--long-prompts", type=int, default=2,
+                    help="long prompts mixed into the request stream (the "
+                         "TTFT/ITL interference workload; 0 disables)")
     ap.add_argument("--prefix-traversal", default=None,
                     choices=api.traversal_policies(),
                     help="prefix-cache bucket traversal policy (default: "
@@ -51,22 +61,28 @@ def main():
 
     config = serving.ServingConfig(
         smr=args.smr, num_shards=args.shards, shard_smr=args.shard_smr,
-        num_pages=128, page_size=8, max_batch=4, max_seq_len=64,
+        num_pages=128, page_size=8, max_batch=4, max_seq_len=256,
         admission=args.admission, eviction=args.eviction,
+        scheduler=args.scheduler,
+        prefill_chunk_tokens=args.chunk_tokens,
         prefix_traversal=args.prefix_traversal)
     with serving.serve(model, params, config) as session:
         res = run_serving_workload(
             session, n_requests=args.requests, clients=args.clients,
             shared_prefix_len=16, tail_len=4,
             distinct_prefixes=max(2, args.shards),
-            max_new_tokens=args.max_new, wait_each=True)
+            max_new_tokens=args.max_new, wait_each=True,
+            long_prompts=args.long_prompts, long_prompt_len=192)
         stats = session.stats()
 
     print(f"scheme={args.smr} shards={args.shards} "
           f"admission={args.admission} eviction={args.eviction} "
+          f"scheduler={args.scheduler}/{args.chunk_tokens}tok "
           f"requests={res.requests} generated={res.tokens} tokens "
           f"in {res.duration_s:.2f}s ({res.tok_per_s:.1f} tok/s, "
-          f"prefix hits={res.prefix_hits})")
+          f"prefix hits={res.prefix_hits}, "
+          f"ttft_p99={res.ttft_p99_s * 1e3:.1f}ms, "
+          f"itl_p99={res.itl_p99_s * 1e3:.1f}ms)")
     print("totals:", stats["totals"])
     for shard in stats["shards"]:
         pc = shard["prefix_cache"]

@@ -82,6 +82,7 @@ __all__ = [
     "traversal_policies",
     "admission_policies",
     "eviction_policies",
+    "scheduler_policies",
     "scheme_info",
     "structure_info",
     "check",
@@ -103,6 +104,12 @@ def admission_policies():
 def eviction_policies():
     """Prefix-cache eviction-policy names (registry query)."""
     from ..runtime.eviction import eviction_policies as _q
+    return _q()
+
+
+def scheduler_policies():
+    """Chunked-prefill scheduler-policy names (registry query)."""
+    from ..serving.policies import scheduler_policies as _q
     return _q()
 
 

@@ -12,6 +12,7 @@ Workloads match the paper: ``50r-50w`` (50% read, 25% ins, 25% del),
 
 from __future__ import annotations
 
+import math
 import random
 import threading
 import time
@@ -187,9 +188,21 @@ CSV_HEADER = ("structure,scheme,threads,key_range,workload,total_ops,"
 
 
 # --------------------------------------------------------------- serving
+def _pctl(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted list (0 if empty):
+    index ceil(q*N)-1, so q=0.99 over 100 samples is the 99th value, not
+    the maximum."""
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1,
+            max(0, math.ceil(q * len(sorted_vals)) - 1))
+    return sorted_vals[i]
+
+
 @dataclass
 class ServingWorkloadResult:
-    """One serving-session drive: throughput + the session's stats snapshot."""
+    """One serving-session drive: throughput, tail latency (TTFT /
+    inter-token), and the session's stats snapshot."""
 
     requests: int
     tokens: int
@@ -197,11 +210,21 @@ class ServingWorkloadResult:
     tok_per_s: float
     prefix_hits: int
     incomplete: int                     # handles not done at the deadline
+    # latency surface (seconds; 0.0 when the session's handles don't carry
+    # the Request timestamp fields — duck-typed sessions)
+    ttft_avg_s: float = 0.0             # submit → first token, mean
+    ttft_p99_s: float = 0.0
+    itl_avg_s: float = 0.0              # between consecutive tokens, mean
+    itl_p99_s: float = 0.0              # the chunked-prefill headline: one
+    #                                     admitted long prompt must not push
+    #                                     this past ~one chunk's work
     session_stats: Dict = field(default_factory=dict)
 
     def row(self) -> str:
         return (f"requests={self.requests},tokens={self.tokens},"
-                f"tok_s={self.tok_per_s:.1f},hits={self.prefix_hits}")
+                f"tok_s={self.tok_per_s:.1f},hits={self.prefix_hits},"
+                f"ttft_p99_ms={self.ttft_p99_s * 1e3:.1f},"
+                f"itl_p99_ms={self.itl_p99_s * 1e3:.1f}")
 
 
 def run_serving_workload(
@@ -216,6 +239,8 @@ def run_serving_workload(
     timeout_s: float = 300.0,
     wait_each: bool = False,
     prompts: Optional[List[List[int]]] = None,
+    long_prompts: int = 0,
+    long_prompt_len: int = 0,
 ) -> ServingWorkloadResult:
     """Drive a serving session with concurrent client threads — the serving
     analogue of :func:`run_workload` (one shared request-mix loop instead of
@@ -234,6 +259,13 @@ def run_serving_workload(
     throughput-scaling configuration).  ``prompts=`` overrides the
     generated mix entirely (e.g. router-balanced prompts for the sharded
     smoke).
+
+    ``long_prompts``/``long_prompt_len`` turn the mix into the
+    chunked-prefill interference workload: that many random
+    ``long_prompt_len``-token prompts are interleaved through the short
+    shared-prefix requests, so their prefill lands while other sequences
+    decode — the configuration whose TTFT and p99 inter-token latency
+    :mod:`benchmarks.bench_serving` reports.
     """
     rng = random.Random(seed)
     if prompts is None:
@@ -242,10 +274,18 @@ def run_serving_workload(
         prompts = [prefixes[i % len(prefixes)] +
                    [rng.randrange(1, 200) for _ in range(tail_len)]
                    for i in range(n_requests)]
+        if long_prompts and long_prompt_len:
+            stride = max(1, len(prompts) // (long_prompts + 1))
+            for j in range(long_prompts):
+                prompts.insert(
+                    min(len(prompts), (j + 1) * stride + j),
+                    [rng.randrange(1, 200) for _ in range(long_prompt_len)])
+            n_requests = len(prompts)
     else:
         n_requests = len(prompts)
 
     handles: List = []
+    errors: List[BaseException] = []
     hlock = threading.Lock()
     ready = threading.Barrier(clients + 1)
 
@@ -253,15 +293,20 @@ def run_serving_workload(
         mine = prompts[cid::clients]
         ready.wait()
         local = []
-        for prompt in mine:
-            h = session.submit(prompt, max_new_tokens=max_new_tokens)
-            local.append(h)
-            if wait_each:
+        try:
+            for prompt in mine:
+                h = session.submit(prompt, max_new_tokens=max_new_tokens)
+                local.append(h)
+                if wait_each:
+                    h.done.wait(timeout=timeout_s)
+        except BaseException as e:       # surfaced after join — a silently
+            with hlock:                  # dead client would otherwise just
+                errors.append(e)         # shrink the reported request count
+        finally:
+            with hlock:
+                handles.extend(local)
+            for h in local:
                 h.done.wait(timeout=timeout_s)
-        with hlock:
-            handles.extend(local)
-        for h in local:
-            h.done.wait(timeout=timeout_s)
 
     ts = [threading.Thread(target=client, args=(i,), daemon=True)
           for i in range(clients)]
@@ -272,6 +317,8 @@ def run_serving_workload(
     for t in ts:
         t.join(timeout=timeout_s)
     elapsed = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
 
     tokens = sum(len(h.out_tokens) for h in handles)
     incomplete = sum(0 if h.done.is_set() else 1 for h in handles)
@@ -279,6 +326,11 @@ def run_serving_workload(
     hits = stats.get("totals", {}).get("prefix_hits",
                                        stats.get("prefix_cache",
                                                  {}).get("hits", 0))
+    # latency aggregation off the handles' Request timestamps (duck-typed:
+    # a session whose handles don't expose ttft()/itl() reports zeros)
+    ttfts = sorted(t for t in (h.ttft() for h in handles
+                               if hasattr(h, "ttft")) if t is not None)
+    itls = sorted(d for h in handles if hasattr(h, "itl") for d in h.itl())
     return ServingWorkloadResult(
         requests=len(handles),
         tokens=tokens,
@@ -286,5 +338,9 @@ def run_serving_workload(
         tok_per_s=tokens / elapsed if elapsed > 0 else 0.0,
         prefix_hits=int(hits),
         incomplete=incomplete,
+        ttft_avg_s=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+        ttft_p99_s=_pctl(ttfts, 0.99),
+        itl_avg_s=sum(itls) / len(itls) if itls else 0.0,
+        itl_p99_s=_pctl(itls, 0.99),
         session_stats=stats,
     )

@@ -53,13 +53,25 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
-                    backend: Optional[str] = None):
+                    occupancy=None, backend: Optional[str] = None):
+    """``occupancy`` (B,) bool marks real batch rows; ``False`` rows are
+    padding — their output is exactly zero and independent of whatever their
+    block-table entries point at (the serving engine pads its decode batch
+    with masked rows instead of a reserved scratch page)."""
     kind, interpret = _resolve(backend)
     if kind == "pallas":
+        if occupancy is not None:
+            # the Pallas kernel has no occupancy input: keep its softmax
+            # finite (ctx >= 1) and zero the padded rows on the way out
+            context_lens = jnp.where(occupancy, context_lens, 1)
+            out = _paged_pallas(q, k_pages, v_pages, block_tables,
+                                context_lens, interpret=interpret)
+            return jnp.where(occupancy[:, None, None], out,
+                             jnp.zeros((), out.dtype))
         return _paged_pallas(q, k_pages, v_pages, block_tables, context_lens,
                              interpret=interpret)
     return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
-                                   context_lens)
+                                   context_lens, occupancy=occupancy)
 
 
 def ssd(x, dt, a, b, c, *, chunk=128, d_skip=None,

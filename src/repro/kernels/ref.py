@@ -33,13 +33,16 @@ def flash_attention_ref(q, k, v, causal: bool = True, softmax_scale=None):
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens,
-                        softmax_scale=None):
+                        softmax_scale=None, occupancy=None):
     """Decode attention over a paged KV pool.
 
     q:            (B, H, D)           — one query token per sequence
     k/v_pages:    (P, page_size, Hkv, D) — the global page pool
     block_tables: (B, pages_per_seq) int32 — page ids per sequence
     context_lens: (B,) int32          — valid token count per sequence
+    occupancy:    (B,) bool, optional — False rows are batch padding: their
+                  output is exactly zero and nothing they gather (whatever
+                  their block-table entries alias) can reach it
     """
     b, h, d = q.shape
     npages, page_size, hkv, _ = k_pages.shape
@@ -56,8 +59,14 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens,
     qf = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
     s = jnp.einsum("bkgd,bskd->bkgs", qf, k_seq)
     mask = jnp.arange(max_len)[None, :] < context_lens[:, None]
+    if occupancy is not None:
+        mask = mask & occupancy[:, None]
     s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
+    if occupancy is not None:
+        # an all-masked row softmaxes to NaN; the where() pins it to exactly
+        # zero probability so padded rows contribute a zero output
+        p = jnp.where(occupancy[:, None, None, None], p, 0.0)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_seq)
     return out.reshape(b, h, d).astype(q.dtype)
 

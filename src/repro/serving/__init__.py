@@ -12,7 +12,9 @@ from .policies import (
     admission_policies,
     as_admission_policy,
     as_eviction_policy,
+    as_scheduler_policy,
     eviction_policies,
+    scheduler_policies,
 )
 from .session import (
     PrefixRouter,
@@ -33,6 +35,8 @@ __all__ = [
     "PagedServingEngine",
     "admission_policies",
     "eviction_policies",
+    "scheduler_policies",
     "as_admission_policy",
     "as_eviction_policy",
+    "as_scheduler_policy",
 ]

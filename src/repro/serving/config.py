@@ -50,13 +50,25 @@ class ServingConfig:
     # -- policies ----------------------------------------------------------
     admission: str = "fifo"             # "fifo" | "priority"
     eviction: str = "fifo"              # "fifo" | "pressure" | "lru"
+    scheduler: str = "chunked"          # "chunked" | "oneshot" | "roundrobin"
+
+    # -- chunked prefill ---------------------------------------------------
+    # per-step prefill token budget: each engine step advances at most this
+    # many prompt tokens before the batched decode runs, so admitting a long
+    # prompt delays in-flight decoders by one chunk, never one prompt.  Must
+    # be a positive page multiple — chunk boundaries stay page-aligned so
+    # resumed prefills line up with prefix-cache page runs (DESIGN.md §12).
+    prefill_chunk_tokens: int = 64
 
     # -- loop pacing -------------------------------------------------------
     poll_s: float = 0.005               # engine-thread idle sleep
     janitor_interval_s: float = 0.02    # session janitor sweep period
 
     def __post_init__(self):
-        from .policies import admission_policies  # late: avoids a cycle
+        from .policies import (  # late: avoids a cycle
+            admission_policies,
+            scheduler_policies,
+        )
         from ..runtime.eviction import eviction_policies
 
         # raises ValueError on an unknown scheme name
@@ -71,11 +83,17 @@ class ServingConfig:
             raise ValueError(f"num_shards must be >= 1, got "
                              f"{self.num_shards}")
         if self.page_size < 1 or self.num_pages < 2:
-            raise ValueError("need page_size >= 1 and num_pages >= 2 "
-                             "(page 0 is reserved scratch)")
+            raise ValueError("need page_size >= 1 and num_pages >= 2")
         if self.max_seq_len % self.page_size:
             raise ValueError(f"max_seq_len ({self.max_seq_len}) must be a "
                              f"multiple of page_size ({self.page_size})")
+        if self.prefill_chunk_tokens < self.page_size or \
+                self.prefill_chunk_tokens % self.page_size:
+            raise ValueError(
+                f"prefill_chunk_tokens ({self.prefill_chunk_tokens}) must "
+                f"be a positive multiple of page_size ({self.page_size}): "
+                f"chunk boundaries must stay page-aligned so resumed "
+                f"prefills line up with prefix-cache page runs")
         if self.prefix_traversal is not None and \
                 self.prefix_traversal not in api.traversal_policies():
             raise ValueError(
@@ -87,6 +105,9 @@ class ServingConfig:
         if self.eviction not in eviction_policies():
             raise ValueError(f"unknown eviction policy {self.eviction!r}; "
                              f"choose from {eviction_policies()}")
+        if self.scheduler not in scheduler_policies():
+            raise ValueError(f"unknown scheduler policy {self.scheduler!r};"
+                             f" choose from {scheduler_policies()}")
 
     # ---------------------------------------------------------------- utils
     @property
@@ -116,5 +137,7 @@ class ServingConfig:
             "max_seq_len": self.max_seq_len,
             "admission": self.admission,
             "eviction": self.eviction,
+            "scheduler": self.scheduler,
+            "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "prefix_traversal": self.prefix_traversal,
         }

@@ -1,11 +1,21 @@
-"""Shard engine — continuous batching over one SMR-managed pool.
+"""Shard engine — continuous batching with chunked prefill over one
+SMR-managed pool.
+
+The paper bounds the blast radius of one stalled participant (a stalled
+thread pins O(1) unreclaimed nodes); the step loop applies the same rule to
+prompt ingestion.  Admission only *reserves* pages and enqueues the sequence
+in a ``prefilling`` state; each ``step()`` spends at most
+``ServingConfig.prefill_chunk_tokens`` advancing prefill chunks (divided by
+the named scheduler policy) and then runs the batched decode for every
+in-flight sequence — so admitting a 4k-token prompt delays active decoders
+by one chunk of work, never one prompt (DESIGN.md §12).
 
 Thread roles (this is where the paper's concurrency actually happens):
   * client threads: ``submit()`` does the *optimistic prefix-cache lookup*
     (SCOT Harris-list traversal) and pins any hit pages;
   * the shard's engine thread: admission (via the named admission policy),
-    paged prefill, batched paged decode (kernels/ops.paged_attention), page
-    alloc/release;
+    chunked paged prefill (via the named scheduler policy), batched paged
+    decode (kernels/ops.paged_attention), page alloc/release;
   * the session janitor thread: evicts prefix entries under pool pressure
     (retiring entry nodes and unpinning pages through the SMR scheme).
 
@@ -49,7 +59,7 @@ from ..models.transformer import _qkv
 from ..runtime.block_pool import BlockPool, PageNode
 from ..runtime.prefix_cache import PrefixCache
 from .config import ServingConfig
-from .policies import as_admission_policy
+from .policies import as_admission_policy, as_scheduler_policy
 
 
 @dataclass
@@ -61,8 +71,14 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     done: threading.Event = field(default_factory=threading.Event)
     cancelled: threading.Event = field(default_factory=threading.Event)
-    # "waiting" → "active" → "done" | "cancelled" | "failed" (engine-owned)
+    # "waiting" → "prefilling" → "active" → "done" | "cancelled" | "failed"
+    # (engine-owned; "prefilling" = pages reserved, prompt chunks still
+    # being ingested under the step budget)
     status: str = "waiting"
+    # latency surface: submit() stamp + one perf_counter per emitted token,
+    # so TTFT and inter-token latencies are measurable without polling
+    t_submit: float = 0.0
+    out_times: List[float] = field(default_factory=list)
     # set on every generated token and on completion (stream wakeups)
     _progress: threading.Event = field(default_factory=threading.Event)
     # filled at submit time (client thread): prefix-cache hit
@@ -78,14 +94,15 @@ class _Seq:
         self.owned_from = owned_from    # pages[owned_from:] are owned
         self.tokens = list(req.prompt)
         self.new_tokens = 0
+        # chunked-prefill cursor: prompt tokens whose K/V already sit in
+        # pages (starts at the page-aligned prefix-cache hit; the scheduler
+        # advances it one page-aligned chunk at a time until it reaches
+        # len(prompt) and the first token is emitted)
+        self.filled = req._hit_tokens
         # block-table row is fixed for the sequence's lifetime (pages are
         # allocated up front at admission) — precomputed once, reused every
         # decode step instead of re-walking the page list
         self.page_row = page_row
-
-
-# id of the scratch page padded/dummy batch rows write to
-_SCRATCH_PAGE = 0
 
 
 class _ShardEngine:
@@ -107,9 +124,6 @@ class _ShardEngine:
         # SMR domain: per-shard fresh instance unless the session shares one
         self.smr = smr if smr is not None else config.build_scheme()
         self.pool = BlockPool(self.smr, config.num_pages)
-        # page 0 is reserved scratch through the pool's public API — it
-        # never becomes a PageNode and never enters retire/reclaim
-        self._scratch_id: Optional[int] = self.pool.reserve(_SCRATCH_PAGE)
         self.prefix_cache = PrefixCache(
             self.smr, self.pool, config.page_size,
             max_entries=config.prefix_cache_entries,
@@ -119,6 +133,7 @@ class _ShardEngine:
                        else config.prefix_traversal),
             eviction=config.eviction)
         self.admission = as_admission_policy(config.admission)
+        self.scheduler = as_scheduler_policy(config.scheduler)
         L = cfg.n_layers
         kv = (L, config.num_pages, config.page_size, cfg.n_kv_heads,
               cfg.head_dim)
@@ -126,6 +141,9 @@ class _ShardEngine:
         self.v_pages = jnp.zeros(kv, getattr(jnp, cfg.dtype))
         self._waiting = self.admission.new_queue()
         self._wlock = threading.Lock()
+        # scheduler states: _prefilling (pages reserved, prompt chunks
+        # pending) and _active (decoding); together they share max_batch
+        self._prefilling: List[_Seq] = []
         self._active: List[_Seq] = []
         self._stop = threading.Event()
         self._run_started = threading.Event()
@@ -168,6 +186,9 @@ class _ShardEngine:
             raise RuntimeError("engine is stopped; no new submissions")
 
     def _validate(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError(f"request {req.req_id} has an empty prompt "
+                             f"(need >= 1 token to prefill)")
         total = len(req.prompt) + req.max_new_tokens
         if total > self.config.max_seq_len:
             raise ValueError(
@@ -180,6 +201,7 @@ class _ShardEngine:
         concurrently with the engine and janitor threads."""
         self._check_open()
         self._validate(req)
+        req.t_submit = time.perf_counter()
         pages, n_tok = self.prefix_cache.lookup(req.prompt)
         self._attach_hit(req, pages, n_tok)
         with self._wlock:
@@ -210,6 +232,9 @@ class _ShardEngine:
         self._check_open()
         for req in reqs:
             self._validate(req)
+        now = time.perf_counter()
+        for req in reqs:
+            req.t_submit = now
         hits = self.prefix_cache.lookup_many([r.prompt for r in reqs])
         for req, (pages, n_tok) in zip(reqs, hits):
             self._attach_hit(req, pages, n_tok)
@@ -232,55 +257,86 @@ class _ShardEngine:
                                       self.params["blocks"])
 
     def _paged_prefill(self, params, k_pages, v_pages, tokens, page_ids,
-                       start):
-        """Run the prompt suffix [start:] through the model, writing K/V
-        into the owned pages; returns last-token logits and updated pages.
+                       start, n_valid):
+        """Ingest ONE fixed-size prefill chunk into the owned pages.
 
-        tokens: (1, S) the FULL prompt; page_ids: (max_pages,) block run;
-        start: scalar — number of cached tokens (page-aligned)."""
+        tokens: (1, C) — prompt[start : start+n_valid] zero-padded to the
+        configured chunk size C (a FIXED shape: one jit compile per engine,
+        however long prompts get — variable-shape prefill recompiled per
+        length, and those compiles landed inside the step loop where every
+        decoder paid for them); page_ids: (max_pages,) block run; start:
+        scalar — tokens already in pages (page-aligned: a prefix-cache hit
+        or the previous chunk's boundary); n_valid: scalar ≤ C.
+
+        Only the chunk's C positions run through the model; attention reads
+        the earlier prefix K/V back from the PAGES (exactly like the decode
+        step, so chunk N resumes bit-identically from chunk N-1's boundary
+        whether that boundary came from a cache hit or an earlier chunk).
+        Padded lanes scatter out of bounds (dropped) and are causally
+        invisible.  Returns the greedy next token after position
+        start+n_valid-1 — meaningful only on the final chunk."""
         cfg = self.cfg
-        x = jnp.take(params["embed"], tokens, axis=0)   # (1, S, D)
-        s = tokens.shape[1]
-        positions = jnp.arange(s)[None, :]
-        angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        c = tokens.shape[1]
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        n_heads = cfg.n_heads
+        g = n_heads // hkv
+        s_max = self.max_pages * self.page_size
+        scale = 1.0 / (dh ** 0.5)
+        x = jnp.take(params["embed"], tokens, axis=0)   # (1, C, D)
+        abs_pos = start + jnp.arange(c)                  # (C,)
+        angles = rope_angles(abs_pos[None, :], cfg.head_dim, cfg.rope_theta)
+        valid = jnp.arange(c) < n_valid
+        page_of = page_ids[abs_pos // self.page_size]
+        slot_of = abs_pos % self.page_size
+        # padded lanes point out of bounds and are DROPPED — nothing
+        # rewrites a cached (possibly shared) page, no scratch page needed
+        upd_page = jnp.where(valid, page_of, k_pages.shape[1])
+        # keys visible to chunk query q: every position ≤ its absolute
+        # position (the cached/earlier-chunk prefix + the chunk's own
+        # causal triangle); pages past the prompt are never unmasked
+        kmask = jnp.arange(s_max)[None, :] <= abs_pos[:, None]   # (C, S)
         for i in range(cfg.n_layers):
             p = self._layer_params(i)
             h = rms_norm(x, p["ln1"])
             q, k, v = _qkv(p["attn"], cfg, h)
             q = apply_rope(q, angles)
             k = apply_rope(k, angles)
-            # causal self-attention over the full prompt (recompute over
-            # cached region too — simple and correct; the cached K/V are
-            # identical by construction)
-            out = ops.flash_attention(q, k, v, causal=True, backend="xla")
-            x = x + out.reshape(1, s, -1) @ p["attn"]["wo"]
+            k_pages = k_pages.at[i, upd_page, slot_of].set(
+                k[0].astype(k_pages.dtype), mode="drop")
+            v_pages = v_pages.at[i, upd_page, slot_of].set(
+                v[0].astype(v_pages.dtype), mode="drop")
+            # gather the sequence's whole block run (fixed S_max width) and
+            # attend the C chunk queries against it — per-chunk attention
+            # cost is C × S_max, not (start+C)², and the shape never varies
+            k_seq = k_pages[i, page_ids].reshape(s_max, hkv, dh)
+            v_seq = v_pages[i, page_ids].reshape(s_max, hkv, dh)
+            qf = q[0].reshape(c, hkv, g, dh).astype(jnp.float32) * scale
+            sc = jnp.einsum("qkgd,skd->kgqs", qf,
+                            k_seq.astype(jnp.float32))
+            sc = jnp.where(kmask[None, None], sc, -jnp.inf)
+            pr = jax.nn.softmax(sc, axis=-1)
+            out = jnp.einsum("kgqs,skd->qkgd", pr,
+                             v_seq.astype(jnp.float32)).astype(x.dtype)
+            x = x + out.reshape(1, c, -1) @ p["attn"]["wo"]
             h = rms_norm(x, p["ln2"])
             ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
             x = x + ff @ p["ffn"]["wo"]
-            # scatter K/V of the uncached suffix into pages
-            slot_pos = jnp.arange(s)
-            page_of = page_ids[slot_pos // self.page_size]
-            slot_of = slot_pos % self.page_size
-            write = slot_pos >= start
-            safe_page = jnp.where(write, page_of, 0)
-            kw = jnp.where(write[:, None, None], k[0], k_pages[i, safe_page, slot_of])
-            vw = jnp.where(write[:, None, None], v[0], v_pages[i, safe_page, slot_of])
-            k_pages = k_pages.at[i, safe_page, slot_of].set(
-                kw.astype(k_pages.dtype))
-            v_pages = v_pages.at[i, safe_page, slot_of].set(
-                vw.astype(v_pages.dtype))
         x = rms_norm(x, params["final_norm"])
-        logits = x[:, -1] @ params["lm_head"]
+        logits = x[0, n_valid - 1] @ params["lm_head"]
         # greedy argmax ON DEVICE: the engine only ever consumes the next
         # token id, so ship one int32 to the host instead of a vocab-sized
         # logits row (the host-side np.argmax was a GIL-held cost on every
         # step — it capped multi-shard thread scaling)
-        return jnp.argmax(logits[0]).astype(jnp.int32), k_pages, v_pages
+        return jnp.argmax(logits).astype(jnp.int32), k_pages, v_pages
 
     def _paged_decode_step(self, params, k_pages, v_pages, block_tables,
-                           ctx_lens, tokens):
-        """One token for every active sequence.  ctx_lens INCLUDE the new
-        token; its K/V is written at position ctx_lens-1."""
+                           ctx_lens, tokens, occ):
+        """One token for every occupied batch row.  ctx_lens INCLUDE the new
+        token; its K/V is written at position ctx_lens-1.  ``occ`` (B,) bool
+        marks real sequences: padded rows scatter out of bounds (dropped —
+        they can never write a page, reused or otherwise) and their
+        attention output is masked to zero, so padding needs no reserved
+        scratch page and is inert whatever the pool does with page ids."""
         cfg = self.cfg
         b = tokens.shape[0]
         x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # (B,1,D)
@@ -288,6 +344,8 @@ class _ShardEngine:
         angles = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
         bidx = jnp.arange(b)
         page_idx = block_tables[bidx, (ctx_lens - 1) // self.page_size]
+        # padded rows' writes land out of bounds and are dropped
+        page_idx = jnp.where(occ, page_idx, k_pages.shape[1])
         slot_idx = (ctx_lens - 1) % self.page_size
         for i in range(cfg.n_layers):
             p = self._layer_params(i)
@@ -296,11 +354,12 @@ class _ShardEngine:
             q = apply_rope(q, angles)
             k = apply_rope(k, angles)
             k_pages = k_pages.at[i, page_idx, slot_idx].set(
-                k[:, 0].astype(k_pages.dtype))
+                k[:, 0].astype(k_pages.dtype), mode="drop")
             v_pages = v_pages.at[i, page_idx, slot_idx].set(
-                v[:, 0].astype(v_pages.dtype))
+                v[:, 0].astype(v_pages.dtype), mode="drop")
             out = ops.paged_attention(q[:, 0], k_pages[i], v_pages[i],
-                                      block_tables, ctx_lens, backend="xla")
+                                      block_tables, ctx_lens, occupancy=occ,
+                                      backend="xla")
             x = x + out.reshape(b, 1, -1) @ p["attn"]["wo"]
             h = rms_norm(x, p["ln2"])
             ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
@@ -327,7 +386,11 @@ class _ShardEngine:
         req.done.set()
 
     def _admit(self):
-        while len(self._active) < self.max_batch:
+        """Admission reserves pages and enqueues — it NEVER runs model work,
+        so a 4k-token prompt cannot stall the decode batch here.  The prompt
+        is ingested chunk-by-chunk by :meth:`_step_locked` under the
+        scheduler policy's token budget."""
+        while len(self._active) + len(self._prefilling) < self.max_batch:
             with self._wlock:
                 req = self.admission.pop(self._waiting)
             if req is None:
@@ -361,17 +424,54 @@ class _ShardEngine:
             for j, pg in enumerate(pages):
                 page_ids[j] = pg.page_id
             seq = _Seq(req, pages, owned_from, page_ids)
-            req.status = "active"
-            first_tok, self.k_pages, self.v_pages = self._prefill(
+            req.status = "prefilling"
+            self._prefilling.append(seq)
+
+    def _emit(self, seq: _Seq, tok: int) -> None:
+        """Append one generated token and wake streamers."""
+        seq.tokens.append(tok)
+        seq.req.out_tokens.append(tok)
+        seq.req.out_times.append(time.perf_counter())
+        seq.req._progress.set()
+
+    def _advance_prefill(self, seq: _Seq, grant: int) -> None:
+        """Ingest the next ``grant`` prompt tokens of one prefilling
+        sequence, one fixed-size chunk call at a time (grants larger than
+        the chunk — the ``oneshot`` policy's whole prompts — just loop).
+        The final chunk's logits yield the first generated token (streamed
+        immediately) and move the sequence to decoding."""
+        req = seq.req
+        n_prompt = len(req.prompt)
+        chunk = self.config.prefill_chunk_tokens
+        end = min(seq.filled + grant, n_prompt)
+        tok = None
+        while seq.filled < end:
+            n_valid = min(chunk, end - seq.filled)
+            buf = np.zeros((1, chunk), np.int32)
+            buf[0, :n_valid] = req.prompt[seq.filled:seq.filled + n_valid]
+            tok, self.k_pages, self.v_pages = self._prefill(
                 self.params, self.k_pages, self.v_pages,
-                jnp.asarray([req.prompt], jnp.int32),
-                jnp.asarray(page_ids), jnp.int32(req._hit_tokens))
-            nxt = int(first_tok)
-            seq.tokens.append(nxt)
-            seq.req.out_tokens.append(nxt)
-            seq.req._progress.set()
+                jnp.asarray(buf), jnp.asarray(seq.page_row),
+                jnp.int32(seq.filled), jnp.int32(n_valid))
+            seq.filled += n_valid
+        if seq.filled == n_prompt:
+            # final chunk: its last-position logits ARE the first token
+            self._emit(seq, int(tok))
             seq.new_tokens = 1
-            self._active.append(seq)
+            self._prefilling.remove(seq)
+            if seq.new_tokens >= req.max_new_tokens \
+                    or req.cancelled.is_set():
+                # satisfied (or cancelled) by the first token alone — never
+                # enters the decode batch (a max_new_tokens=1 request used
+                # to overshoot to 2: activation skipped the limit check and
+                # the same step's decode emitted before its own)
+                self._finish(seq, "cancelled" if req.cancelled.is_set()
+                             else "done")
+            else:
+                req.status = "active"
+                self._active.append(seq)
+        # intermediate chunks never sync with the device (tok is dropped
+        # untouched), so chunking adds no host round-trips
 
     def _release_seq(self, seq: _Seq) -> None:
         for pg in seq.pages[seq.owned_from:]:
@@ -402,34 +502,53 @@ class _ShardEngine:
 
     def _step_locked(self) -> bool:
         self._admit()
-        if not self._active:
+        if not self._active and not self._prefilling:
             return False
-        bt = np.full((self.max_batch, self.max_pages), _SCRATCH_PAGE,
-                     np.int32)
-        ctx = np.ones((self.max_batch,), np.int32)  # dummy rows: ctx=1
-        toks = np.zeros((self.max_batch, 1), np.int32)
-        for i, seq in enumerate(self._active):
-            bt[i, :] = seq.page_row
-            ctx[i] = len(seq.tokens)
-            toks[i, 0] = seq.tokens[-1]
-        next_toks, self.k_pages, self.v_pages = self._decode(
-            self.params, self.k_pages, self.v_pages,
-            jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(toks[:, 0]))
-        next_toks = np.asarray(next_toks)
-        done = []
-        for i, seq in enumerate(self._active):
-            nxt = int(next_toks[i])
-            seq.tokens.append(nxt)
-            seq.req.out_tokens.append(nxt)
-            seq.req._progress.set()
-            seq.new_tokens += 1
-            if seq.new_tokens >= seq.req.max_new_tokens \
-                    or seq.req.cancelled.is_set():
-                done.append(seq)
-        for seq in done:
-            self._active.remove(seq)
-            self._finish(seq, "cancelled" if seq.req.cancelled.is_set()
-                         else "done")
+        # drop cancelled prefilling sequences before spending budget on
+        # them — their reserved pages (and hit pins) go straight back
+        for seq in [s for s in self._prefilling
+                    if s.req.cancelled.is_set()]:
+            self._prefilling.remove(seq)
+            self._finish(seq, "cancelled")
+        # prefill phase: at most prefill_chunk_tokens of prompt ingestion,
+        # divided by the scheduler policy — the ITL bound for everyone
+        # already decoding is one chunk, never one prompt
+        if self._prefilling:
+            plan = self.scheduler.plan(
+                list(self._prefilling), self.config.prefill_chunk_tokens,
+                self.page_size)
+            for seq, grant in plan:
+                if grant > 0:
+                    self._advance_prefill(seq, grant)
+        # decode phase: one token for every decoding sequence.  Rows beyond
+        # the active set are padding — masked out of attention and their
+        # K/V writes dropped (no scratch page, no reserved id).
+        if self._active:
+            bt = np.zeros((self.max_batch, self.max_pages), np.int32)
+            ctx = np.ones((self.max_batch,), np.int32)
+            toks = np.zeros((self.max_batch,), np.int32)
+            occ = np.zeros((self.max_batch,), bool)
+            for i, seq in enumerate(self._active):
+                bt[i, :] = seq.page_row
+                ctx[i] = len(seq.tokens)
+                toks[i] = seq.tokens[-1]
+                occ[i] = True
+            next_toks, self.k_pages, self.v_pages = self._decode(
+                self.params, self.k_pages, self.v_pages,
+                jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(toks),
+                jnp.asarray(occ))
+            next_toks = np.asarray(next_toks)
+            done = []
+            for i, seq in enumerate(self._active):
+                self._emit(seq, int(next_toks[i]))
+                seq.new_tokens += 1
+                if seq.new_tokens >= seq.req.max_new_tokens \
+                        or seq.req.cancelled.is_set():
+                    done.append(seq)
+            for seq in done:
+                self._active.remove(seq)
+                self._finish(seq, "cancelled" if seq.req.cancelled.is_set()
+                             else "done")
         self.steps += 1
         return True
 
@@ -455,10 +574,10 @@ class _ShardEngine:
 
     def stop(self, drain: bool = True, timeout: float = 30.0):
         """Stop the engine and (by default) drain it clean: join the engine
-        thread, fail out waiting + active sequences (releasing/unpinning
-        their pages), purge the prefix cache, flush reclamation, and give
-        back the scratch reservation — after which ``pool.stats()`` shows
-        every page back on the free list (zero leaks)."""
+        thread, fail out waiting + prefilling + active sequences
+        (releasing/unpinning their pages), purge the prefix cache, and flush
+        reclamation — after which ``pool.stats()`` shows every page back on
+        the free list (zero leaks)."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout)
@@ -477,14 +596,12 @@ class _ShardEngine:
             for req in leftover:
                 self._fail_out(req, "cancelled" if req.cancelled.is_set()
                                else "failed")
-            for seq in self._active:
+            for seq in self._prefilling + self._active:
                 self._finish(seq, "failed")
+            self._prefilling.clear()
             self._active.clear()
             self.prefix_cache.clear()
             self.smr.flush()
-            if self._scratch_id is not None:
-                self.pool.unreserve(self._scratch_id)
-                self._scratch_id = None
 
     def stats(self):
         return {
@@ -494,6 +611,7 @@ class _ShardEngine:
             "smr": self.smr.stats(),
             "steps": self.steps,
             "active": len(self._active),
+            "prefilling": len(self._prefilling),
             "waiting": self.waiting_count(),
             "completed": self.n_completed,
             "cancelled": self.n_cancelled,

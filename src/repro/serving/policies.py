@@ -1,5 +1,5 @@
-"""Named admission policies for the serving session — plus the eviction
-registry re-exported from :mod:`repro.runtime.eviction`, so
+"""Named admission + scheduler policies for the serving session — plus the
+eviction registry re-exported from :mod:`repro.runtime.eviction`, so
 ``repro.serving.policies`` is the one place serving-policy names resolve
 (mirroring how :mod:`repro.api` resolves traversal-policy names).
 
@@ -11,6 +11,23 @@ under its own lock, so a policy is pure ordering logic.
 * ``priority`` — max-heap on ``Request.priority`` (ties arrival-ordered);
   a pool-pressure ``requeue`` goes back ahead of equal-priority peers, so
   pressure cannot starve a request behind its own cohort.
+
+A scheduler policy divides one engine step's *prefill token budget*
+(``ServingConfig.prefill_chunk_tokens``) among the sequences still in the
+``prefilling`` state.  The batched decode for in-flight sequences runs every
+step regardless — scheduler policies only shape how prompt ingestion is
+chunked, never whether decoders advance (DESIGN.md §12):
+
+* ``chunked`` — head-of-line: the budget goes to the oldest prefilling
+  sequence first; budget left over after a prompt finishes spills to the
+  next, so short prompts behind a long one still start the same step.
+* ``oneshot`` — the pre-chunking behavior: every prefilling prompt is
+  ingested whole in one step (the budget is ignored).  One long prompt
+  stalls every active decoder for its full prefill — kept as the named
+  baseline the interference tests and benches compare against.
+* ``roundrobin`` — the budget is split evenly (page-multiple floor, at
+  least one page each while budget lasts) across all prefilling sequences,
+  trading head-of-line TTFT for equal prompt progress.
 """
 
 from __future__ import annotations
@@ -18,7 +35,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from collections import deque
-from typing import List, Optional, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 from ..runtime.eviction import (  # noqa: F401  (re-exported surface)
     EVICTION_POLICIES,
@@ -37,6 +54,13 @@ __all__ = [
     "ADMISSION_POLICIES",
     "admission_policies",
     "as_admission_policy",
+    "SchedulerPolicy",
+    "ChunkedPrefill",
+    "OneShotPrefill",
+    "RoundRobinPrefill",
+    "SCHEDULER_POLICIES",
+    "scheduler_policies",
+    "as_scheduler_policy",
     # re-exported eviction surface
     "EvictionPolicy",
     "FifoEviction",
@@ -148,3 +172,113 @@ def as_admission_policy(policy: Union[str, AdmissionPolicy, None]
     except KeyError:
         raise ValueError(f"unknown admission policy {policy!r}; choose "
                          f"from {admission_policies()}") from None
+
+
+# --------------------------------------------------------------- scheduler
+class SchedulerPolicy:
+    """Fairness discipline for chunked prefill: divide one step's prefill
+    token budget among the prefilling sequences.
+
+    ``plan`` receives the shard's prefilling sequences in admission order
+    (each exposes ``seq.filled`` — prompt tokens whose K/V already sit in
+    pages — and ``seq.req.prompt``), the step's token budget, and the page
+    size; it returns ``[(seq, grant), ...]`` token grants.  Invariants the
+    engine relies on: a grant that does NOT finish its prompt must be a
+    positive page multiple (``seq.filled`` is page-aligned, so chunk
+    boundaries stay page-aligned — the resume offsets the prefix cache can
+    key on), and grants never exceed ``len(seq.req.prompt) - seq.filled``.
+    Called with the shard's step lock held — no locking of its own."""
+
+    name = "base"
+
+    def plan(self, prefilling: Sequence, budget: int,
+             page_size: int) -> List[Tuple[object, int]]:
+        raise NotImplementedError
+
+
+class ChunkedPrefill(SchedulerPolicy):
+    """Head-of-line chunking: the oldest prefilling sequence gets the
+    budget; whatever its prompt does not consume spills to the next."""
+
+    name = "chunked"
+
+    def plan(self, prefilling, budget, page_size):
+        plan: List[Tuple[object, int]] = []
+        left = budget
+        for seq in prefilling:
+            if left < page_size:
+                break
+            need = len(seq.req.prompt) - seq.filled
+            grant = min(left, need)
+            if grant < need:
+                # mid-prompt boundary: keep it page-aligned (grant == left
+                # here and left >= page_size, so this never zeroes it)
+                grant -= grant % page_size
+            plan.append((seq, grant))
+            left -= grant
+        return plan
+
+
+class OneShotPrefill(SchedulerPolicy):
+    """The pre-chunking baseline: whole prompts, budget ignored.  One long
+    prompt stalls the decode batch for its full prefill — exactly the
+    behavior the interference test shows ``chunked`` eliminates."""
+
+    name = "oneshot"
+
+    def plan(self, prefilling, budget, page_size):
+        return [(seq, len(seq.req.prompt) - seq.filled)
+                for seq in prefilling]
+
+
+class RoundRobinPrefill(SchedulerPolicy):
+    """Equal progress: the budget is split evenly across prefilling
+    sequences (page-multiple floor, at least one page each while the budget
+    lasts)."""
+
+    name = "roundrobin"
+
+    def plan(self, prefilling, budget, page_size):
+        if not prefilling:
+            return []
+        share = budget // len(prefilling)
+        share = max(page_size, share - share % page_size)
+        plan: List[Tuple[object, int]] = []
+        left = budget
+        for seq in prefilling:
+            if left < page_size:
+                break
+            need = len(seq.req.prompt) - seq.filled
+            grant = min(share, left, need)
+            if grant < need:
+                # share and left are both >= page_size here, so the
+                # aligned mid-prompt grant stays positive
+                grant -= grant % page_size
+            plan.append((seq, grant))
+            left -= grant
+        return plan
+
+
+SCHEDULER_POLICIES = {
+    cls.name: cls for cls in (ChunkedPrefill, OneShotPrefill,
+                              RoundRobinPrefill)
+}
+
+
+def scheduler_policies() -> List[str]:
+    return list(SCHEDULER_POLICIES)
+
+
+def as_scheduler_policy(policy: Union[str, SchedulerPolicy, None]
+                        ) -> SchedulerPolicy:
+    """Name → fresh policy instance; instances pass through; ``None`` picks
+    ``chunked``."""
+    if policy is None:
+        return ChunkedPrefill()
+    if isinstance(policy, SchedulerPolicy):
+        return policy
+    try:
+        return SCHEDULER_POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown scheduler policy {policy!r}; choose "
+                         f"from {scheduler_policies()}") from None

@@ -75,6 +75,9 @@ class RequestHandle:
 
     @property
     def status(self) -> str:
+        """``waiting`` → ``prefilling`` (pages reserved, prompt chunks being
+        ingested under the scheduler's token budget) → ``active`` (decoding)
+        → ``done`` | ``cancelled`` | ``failed``."""
         return self.req.status
 
     @property
@@ -101,10 +104,30 @@ class RequestHandle:
 
     def cancel(self) -> None:
         """Ask the engine to stop decoding this request.  Waiting requests
-        are dropped at their next admission look; active ones finish their
-        in-flight step and release their pages."""
+        are dropped at their next admission look; prefilling ones are
+        dropped at the next step before any budget is spent on them (their
+        reserved pages and hit pins go straight back); active ones finish
+        their in-flight step and release their pages."""
         self.req.cancelled.set()
         self.req._progress.set()
+
+    # ------------------------------------------------------------ latency
+    def ttft(self) -> Optional[float]:
+        """Time-to-first-token (seconds, submit → first emitted token);
+        ``None`` until the first token exists.  With chunked prefill the
+        first token streams the moment the final prompt chunk's logits
+        exist — not when the whole batch's admission settles."""
+        if not self.req.out_times:
+            return None
+        return self.req.out_times[0] - self.req.t_submit
+
+    def itl(self) -> List[float]:
+        """Inter-token latencies (seconds between consecutive emitted
+        tokens); empty until two tokens exist.  The scheduler's contract is
+        that each entry is bounded by one prefill chunk's work, never one
+        prompt's."""
+        ts = self.req.out_times
+        return [b - a for a, b in zip(ts, ts[1:])]
 
     # ------------------------------------------------------------- stream
     def tokens(self, poll_s: float = 0.05) -> Iterator[int]:
@@ -278,6 +301,7 @@ class ServingSession:
         totals: Dict[str, float] = {
             "steps": sum(s["steps"] for s in shards),
             "active": sum(s["active"] for s in shards),
+            "prefilling": sum(s["prefilling"] for s in shards),
             "waiting": sum(s["waiting"] for s in shards),
             "completed": sum(s["completed"] for s in shards),
             "cancelled": sum(s["cancelled"] for s in shards),

@@ -1,17 +1,22 @@
 """Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
 ref.py pure-jnp oracles (kernels run under interpret=True on CPU; the same
-pallas_call lowers to Mosaic on real TPU)."""
+pallas_call lowers to Mosaic on real TPU).
+
+The deterministic sweeps always run; only the hypothesis-driven property
+tests need the optional package (they are simply not collected without it,
+instead of skipping the whole module)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property-based kernel tests need the optional hypothesis package")
-from hypothesis import HealthCheck, given, settings  # noqa: E402
-from hypothesis import strategies as st  # noqa: E402
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
@@ -94,31 +99,79 @@ def test_ssd_scan_sweep(dtype, shape):
                                np.asarray(fr, np.float32), **tol)
 
 
-@settings(max_examples=8, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(
-    b=st.integers(1, 3),
-    n_pages=st.integers(1, 6),
-    page=st.sampled_from([4, 8]),
-    hkv=st.sampled_from([1, 2]),
-    group=st.sampled_from([1, 2, 4]),
-    d=st.sampled_from([8, 16]),
-)
-def test_paged_attention_property(b, n_pages, page, hkv, group, d):
-    """Property: kernel == oracle for arbitrary page-table contents and
-    context lengths (the shapes the SMR-managed pool can produce)."""
-    h = hkv * group
-    nphys = max(b * n_pages, 2)
-    ks = jax.random.split(jax.random.PRNGKey(b * 100 + n_pages), 5)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(
+        b=st.integers(1, 3),
+        n_pages=st.integers(1, 6),
+        page=st.sampled_from([4, 8]),
+        hkv=st.sampled_from([1, 2]),
+        group=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([8, 16]),
+    )
+    def test_paged_attention_property(b, n_pages, page, hkv, group, d):
+        """Property: kernel == oracle for arbitrary page-table contents and
+        context lengths (the shapes the SMR-managed pool can produce)."""
+        h = hkv * group
+        nphys = max(b * n_pages, 2)
+        ks = jax.random.split(jax.random.PRNGKey(b * 100 + n_pages), 5)
+        q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+        kp = jax.random.normal(ks[1], (nphys, page, hkv, d), jnp.float32)
+        vp = jax.random.normal(ks[2], (nphys, page, hkv, d), jnp.float32)
+        bt = jax.random.randint(ks[3], (b, n_pages), 0, nphys)
+        cl = jax.random.randint(ks[4], (b,), 1, n_pages * page + 1)
+        out = paged_attention(q, kp, vp, bt, cl, interpret=True)
+        want = ref.paged_attention_ref(q, kp, vp, bt, cl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_paged_attention_occupancy_mask(backend):
+    """The serving engine's decode-batch padding: rows with occupancy=False
+    must produce exactly zero output — independent of whatever their
+    block-table entries alias (here: the same pages real rows use, i.e. the
+    worst case a recycled page id could produce) — while occupied rows match
+    the unmasked reference bit-for-bit."""
+    b, h, hkv, d, nphys, page, npg = 4, 4, 2, 16, 8, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
     q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
     kp = jax.random.normal(ks[1], (nphys, page, hkv, d), jnp.float32)
     vp = jax.random.normal(ks[2], (nphys, page, hkv, d), jnp.float32)
-    bt = jax.random.randint(ks[3], (b, n_pages), 0, nphys)
-    cl = jax.random.randint(ks[4], (b,), 1, n_pages * page + 1)
-    out = paged_attention(q, kp, vp, bt, cl, interpret=True)
-    want = ref.paged_attention_ref(q, kp, vp, bt, cl)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+    bt = jax.random.randint(ks[3], (b, npg), 0, nphys)
+    cl = jax.random.randint(ks[4], (b,), 1, npg * page + 1)
+    occ = jnp.asarray([True, False, True, False])
+    # padded rows alias the REAL rows' pages — the mask, not the page
+    # contents, must keep them inert
+    bt = bt.at[1].set(bt[0]).at[3].set(bt[2])
+    out = ops.paged_attention(q, kp, vp, bt, cl, occupancy=occ,
+                              backend=backend)
+    out = np.asarray(out, np.float32)
+    assert np.all(out[~np.asarray(occ)] == 0.0), "padded rows leaked output"
+    assert np.all(np.isfinite(out)), "mask produced NaN/inf"
+    want = ref.paged_attention_ref(q[np.asarray(occ)], kp, vp,
+                                   bt[np.asarray(occ)], cl[np.asarray(occ)])
+    np.testing.assert_allclose(out[np.asarray(occ)],
+                               np.asarray(want, np.float32),
                                rtol=3e-5, atol=3e-5)
+
+
+def test_paged_attention_occupancy_all_masked_and_zero_ctx():
+    """Degenerate corners the engine can produce while every sequence is
+    still prefilling: an all-padding batch, and padded rows carrying ctx=0
+    (an all-masked softmax must pin to zero, not NaN)."""
+    b, h, hkv, d, nphys, page, npg = 2, 2, 1, 8, 4, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (nphys, page, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (nphys, page, hkv, d), jnp.float32)
+    bt = jnp.zeros((b, npg), jnp.int32)
+    out = ref.paged_attention_ref(q, kp, vp, bt,
+                                  jnp.asarray([0, 0], jnp.int32),
+                                  occupancy=jnp.asarray([False, False]))
+    assert np.all(np.asarray(out) == 0.0)
 
 
 def test_ops_dispatch():

@@ -24,6 +24,7 @@ API_SURFACE = sorted([
     "traversal_policies",
     "admission_policies",
     "eviction_policies",
+    "scheduler_policies",
     "scheme_info",
     "structure_info",
     "check",
@@ -52,8 +53,8 @@ CORE_SURFACE = sorted([
 SERVING_SURFACE = sorted([
     "serve", "ServingConfig", "ServingSession", "RequestHandle",
     "ShardedEngine", "PrefixRouter", "Request", "PagedServingEngine",
-    "admission_policies", "eviction_policies",
-    "as_admission_policy", "as_eviction_policy",
+    "admission_policies", "eviction_policies", "scheduler_policies",
+    "as_admission_policy", "as_eviction_policy", "as_scheduler_policy",
 ])
 
 
@@ -85,6 +86,7 @@ def test_registry_names_snapshot():
                                         "waitfree"]
     assert api.admission_policies() == ["fifo", "priority"]
     assert api.eviction_policies() == ["fifo", "pressure", "lru"]
+    assert api.scheduler_policies() == ["chunked", "oneshot", "roundrobin"]
 
 
 def test_scheme_capability_snapshot():

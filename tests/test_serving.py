@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import serving
+from repro import api, serving
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import PagedServingEngine, Request, ServingConfig
@@ -129,6 +129,54 @@ def test_multi_shard_matches_reference_with_cross_request_hits(small_model):
         assert out == _reference_greedy(model, params, p, 5), p[:4]
 
 
+_HAMMER_REF = {}
+
+
+def _hammer_ref(model, params, prompt, n_new):
+    """Memoized reference decode: the hammer drives the same prompts under
+    every scheme, so the scheme-independent oracle runs once per prompt."""
+    key = (tuple(prompt), n_new)
+    if key not in _HAMMER_REF:
+        _HAMMER_REF[key] = _reference_greedy(model, params, prompt, n_new)
+    return _HAMMER_REF[key]
+
+
+@pytest.mark.parametrize("shard_smr", ["per_shard", "shared"])
+@pytest.mark.parametrize("smr", api.schemes(reclaims=True))
+def test_cross_scheme_serving_consistency_hammer(small_model, smr,
+                                                 shard_smr):
+    """Serving-layer capability sweep: the multi-shard token-exact
+    consistency check across EVERY reclaiming scheme the registry knows
+    (parametrized, not hardcoded — a scheme capability drift shows up here,
+    at the serving layer), in both per-shard and shared SMR modes, with
+    cross-request prefix hits and a zero-leak drain."""
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr=smr, num_shards=2, shard_smr=shard_smr,
+                      num_pages=64, page_size=4, max_batch=2,
+                      max_seq_len=64, prefill_chunk_tokens=8))
+    router = session.engine.router
+    rng = np.random.RandomState(13)
+    prompts = []
+    for shard in (0, 1):
+        base = _prompt_for_shard(router, rng, shard, 12)
+        prompts += [base + [5, 6], base + [9]]   # same-shard prefix reuse
+    handles = session.submit_many(prompts, max_new_tokens=4)
+    outs = [h.result(timeout=180) for h in handles]
+    assert {h.shard for h in handles} == {0, 1}
+    if shard_smr == "shared":
+        assert session.engine.shards[0].smr is session.engine.shards[1].smr
+    session.close()
+    for p, out in zip(prompts, outs):
+        assert out == _hammer_ref(model, params, p, 4), (smr, shard_smr,
+                                                         p[:4])
+    for shard in session.engine.shards:
+        ps = shard.pool.stats()
+        assert ps["free"] == 64 and ps["awaiting_reclaim"] == 0, \
+            (smr, shard_smr, ps)
+
+
 def test_legacy_engine_kwargs_deprecated_but_working(small_model):
     """The pre-session construction surface: one release of compatibility,
     with a DeprecationWarning, on top of ServingConfig."""
@@ -146,7 +194,7 @@ def test_legacy_engine_kwargs_deprecated_but_working(small_model):
     eng.stop()
     t.join(timeout=10)
     assert req.out_tokens == _reference_greedy(model, params, prompt, 4)
-    # stop() drained: scratch unreserved, cache purged, zero leaked pages
+    # stop() drained: cache purged, zero leaked pages
     stats = eng.pool.stats()
     assert stats["free"] == 64 and stats["awaiting_reclaim"] == 0, stats
 

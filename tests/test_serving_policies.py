@@ -1,7 +1,10 @@
 """Serving-policy registries and runtime satellites — no model required:
-admission ordering (fifo/priority), eviction victim order (fifo/pressure/
-lru via the NM-tree ordered index), ServingConfig validation, PrefixRouter
+admission ordering (fifo/priority), scheduler budget division
+(chunked/oneshot/roundrobin), eviction victim order (fifo/pressure/lru via
+the NM-tree ordered index), ServingConfig validation, PrefixRouter
 placement, BlockPool.reserve, and NMTree.min_key."""
+
+from types import SimpleNamespace
 
 import pytest
 
@@ -19,6 +22,8 @@ from repro.serving import (
     ServingConfig,
     admission_policies,
     as_admission_policy,
+    as_scheduler_policy,
+    scheduler_policies,
 )
 
 
@@ -72,6 +77,60 @@ def test_priority_admission_order():
     assert pol.pop(q) is low2
     assert pol.drain(q) == [low1]
     assert pol.pop(q) is None
+
+
+# ------------------------------------------------------------ scheduler
+def _fake_seq(prompt_len, filled=0):
+    return SimpleNamespace(req=SimpleNamespace(prompt=[0] * prompt_len),
+                           filled=filled)
+
+
+def test_scheduler_policy_registry():
+    assert scheduler_policies() == ["chunked", "oneshot", "roundrobin"]
+    assert api.scheduler_policies() == scheduler_policies()
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        as_scheduler_policy("nope")
+    assert as_scheduler_policy(None).name == "chunked"
+    assert as_scheduler_policy("chunked") is not as_scheduler_policy(
+        "chunked")
+    pol = as_scheduler_policy("oneshot")
+    assert as_scheduler_policy(pol) is pol
+
+
+def test_chunked_plan_head_of_line_and_spill():
+    pol = as_scheduler_policy("chunked")
+    a = _fake_seq(24, filled=4)        # needs 20
+    b = _fake_seq(7)                   # needs 7
+    # head-of-line: the whole budget goes to the oldest sequence
+    assert pol.plan([a, b], 16, 4) == [(a, 16)]
+    # budget past a's need spills to b; b's mid-prompt grant page-aligns
+    assert pol.plan([a, b], 24, 4) == [(a, 20), (b, 4)]
+    # finishing budget grants the exact (unaligned) remainder
+    assert pol.plan([a, b], 32, 4) == [(a, 20), (b, 7)]
+    # below one page: nothing advances (never a misaligned boundary)
+    assert pol.plan([a, b], 2, 4) == []
+    assert pol.plan([], 16, 4) == []
+
+
+def test_oneshot_plan_ignores_budget():
+    pol = as_scheduler_policy("oneshot")
+    a, b = _fake_seq(100, filled=8), _fake_seq(7)
+    # whole remaining prompts, however small the budget — the seed
+    # behavior the interference test shows chunked eliminates
+    assert pol.plan([a, b], 4, 4) == [(a, 92), (b, 7)]
+
+
+def test_roundrobin_plan_splits_budget():
+    pol = as_scheduler_policy("roundrobin")
+    a, b = _fake_seq(100), _fake_seq(100)
+    # 16 tokens over two sequences: 8 each (page-aligned shares)
+    assert pol.plan([a, b], 16, 4) == [(a, 8), (b, 8)]
+    # a share below one page rounds up to one page while budget lasts
+    c = _fake_seq(100)
+    assert pol.plan([a, b, c], 8, 4) == [(a, 4), (b, 4)]
+    # short prompts take only what they need
+    d = _fake_seq(3)
+    assert pol.plan([d, a], 16, 4) == [(d, 3), (a, 8)]
 
 
 # ------------------------------------------------------------- eviction
@@ -199,6 +258,17 @@ def test_serving_config_validation():
         ServingConfig(admission="lifo")
     with pytest.raises(ValueError, match="unknown eviction"):
         ServingConfig(eviction="mru")
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        ServingConfig(scheduler="greedy")
+    # chunk budget must be a positive page multiple (page-aligned chunk
+    # boundaries are what let resumed prefills reuse prefix-cache runs)
+    with pytest.raises(ValueError, match="prefill_chunk_tokens"):
+        ServingConfig(prefill_chunk_tokens=0)
+    with pytest.raises(ValueError, match="prefill_chunk_tokens"):
+        ServingConfig(prefill_chunk_tokens=12, page_size=8,
+                      max_seq_len=256)
+    assert ServingConfig(prefill_chunk_tokens=16,
+                         page_size=8).prefill_chunk_tokens == 16
     with pytest.raises(ValueError, match="unknown prefix_traversal"):
         ServingConfig(prefix_traversal="zigzag")
     with pytest.raises(ValueError, match="shard_smr"):
