@@ -53,6 +53,31 @@ def bench_paged_attention(quick=True):
                f"{us:.1f},gbps={kv_bytes / us / 1e3:.2f}")
 
 
+def bench_packed_prefill(quick=True):
+    """Packed multi-prompt prefill op, XLA path (the engine's packed
+    scheduler on CPU): C chunk lanes shared by S segments against one paged
+    pool — the row the chunk-for-chunk win over per-sequence prefill calls
+    is read from (one packed call vs S single-segment calls)."""
+    shapes = [(64, 8, 2, 64, 128, 8, 4, 8)] if quick else \
+        [(64, 8, 2, 64, 128, 8, 4, 8), (256, 16, 4, 64, 512, 16, 8, 16)]
+    for (c, h, hkv, d, npool, page, n_segs, npg) in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(4), 4)
+        q = jax.random.normal(ks[0], (c, h, d), jnp.bfloat16)
+        kp = jax.random.normal(ks[1], (npool, page, hkv, d), jnp.bfloat16)
+        vp = jax.random.normal(ks[2], (npool, page, hkv, d), jnp.bfloat16)
+        rows = jax.random.randint(ks[3], (n_segs, npg), 0, npool)
+        # equal segment slices filling the chunk, each resuming after a
+        # one-page prefix (the packed engine's steady-state shape)
+        per = c // n_segs
+        seg = jnp.repeat(jnp.arange(n_segs, dtype=jnp.int32), per)
+        pos = page + jnp.tile(jnp.arange(per, dtype=jnp.int32), n_segs)
+        ctx = jnp.full((n_segs,), page + per, jnp.int32)
+        us = _time(lambda *a: ops.packed_prefill_attention(
+            *a, backend="xla"), q, kp, vp, rows, seg, pos, ctx)
+        yield (f"kernels/packed-c{c}seg{n_segs},"
+               f"{us:.1f},tok_us={c / us:.2f}")
+
+
 def bench_ssd(quick=True):
     shapes = [(2, 512, 16, 64, 1, 64)] if quick else \
         [(2, 512, 16, 64, 1, 64), (4, 2048, 32, 64, 1, 128)]
@@ -82,10 +107,52 @@ def bench_kernel_oracle_match():
                                 b.astype(jnp.float32))))
     yield f"kernels/pallas-oracle-maxerr,0.0,err={err:.2e}"
 
+    # split-K paged attention vs oracle, native occupancy in play: padded
+    # rows alias a live row's block table on purpose — the kernel must
+    # still return exactly zero for them, with no host-side clamp/where
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    b_, h_, hkv_, d_, npool, page, npg = 8, 8, 2, 32, 32, 8, 4
+    q = jax.random.normal(ks[0], (b_, h_, d_), jnp.float32)
+    kp = jax.random.normal(ks[1], (npool, page, hkv_, d_), jnp.float32)
+    vp = jax.random.normal(ks[2], (npool, page, hkv_, d_), jnp.float32)
+    bt = jax.random.randint(ks[3], (b_, npg), 0, npool)
+    bt = bt.at[1].set(bt[0])          # padded row 1 aliases row 0's pages
+    cl = jnp.arange(1, b_ + 1, dtype=jnp.int32) * page // 2
+    occ = (jnp.arange(b_) % 2 == 0)
+    want = ref.paged_attention_ref(q, kp, vp, bt, cl, occupancy=occ)
+    for num_splits in (1, 2, 4):
+        got = ops.paged_attention(q, kp, vp, bt, cl, occupancy=occ,
+                                  num_splits=num_splits,
+                                  backend="pallas_interpret")
+        err = float(jnp.max(jnp.abs(got - want)))
+        pad_abs = float(jnp.max(jnp.abs(got[~occ]))) if (~occ).any() else 0.0
+        yield (f"kernels/paged-splitk{num_splits}-oracle-maxerr,0.0,"
+               f"err={err:.2e};pad_abs={pad_abs:.1e}")
+
+    # packed multi-prompt prefill vs oracle (padding lanes must be zero)
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    c, n_segs = 24, 3
+    q = jax.random.normal(ks[0], (c, h_, d_), jnp.float32)
+    rows = jax.random.randint(ks[3], (n_segs, npg), 0, npool)
+    lens = (7, 10, 4)                 # 21 lanes + 3 padding
+    seg = jnp.asarray(sum(([i] * n for i, n in enumerate(lens)), [])
+                      + [-1] * (c - sum(lens)), jnp.int32)
+    pos = jnp.asarray(sum((list(range(page, page + n)) for n in lens), [])
+                      + [0] * (c - sum(lens)), jnp.int32)
+    ctx = jnp.asarray([page + n for n in lens], jnp.int32)
+    want = ref.packed_prefill_attention_ref(q, kp, vp, rows, seg, pos, ctx)
+    got = ops.packed_prefill_attention(q, kp, vp, rows, seg, pos, ctx,
+                                       backend="pallas_interpret")
+    err = float(jnp.max(jnp.abs(got - want)))
+    pad_abs = float(jnp.max(jnp.abs(got[sum(lens):])))
+    yield (f"kernels/packed-oracle-maxerr,0.0,"
+           f"err={err:.2e};pad_abs={pad_abs:.1e}")
+
 
 ALL = {
     "attention": bench_attention,
     "paged": bench_paged_attention,
+    "packed": bench_packed_prefill,
     "ssd": bench_ssd,
     "oracle": bench_kernel_oracle_match,
 }

@@ -20,7 +20,10 @@ from repro.models import build_model
 
 def _warmup(session, prompt_len=20):
     """One tiny request per shard OUTSIDE the timed window, so each shard's
-    prefill/decode JIT compilation doesn't masquerade as serving time."""
+    prefill/decode JIT compilation doesn't masquerade as serving time.
+    ``session.warm()`` additionally compiles every packed-prefill segment
+    bucket when the scheduler packs (no-op otherwise)."""
+    session.warm()
     router = session.engine.router
     rng = np.random.RandomState(12345)
     for shard in range(router.num_shards):
@@ -82,9 +85,13 @@ def bench_serving(quick=True):
     # p99 inter-token latency; the chunked row vs the oneshot baseline is
     # the "admission never stalls the decode batch" acceptance signal — a
     # long prompt's prefill is sliced into page-aligned chunks, so p99 ITL
-    # stays near one chunk's work instead of one prompt's.
+    # stays near one chunk's work instead of one prompt's.  The packed row
+    # is the best-of-both acceptance signal: chunked's grants (same ITL
+    # bound) executed as ONE multi-segment chunk per step, so short prompts
+    # stop wasting most of a fixed-shape chunk each — throughput should
+    # reach oneshot's while itl_p99 stays at chunked's.
     mixed_reqs = 16 if quick else 48
-    for sched in ("chunked", "oneshot"):
+    for sched in ("chunked", "oneshot", "packed"):
         session = serving.serve(
             model, params,
             serving.ServingConfig(smr="IBR", num_pages=256, page_size=8,
@@ -98,13 +105,19 @@ def bench_serving(quick=True):
                                    max_new_tokens=16, seed=0,
                                    long_prompts=3, long_prompt_len=192)
         session.close()
+        st = res.session_stats["totals"]
+        extra = ""
+        if sched == "packed":
+            extra = (f";seg_per_chunk="
+                     f"{st['packed_segments_per_chunk']:.2f}"
+                     f";wasted={st['prefill_tokens_wasted']:.0f}")
         yield (f"serving/mixed-{sched},"
                f"{res.duration_s / max(res.tokens, 1) * 1e6:.1f},"
                f"tok_s={res.tok_per_s:.1f};"
                f"ttft_avg_ms={res.ttft_avg_s * 1e3:.1f};"
                f"ttft_p99_ms={res.ttft_p99_s * 1e3:.1f};"
                f"itl_avg_ms={res.itl_avg_s * 1e3:.1f};"
-               f"itl_p99_ms={res.itl_p99_s * 1e3:.1f}")
+               f"itl_p99_ms={res.itl_p99_s * 1e3:.1f}{extra}")
 
     # sharded smoke: the SAME mix against 1 vs 2 shards (IBR, the serving
     # default), full queueing pressure.  Prefixes are router-probed so each

@@ -38,7 +38,16 @@ def main():
                     choices=api.scheduler_policies(),
                     help="chunked-prefill fairness: 'chunked' bounds how "
                          "long one prompt's ingestion can stall in-flight "
-                         "decoders; 'oneshot' is the stall-prone baseline")
+                         "decoders; 'oneshot' is the stall-prone baseline; "
+                         "'packed' executes chunked's grants as one "
+                         "multi-segment chunk per step")
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "pallas_interpret"],
+                    help="kernel backend for the engine's attention ops: "
+                         "one flag flips decode (split-K paged attention) "
+                         "and packed prefill onto the Pallas kernels "
+                         "(Mosaic on TPU; interpret elsewhere — correct "
+                         "but slow off-TPU)")
     ap.add_argument("--chunk-tokens", type=int, default=16,
                     help="per-step prefill token budget (page multiple)")
     ap.add_argument("--long-prompts", type=int, default=2,
@@ -63,7 +72,7 @@ def main():
         smr=args.smr, num_shards=args.shards, shard_smr=args.shard_smr,
         num_pages=128, page_size=8, max_batch=4, max_seq_len=256,
         admission=args.admission, eviction=args.eviction,
-        scheduler=args.scheduler,
+        scheduler=args.scheduler, backend=args.backend,
         prefill_chunk_tokens=args.chunk_tokens,
         prefix_traversal=args.prefix_traversal)
     with serving.serve(model, params, config) as session:
@@ -78,6 +87,7 @@ def main():
     print(f"scheme={args.smr} shards={args.shards} "
           f"admission={args.admission} eviction={args.eviction} "
           f"scheduler={args.scheduler}/{args.chunk_tokens}tok "
+          f"backend={args.backend} "
           f"requests={res.requests} generated={res.tokens} tokens "
           f"in {res.duration_s:.2f}s ({res.tok_per_s:.1f} tok/s, "
           f"prefix hits={res.prefix_hits}, "

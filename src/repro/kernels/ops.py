@@ -7,11 +7,19 @@ serving engine.
                  correct but slow, used by tests).
 
 The model zoo calls these wrappers so a single config flag flips the whole
-stack onto the TPU kernels."""
+stack onto the TPU kernels.
+
+Dispatch honesty: when a call EXPLICITLY requests ``backend="pallas"`` but
+the kernel cannot take the shapes (block divisibility), the wrapper raises
+instead of silently dropping to the jnp reference — a silently changed
+execution path is how "the TPU run was slow" bugs hide.  When the pallas
+path is only the *session default* (``set_default_backend``), the fallback
+still happens but warns once per (op, reason)."""
 
 from __future__ import annotations
 
-import functools
+import math
+import warnings
 from typing import Optional
 
 import jax
@@ -19,10 +27,12 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention as _flash_pallas
+from .packed_prefill import packed_prefill_attention as _packed_pallas
 from .paged_attention import paged_attention as _paged_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
 _DEFAULT_BACKEND = "xla"
+_FALLBACKS_WARNED: set = set()
 
 
 def default_backend() -> str:
@@ -42,47 +52,118 @@ def _resolve(backend: Optional[str]):
     return ("pallas" if b.startswith("pallas") else "xla"), interpret
 
 
+def _refuse_fallback(op: str, explicit: bool, reason: str) -> None:
+    """Explicit-backend contract: raise when the caller named the pallas
+    backend for this call; warn once when only the process default did."""
+    if explicit:
+        raise ValueError(
+            f"{op}: backend='pallas' was explicitly requested but {reason}; "
+            f"pass backend='xla' (or fix the shapes) instead of relying on "
+            f"a silent reference fallback")
+    key = (op, reason)
+    if key not in _FALLBACKS_WARNED:
+        _FALLBACKS_WARNED.add(key)
+        warnings.warn(
+            f"{op}: default backend is 'pallas' but {reason}; falling back "
+            f"to the jnp reference for these shapes (warned once)",
+            RuntimeWarning, stacklevel=3)
+
+
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
                     backend: Optional[str] = None):
     kind, interpret = _resolve(backend)
-    if kind == "pallas" and q.shape[1] % min(block_q, q.shape[1]) == 0:
-        return _flash_pallas(q, k, v, causal=causal,
-                             block_q=block_q, block_k=block_k,
-                             interpret=interpret)
+    if kind == "pallas":
+        if q.shape[1] % min(block_q, q.shape[1]) == 0:
+            return _flash_pallas(q, k, v, causal=causal,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+        _refuse_fallback(
+            "flash_attention", backend is not None,
+            f"seq_len {q.shape[1]} is not divisible by block_q "
+            f"{min(block_q, q.shape[1])}")
     return ref.flash_attention_ref(q, k, v, causal=causal)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
-                    occupancy=None, backend: Optional[str] = None):
+                    occupancy=None, num_splits=None,
+                    backend: Optional[str] = None):
     """``occupancy`` (B,) bool marks real batch rows; ``False`` rows are
     padding — their output is exactly zero and independent of whatever their
     block-table entries point at (the serving engine pads its decode batch
-    with masked rows instead of a reserved scratch page)."""
+    with masked rows instead of a reserved scratch page).  Both backends
+    handle it natively in the kernel.  ``num_splits`` selects the Pallas
+    kernel's flash-decoding split-K factor (None → heuristic; the xla
+    reference has no split dimension and ignores it)."""
     kind, interpret = _resolve(backend)
     if kind == "pallas":
-        if occupancy is not None:
-            # the Pallas kernel has no occupancy input: keep its softmax
-            # finite (ctx >= 1) and zero the padded rows on the way out
-            context_lens = jnp.where(occupancy, context_lens, 1)
-            out = _paged_pallas(q, k_pages, v_pages, block_tables,
-                                context_lens, interpret=interpret)
-            return jnp.where(occupancy[:, None, None], out,
-                             jnp.zeros((), out.dtype))
         return _paged_pallas(q, k_pages, v_pages, block_tables, context_lens,
+                             occupancy=occupancy, num_splits=num_splits,
                              interpret=interpret)
     return ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
                                    context_lens, occupancy=occupancy)
 
 
+def _packed_xla(q, k_pages, v_pages, page_rows, seg_ids, positions):
+    """Production XLA path for packed prefill: lay every segment's page run
+    end to end into ONE (S*s_max)-key axis and mask by key owner — one
+    BLAS-friendly gemm and an S*s_max gather, where the naive oracle
+    (ref.packed_prefill_attention_ref) gathers C*s_max key rows (a C-fold
+    memory blowup the engine cannot afford per layer per chunk).  Each key
+    slot belongs to exactly ONE (segment, position), so segments sharing a
+    physical page (prefix-cache hits) just see their own copy unmasked."""
+    c, h, d = q.shape
+    _, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    s, npg = page_rows.shape
+    s_max = npg * page_size
+    t = s * s_max
+    scale = 1.0 / math.sqrt(d)
+    k_seq = k_pages[page_rows].reshape(t, hkv, d).astype(jnp.float32)
+    v_seq = v_pages[page_rows].reshape(t, hkv, d).astype(jnp.float32)
+    qf = q.reshape(c, hkv, g, d).astype(jnp.float32) * scale
+    sc = jnp.einsum("ckgd,tkd->ckgt", qf, k_seq)
+    key_seg = jnp.arange(t, dtype=jnp.int32) // s_max
+    key_pos = jnp.arange(t, dtype=jnp.int32) % s_max
+    allowed = (seg_ids[:, None] == key_seg[None, :]) & \
+        (key_pos[None, :] <= positions[:, None])
+    sc = jnp.where(allowed[:, None, None, :], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    # padding lanes (seg -1) match no key: pin their NaN softmax to zero
+    p = jnp.where((seg_ids >= 0)[:, None, None, None], p, 0.0)
+    out = jnp.einsum("ckgt,tkd->ckgd", p, v_seq)
+    return out.reshape(c, h, d).astype(q.dtype)
+
+
+def packed_prefill_attention(q, k_pages, v_pages, page_rows, seg_ids,
+                             positions, seg_ctx, *,
+                             backend: Optional[str] = None):
+    """Packed multi-prompt prefill attention (block-diagonal per segment
+    plus each segment's page-resident prefix); padding lanes (seg_id -1)
+    output exactly zero on both backends.  See
+    :func:`repro.kernels.ref.packed_prefill_attention_ref` for the shape
+    contract (the oracle; the xla path here is the equivalent
+    concatenated-key formulation)."""
+    kind, interpret = _resolve(backend)
+    if kind == "pallas":
+        return _packed_pallas(q, k_pages, v_pages, page_rows, seg_ids,
+                              positions, seg_ctx, interpret=interpret)
+    return _packed_xla(q, k_pages, v_pages, page_rows, seg_ids, positions)
+
+
 def ssd(x, dt, a, b, c, *, chunk=128, d_skip=None,
         backend: Optional[str] = None):
     kind, interpret = _resolve(backend)
-    if kind == "pallas" and x.shape[1] % min(chunk, x.shape[1]) == 0:
-        y, final = _ssd_pallas(x, dt, a, b, c, chunk=chunk,
-                               interpret=interpret)
-        if d_skip is not None:
-            y = y + (x.astype(jnp.float32) *
-                     d_skip.astype(jnp.float32)[None, None, :, None]
-                     ).astype(y.dtype)
-        return y, final
+    if kind == "pallas":
+        if x.shape[1] % min(chunk, x.shape[1]) == 0:
+            y, final = _ssd_pallas(x, dt, a, b, c, chunk=chunk,
+                                   interpret=interpret)
+            if d_skip is not None:
+                y = y + (x.astype(jnp.float32) *
+                         d_skip.astype(jnp.float32)[None, None, :, None]
+                         ).astype(y.dtype)
+            return y, final
+        _refuse_fallback(
+            "ssd", backend is not None,
+            f"seq_len {x.shape[1]} is not divisible by chunk "
+            f"{min(chunk, x.shape[1])}")
     return ref.ssd_chunked_ref(x, dt, a, b, c, chunk=chunk, d_skip=d_skip)

@@ -71,6 +71,53 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def packed_prefill_attention_ref(q, k_pages, v_pages, page_rows, seg_ids,
+                                 positions, seg_ctx=None, softmax_scale=None):
+    """Packed multi-prompt prefill attention over a paged KV pool.
+
+    Several prefilling sequences share one fixed-shape chunk of C query
+    lanes (MaxText MLPerf offline-serving style); attention is
+    block-diagonal per segment plus each segment's own page-resident prefix.
+
+    q:         (C, H, D)  — packed chunk queries, one lane per prompt token
+    k/v_pages: (P, page_size, Hkv, D) — the global page pool
+    page_rows: (S, pages_per_seq) int32 — per-segment block-table rows
+    seg_ids:   (C,) int32 — which segment each lane belongs to; -1 lanes are
+               chunk padding: their output is exactly zero and nothing they
+               gather (whatever page_rows they would alias) can reach it
+    positions: (C,) int32 — each lane's absolute position in its own
+               sequence (so lane l sees its segment's keys at positions
+               <= positions[l]: the cached/earlier-chunk prefix plus the
+               chunk's own causal triangle)
+    seg_ctx:   (S,) int32, optional — per-segment context end; accepted for
+               signature parity with the kernel (the mask derives
+               visibility from positions alone)
+    """
+    del seg_ctx  # visibility is fully determined by (seg_ids, positions)
+    c, h, d = q.shape
+    npages_pool, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    scale = softmax_scale or 1.0 / math.sqrt(d)
+    s_max = page_rows.shape[1] * page_size
+
+    # per-lane gather: each lane sees its OWN segment's page run only
+    valid = seg_ids >= 0
+    lane_rows = page_rows[jnp.maximum(seg_ids, 0)]     # (C, pages)
+    k_seq = k_pages[lane_rows].reshape(c, s_max, hkv, d).astype(jnp.float32)
+    v_seq = v_pages[lane_rows].reshape(c, s_max, hkv, d).astype(jnp.float32)
+
+    qf = q.reshape(c, hkv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("ckgd,cskd->ckgs", qf, k_seq)
+    mask = (jnp.arange(s_max)[None, :] <= positions[:, None]) & \
+        valid[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # padding lanes softmax all -inf rows to NaN; pin them to exactly zero
+    p = jnp.where(valid[:, None, None, None], p, 0.0)
+    out = jnp.einsum("ckgs,cskd->ckgd", p, v_seq)
+    return out.reshape(c, h, d).astype(q.dtype)
+
+
 # ------------------------------------------------------------------ SSD
 
 

@@ -50,7 +50,17 @@ class ServingConfig:
     # -- policies ----------------------------------------------------------
     admission: str = "fifo"             # "fifo" | "priority"
     eviction: str = "fifo"              # "fifo" | "pressure" | "lru"
-    scheduler: str = "chunked"          # "chunked" | "oneshot" | "roundrobin"
+    scheduler: str = "chunked"          # "chunked" | "oneshot" |
+    #                                     "roundrobin" | "packed"
+
+    # -- device backend ----------------------------------------------------
+    # kernel backend for the engine's attention ops (kernels/ops.py):
+    # "xla" (pure-jnp reference path, the CPU default), "pallas" (the
+    # Mosaic kernels — flash-decoding split-K paged attention and the
+    # packed-prefill kernel — on TPU; interpret mode on CPU), or
+    # "pallas_interpret" (force interpret mode: bit-accurate but slow,
+    # used by tests).  One flag flips the whole engine onto the TPU path.
+    backend: str = "xla"
 
     # -- chunked prefill ---------------------------------------------------
     # per-step prefill token budget: each engine step advances at most this
@@ -108,6 +118,10 @@ class ServingConfig:
         if self.scheduler not in scheduler_policies():
             raise ValueError(f"unknown scheduler policy {self.scheduler!r};"
                              f" choose from {scheduler_policies()}")
+        if self.backend not in ("xla", "pallas", "pallas_interpret"):
+            raise ValueError(
+                f"unknown backend {self.backend!r}; choose from "
+                f"('xla', 'pallas', 'pallas_interpret')")
 
     # ---------------------------------------------------------------- utils
     @property
@@ -138,6 +152,7 @@ class ServingConfig:
             "admission": self.admission,
             "eviction": self.eviction,
             "scheduler": self.scheduler,
+            "backend": self.backend,
             "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "prefix_traversal": self.prefix_traversal,
         }

@@ -158,10 +158,22 @@ class _ShardEngine:
         self._decode = jax.jit(self._paged_decode_step,
                                donate_argnums=(1, 2))
         self._prefill = jax.jit(self._paged_prefill, donate_argnums=(1, 2))
+        self._prefill_packed = jax.jit(self._paged_prefill_packed,
+                                       donate_argnums=(1, 2))
+        self._packed_flat = jax.jit(self._paged_step_packed_flat,
+                                    donate_argnums=(1, 2))
         self.steps = 0
         self.n_completed = 0
         self.n_cancelled = 0
         self.n_failed = 0
+        # prefill efficiency counters (stats()): every fixed-shape chunk
+        # call pays for C lanes — `prefill_tokens_wasted` counts the padded
+        # lanes that bought nothing, and the packed pair shows how many
+        # segments shared each packed chunk (the whole point of `packed`)
+        self.prefill_chunks = 0
+        self.prefill_tokens_wasted = 0
+        self.packed_chunks = 0
+        self.packed_segments = 0
 
     # ---------------------------------------------------------- client API
     def _attach_hit(self, req: Request, pages: List[PageNode],
@@ -329,6 +341,142 @@ class _ShardEngine:
         # step — it capped multi-shard thread scaling)
         return jnp.argmax(logits).astype(jnp.int32), k_pages, v_pages
 
+    def _paged_prefill_packed(self, params, k_pages, v_pages, tokens,
+                              seg_ids, positions, page_rows, seg_ctx,
+                              emit_lanes):
+        """Ingest ONE packed multi-segment chunk (the ``packed`` scheduler).
+
+        tokens: (1, L) — several sequences' prompt slices laid end to end
+        in one fixed-shape chunk (L = prefill_chunk_tokens + max_batch:
+        the C-token prefill budget plus one lane per possible decode
+        rider); seg_ids (L,) int32 says which segment each lane belongs to
+        (-1 = padding) and positions (L,) its absolute position in its OWN
+        sequence.  page_rows (S, max_pages) carries one block-table row
+        per segment (S = the power-of-2 segment bucket; unused rows are
+        whatever, their seg_ctx is 0), seg_ctx (S,) each segment's context
+        end AFTER this chunk.  Like the single-sequence chunk path, K/V is
+        scattered into the pages per layer BEFORE attention reads them, so
+        lanes of the same segment see their earlier same-chunk neighbours
+        through the pages — same-chunk causality needs no extra masking.
+
+        A decode-batch member fuses in as one more segment holding a
+        single lane: its current token at position ctx-1, emit lane set —
+        the same scatter/attend/emit path that serves a finishing prompt
+        serves a decode step, so prefill and decode share one dispatch.
+
+        emit_lanes (S,): the lane holding each segment's LAST token when
+        the segment emits from this chunk (prompt completing, or a decode
+        rider), else L (sentinel — clamped on device, ignored on host).
+        Returns (S,) greedy next tokens so every emitting segment streams
+        its token from the same call."""
+        cfg = self.cfg
+        c = tokens.shape[1]
+        valid = seg_ids >= 0
+        x = jnp.take(params["embed"], tokens, axis=0)   # (1, C, D)
+        angles = rope_angles(positions[None, :], cfg.head_dim,
+                             cfg.rope_theta)
+        lane_rows = page_rows[jnp.maximum(seg_ids, 0)]  # (C, max_pages)
+        page_of = lane_rows[jnp.arange(c), positions // self.page_size]
+        slot_of = positions % self.page_size
+        # padding lanes scatter out of bounds and are DROPPED — they can
+        # never touch a page, whatever their (clamped) row aliases
+        upd_page = jnp.where(valid, page_of, k_pages.shape[1])
+        for i in range(cfg.n_layers):
+            p = self._layer_params(i)
+            h = rms_norm(x, p["ln1"])
+            q, k, v = _qkv(p["attn"], cfg, h)
+            q = apply_rope(q, angles)
+            k = apply_rope(k, angles)
+            k_pages = k_pages.at[i, upd_page, slot_of].set(
+                k[0].astype(k_pages.dtype), mode="drop")
+            v_pages = v_pages.at[i, upd_page, slot_of].set(
+                v[0].astype(v_pages.dtype), mode="drop")
+            out = ops.packed_prefill_attention(
+                q[0], k_pages[i], v_pages[i], page_rows, seg_ids,
+                positions, seg_ctx, backend=self.config.backend)
+            x = x + out.reshape(1, c, -1) @ p["attn"]["wo"]
+            h = rms_norm(x, p["ln2"])
+            ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
+            x = x + ff @ p["ffn"]["wo"]
+        x = rms_norm(x, params["final_norm"])
+        # one lm_head row per SEGMENT (S rows), not per lane: only each
+        # finishing segment's last-token logits matter, and S << C keeps
+        # the head matmul off the chunk's critical path
+        lanes = jnp.clip(emit_lanes, 0, c - 1)
+        logits = x[0, lanes] @ params["lm_head"]         # (S, V)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
+            k_pages, v_pages
+
+    def _paged_step_packed_flat(self, params, k_pages, v_pages, lanes,
+                                pages, emit_lanes):
+        """XLA-backend variant of the fused packed step with a RAGGED key
+        layout: the host lays every segment's live pages end to end into
+        one flat page list, so attention cost is proportional to the
+        chunk's ACTUAL aggregate context instead of the
+        (segments × max_pages) rectangle the generic formulation gathers.
+        (The Pallas kernel path keeps the rectangle — it prunes dead
+        pages in-grid via seg_ctx, which XLA's dense gather cannot.)
+
+        lanes: (5, L) int32 rows [tokens; seg_ids; positions; upd_page;
+        slot] — seg -1 lanes are padding, their upd_page is out of bounds
+        (scatter drops).  pages: (3, P) int32 rows [page_id; page_seg;
+        page_base] — one entry per LIVE page of some segment, page_base
+        its first token's absolute position, page_seg -1 for bucket
+        padding.  P is bucketed to a power of two; shared physical pages
+        appear once per owning segment, each under its own page_seg.
+        emit_lanes: (max_batch,) as in the rectangle path.  Returns
+        (max_batch,) greedy next tokens."""
+        cfg = self.cfg
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        g = cfg.n_heads // hkv
+        pgsz = self.page_size
+        scale = 1.0 / (dh ** 0.5)
+        toks = lanes[0][None, :]                         # (1, L)
+        seg_ids, positions = lanes[1], lanes[2]
+        upd_page, slot_of = lanes[3], lanes[4]
+        flat, page_seg, page_base = pages[0], pages[1], pages[2]
+        c = toks.shape[1]
+        x = jnp.take(params["embed"], toks, axis=0)      # (1, L, D)
+        angles = rope_angles(positions[None, :], cfg.head_dim,
+                             cfg.rope_theta)
+        # key ownership: each flat key slot belongs to ONE (segment,
+        # position) — a lane attends exactly its own segment's causal keys
+        key_seg = jnp.repeat(page_seg, pgsz)             # (P*pgsz,)
+        key_pos = (page_base[:, None] +
+                   jnp.arange(pgsz, dtype=jnp.int32)[None, :]).reshape(-1)
+        allowed = (seg_ids[:, None] == key_seg[None, :]) & \
+            (key_pos[None, :] <= positions[:, None])     # (L, P*pgsz)
+        for i in range(cfg.n_layers):
+            p = self._layer_params(i)
+            h = rms_norm(x, p["ln1"])
+            q, k, v = _qkv(p["attn"], cfg, h)
+            q = apply_rope(q, angles)
+            k = apply_rope(k, angles)
+            k_pages = k_pages.at[i, upd_page, slot_of].set(
+                k[0].astype(k_pages.dtype), mode="drop")
+            v_pages = v_pages.at[i, upd_page, slot_of].set(
+                v[0].astype(v_pages.dtype), mode="drop")
+            k_seq = k_pages[i, flat].reshape(-1, hkv, dh) \
+                .astype(jnp.float32)
+            v_seq = v_pages[i, flat].reshape(-1, hkv, dh) \
+                .astype(jnp.float32)
+            qf = q[0].reshape(c, hkv, g, dh).astype(jnp.float32) * scale
+            sc = jnp.einsum("ckgd,tkd->ckgt", qf, k_seq)
+            sc = jnp.where(allowed[:, None, None, :], sc, -jnp.inf)
+            pr = jax.nn.softmax(sc, axis=-1)
+            # padding lanes match no key: pin their NaN softmax to zero
+            pr = jnp.where((seg_ids >= 0)[:, None, None, None], pr, 0.0)
+            out = jnp.einsum("ckgt,tkd->ckgd", pr, v_seq).astype(x.dtype)
+            x = x + out.reshape(1, c, -1) @ p["attn"]["wo"]
+            h = rms_norm(x, p["ln2"])
+            ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
+            x = x + ff @ p["ffn"]["wo"]
+        x = rms_norm(x, params["final_norm"])
+        lanes_e = jnp.clip(emit_lanes, 0, c - 1)
+        logits = x[0, lanes_e] @ params["lm_head"]       # (max_batch, V)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
+            k_pages, v_pages
+
     def _paged_decode_step(self, params, k_pages, v_pages, block_tables,
                            ctx_lens, tokens, occ):
         """One token for every occupied batch row.  ctx_lens INCLUDE the new
@@ -359,7 +507,7 @@ class _ShardEngine:
                 v[:, 0].astype(v_pages.dtype), mode="drop")
             out = ops.paged_attention(q[:, 0], k_pages[i], v_pages[i],
                                       block_tables, ctx_lens, occupancy=occ,
-                                      backend="xla")
+                                      backend=self.config.backend)
             x = x + out.reshape(b, 1, -1) @ p["attn"]["wo"]
             h = rms_norm(x, p["ln2"])
             ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
@@ -454,24 +602,176 @@ class _ShardEngine:
                 jnp.asarray(buf), jnp.asarray(seq.page_row),
                 jnp.int32(seq.filled), jnp.int32(n_valid))
             seq.filled += n_valid
+            self.prefill_chunks += 1
+            self.prefill_tokens_wasted += chunk - n_valid
         if seq.filled == n_prompt:
             # final chunk: its last-position logits ARE the first token
-            self._emit(seq, int(tok))
-            seq.new_tokens = 1
-            self._prefilling.remove(seq)
-            if seq.new_tokens >= req.max_new_tokens \
-                    or req.cancelled.is_set():
-                # satisfied (or cancelled) by the first token alone — never
-                # enters the decode batch (a max_new_tokens=1 request used
-                # to overshoot to 2: activation skipped the limit check and
-                # the same step's decode emitted before its own)
-                self._finish(seq, "cancelled" if req.cancelled.is_set()
-                             else "done")
-            else:
-                req.status = "active"
-                self._active.append(seq)
+            self._finish_prefill(seq, int(tok))
         # intermediate chunks never sync with the device (tok is dropped
         # untouched), so chunking adds no host round-trips
+
+    def _finish_prefill(self, seq: _Seq, tok: int) -> None:
+        """A sequence's prompt is fully in pages and its first token is in
+        hand: stream it and move the sequence to decoding (or straight to
+        done — a max_new_tokens=1 request used to overshoot to 2 because
+        activation skipped the limit check and the same step's decode
+        emitted before its own)."""
+        req = seq.req
+        self._emit(seq, tok)
+        seq.new_tokens = 1
+        self._prefilling.remove(seq)
+        if seq.new_tokens >= req.max_new_tokens \
+                or req.cancelled.is_set():
+            self._finish(seq, "cancelled" if req.cancelled.is_set()
+                         else "done")
+        else:
+            req.status = "active"
+            self._active.append(seq)
+
+    def _advance_packed(self, plan, riders):
+        """Execute a whole prefill plan as packed fixed-shape chunks (the
+        ``packed`` scheduler): every granted sequence's slice goes into ONE
+        ``(1, L)`` chunk with sequence-indicator segment ids, so the chunk
+        budget buys C tokens of aggregate progress per kernel call instead
+        of per sequence.  With chunked-style grants (sum ≤ C, ≤ max_batch
+        sequences) one chunk per step suffices; the loop still splits
+        defensively if a plan ever overflows C lanes or max_batch
+        segments.
+
+        FUSED STEP: ``riders`` is the step's active decode batch — each
+        rider becomes one more segment holding exactly one lane (its
+        current token at position ctx-1, emit lane set), so the step's
+        decode tokens come out of the SAME device call as the prefill
+        chunk.  One dispatch + one host sync per step instead of two of
+        each; the decode batch and prefill chunk never queue behind each
+        other's dispatch latency.  The lane axis is C + max_batch wide so
+        riders never eat into the prefill token budget (active +
+        prefilling share max_batch, so segments always fit).  Riders ride
+        the FIRST chunk only; returns their next tokens as an (n_riders,)
+        array, or None when the plan was empty (caller falls back to the
+        dedicated decode batch, which is cheaper than a mostly-empty
+        packed chunk).
+
+        The segment axis is BUCKETED to the next power of two above the
+        actual segment count (1/2/4/.../max_batch) before the device call:
+        attention cost scales with S·max_pages keys, so a 1-segment chunk
+        must not pay the max_batch-wide gather.  At most log2(max_batch)+1
+        jit variants exist, all compiled by :meth:`warm_packed` or first
+        traffic."""
+        chunk = self.config.prefill_chunk_tokens
+        lanes_max = chunk + self.max_batch
+        n_segs = self.max_batch
+        pgsz = self.page_size
+        flat_path = self.config.backend == "xla"
+        queue = [(seq, grant) for seq, grant in plan if grant > 0]
+        rider_toks = None
+        first = True
+        while queue:
+            toks = np.zeros((1, lanes_max), np.int32)
+            segs = np.full((lanes_max,), -1, np.int32)
+            poss = np.zeros((lanes_max,), np.int32)
+            # per-lane scatter targets (flat path); padding lanes point
+            # out of bounds and are dropped on device
+            upd = np.full((lanes_max,), self.config.num_pages, np.int32)
+            slot = np.zeros((lanes_max,), np.int32)
+            rows = np.zeros((n_segs, self.max_pages), np.int32)
+            ctxs = np.zeros((n_segs,), np.int32)
+            emit = np.full((n_segs,), lanes_max, np.int32)  # not finishing
+            seg_pages = []       # (page_row, n_live_pages) per segment
+            members = []
+            lane = 0
+            budget = len(riders) if first else 0
+            while queue and lane < chunk and len(members) + budget < n_segs:
+                seq, grant = queue.pop(0)
+                take = min(grant, chunk - lane)
+                si = len(members)
+                pos = np.arange(seq.filled, seq.filled + take)
+                toks[0, lane:lane + take] = \
+                    seq.req.prompt[seq.filled:seq.filled + take]
+                segs[lane:lane + take] = si
+                poss[lane:lane + take] = pos
+                upd[lane:lane + take] = seq.page_row[pos // pgsz]
+                slot[lane:lane + take] = pos % pgsz
+                rows[si] = seq.page_row
+                ctxs[si] = seq.filled + take
+                seg_pages.append((seq.page_row,
+                                  -(-(seq.filled + take) // pgsz)))
+                if seq.filled + take == len(seq.req.prompt):
+                    emit[si] = lane + take - 1
+                members.append((seq, take))
+                lane += take
+                if take < grant:
+                    # chunk overflow: the remainder LEADS the next chunk.
+                    # A mid-chunk split point need not be page-aligned —
+                    # alignment only matters at STEP end (prefix-cache
+                    # resume), and the full grant lands within this plan.
+                    queue.insert(0, (seq, grant - take))
+            n_riders = 0
+            if first:
+                for seq in riders:
+                    si = len(members) + n_riders
+                    ctx = len(seq.tokens)
+                    toks[0, lane] = seq.tokens[-1]
+                    segs[lane] = si
+                    poss[lane] = ctx - 1
+                    upd[lane] = seq.page_row[(ctx - 1) // pgsz]
+                    slot[lane] = (ctx - 1) % pgsz
+                    rows[si] = seq.page_row
+                    ctxs[si] = ctx
+                    seg_pages.append((seq.page_row, -(-ctx // pgsz)))
+                    emit[si] = lane
+                    n_riders += 1
+                    lane += 1
+            self.prefill_chunks += 1
+            self.packed_chunks += 1
+            self.packed_segments += len(members)
+            self.prefill_tokens_wasted += chunk - (lane - n_riders)
+            total = len(members) + n_riders
+            if flat_path:
+                # ragged key layout: segments' LIVE pages laid end to end,
+                # the page total bucketed to a power of two (≥ 8) — the
+                # call pays for the aggregate context actually attended,
+                # never the (segments × max_pages) rectangle
+                n_pages = sum(n for _, n in seg_pages)
+                p_b = max(8, 1 << max(0, n_pages - 1).bit_length())
+                pages = np.zeros((3, p_b), np.int32)
+                pages[1] = -1                      # padding owns no lane
+                off = 0
+                for si, (row, n) in enumerate(seg_pages):
+                    pages[0, off:off + n] = row[:n]
+                    pages[1, off:off + n] = si
+                    pages[2, off:off + n] = np.arange(n) * pgsz
+                    off += n
+                lanes = np.stack([toks[0], segs, poss, upd, slot])
+                out_toks, self.k_pages, self.v_pages = self._packed_flat(
+                    self.params, self.k_pages, self.v_pages,
+                    jnp.asarray(lanes), jnp.asarray(pages),
+                    jnp.asarray(emit))
+            else:
+                # power-of-2 segment bucket: pay for the segments actually
+                # present, not max_batch (seg ids are compact, so a prefix
+                # slice of the per-segment operands is sufficient)
+                n_b = min(n_segs, 1 << max(0, total - 1).bit_length())
+                out_toks, self.k_pages, self.v_pages = \
+                    self._prefill_packed(
+                        self.params, self.k_pages, self.v_pages,
+                        jnp.asarray(toks), jnp.asarray(segs),
+                        jnp.asarray(poss), jnp.asarray(rows[:n_b]),
+                        jnp.asarray(ctxs[:n_b]), jnp.asarray(emit[:n_b]))
+            finishing = any(emit[si] < lanes_max
+                            for si in range(len(members)))
+            # only a chunk that emits tokens (some prompt completed, or
+            # decode riders aboard) syncs with the device
+            out_np = np.asarray(out_toks) \
+                if finishing or n_riders else None
+            for si, (seq, take) in enumerate(members):
+                seq.filled += take
+                if emit[si] < lanes_max:
+                    self._finish_prefill(seq, int(out_np[si]))
+            if n_riders:
+                rider_toks = out_np[len(members):len(members) + n_riders]
+            first = False
+        return rider_toks
 
     def _release_seq(self, seq: _Seq) -> None:
         for pg in seq.pages[seq.owned_from:]:
@@ -495,6 +795,58 @@ class _ShardEngine:
         seq.req._progress.set()
         seq.req.done.set()
 
+    def warm_packed(self) -> None:
+        """Pre-compile every packed-prefill segment bucket (1, 2, 4, ...,
+        max_batch) with an all-padding chunk: padding lanes drop their K/V
+        writes and the emitted tokens are discarded, so this is a pure
+        jit-cache warm — safe on a live engine (serialised with steps by
+        the step lock).  No-op under a non-packing scheduler.  Latency-
+        sensitive deployments call this before opening the doors; the
+        serving benchmark calls it so bucket compiles don't masquerade as
+        serving time."""
+        if not getattr(self.scheduler, "packs", False):
+            return
+        lanes_max = self.config.prefill_chunk_tokens + self.max_batch
+        toks = jnp.zeros((1, lanes_max), jnp.int32)
+        segs = jnp.full((lanes_max,), -1, jnp.int32)
+        poss = jnp.zeros((lanes_max,), jnp.int32)
+        with self._step_lock:
+            if self.config.backend == "xla":
+                # flat path: one jit variant per page-count bucket
+                lanes = jnp.stack([
+                    toks[0], segs, poss,
+                    jnp.full((lanes_max,), self.config.num_pages,
+                             jnp.int32),
+                    jnp.zeros((lanes_max,), jnp.int32)])
+                emit = jnp.full((self.max_batch,), lanes_max, jnp.int32)
+                p_b, p_top = 8, self.max_batch * self.max_pages
+                while True:
+                    pages = jnp.stack([
+                        jnp.zeros((p_b,), jnp.int32),
+                        jnp.full((p_b,), -1, jnp.int32),
+                        jnp.zeros((p_b,), jnp.int32)])
+                    out, self.k_pages, self.v_pages = self._packed_flat(
+                        self.params, self.k_pages, self.v_pages, lanes,
+                        pages, emit)
+                    jax.block_until_ready(out)
+                    if p_b >= p_top:
+                        break
+                    p_b *= 2
+                return
+            # pallas backends: one jit variant per segment bucket
+            n_b = 1
+            while True:
+                out, self.k_pages, self.v_pages = self._prefill_packed(
+                    self.params, self.k_pages, self.v_pages, toks,
+                    segs, poss,
+                    jnp.zeros((n_b, self.max_pages), jnp.int32),
+                    jnp.zeros((n_b,), jnp.int32),
+                    jnp.full((n_b,), lanes_max, jnp.int32))
+                jax.block_until_ready(out)
+                if n_b >= self.max_batch:
+                    break
+                n_b = min(self.max_batch, n_b * 2)
+
     def step(self) -> bool:
         """One engine iteration; returns False when idle."""
         with self._step_lock:
@@ -513,33 +865,47 @@ class _ShardEngine:
         # prefill phase: at most prefill_chunk_tokens of prompt ingestion,
         # divided by the scheduler policy — the ITL bound for everyone
         # already decoding is one chunk, never one prompt
+        decoded = None
+        batch_seqs = []
         if self._prefilling:
             plan = self.scheduler.plan(
                 list(self._prefilling), self.config.prefill_chunk_tokens,
                 self.page_size)
-            for seq, grant in plan:
-                if grant > 0:
-                    self._advance_prefill(seq, grant)
+            if getattr(self.scheduler, "packs", False):
+                # packed path: the WHOLE plan rides one fixed-shape chunk,
+                # and the step's decode batch rides it too (fused step) —
+                # sequences activated DURING this call decode next step
+                batch_seqs = list(self._active)
+                decoded = self._advance_packed(plan, batch_seqs)
+            else:
+                for seq, grant in plan:
+                    if grant > 0:
+                        self._advance_prefill(seq, grant)
         # decode phase: one token for every decoding sequence.  Rows beyond
         # the active set are padding — masked out of attention and their
-        # K/V writes dropped (no scratch page, no reserved id).
-        if self._active:
+        # K/V writes dropped (no scratch page, no reserved id).  When the
+        # fused packed chunk already produced this step's decode tokens,
+        # consume those instead of a second device call.
+        if decoded is None and self._active:
+            batch_seqs = list(self._active)
             bt = np.zeros((self.max_batch, self.max_pages), np.int32)
             ctx = np.ones((self.max_batch,), np.int32)
             toks = np.zeros((self.max_batch,), np.int32)
             occ = np.zeros((self.max_batch,), bool)
-            for i, seq in enumerate(self._active):
+            for i, seq in enumerate(batch_seqs):
                 bt[i, :] = seq.page_row
                 ctx[i] = len(seq.tokens)
                 toks[i] = seq.tokens[-1]
                 occ[i] = True
-            next_toks, self.k_pages, self.v_pages = self._decode(
+            decoded, self.k_pages, self.v_pages = self._decode(
                 self.params, self.k_pages, self.v_pages,
                 jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(toks),
                 jnp.asarray(occ))
-            next_toks = np.asarray(next_toks)
+            decoded = np.asarray(decoded)
+        if decoded is not None:
+            next_toks = decoded
             done = []
-            for i, seq in enumerate(self._active):
+            for i, seq in enumerate(batch_seqs):
                 self._emit(seq, int(next_toks[i]))
                 seq.new_tokens += 1
                 if seq.new_tokens >= seq.req.max_new_tokens \
@@ -616,6 +982,13 @@ class _ShardEngine:
             "completed": self.n_completed,
             "cancelled": self.n_cancelled,
             "failed": self.n_failed,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens_wasted": self.prefill_tokens_wasted,
+            "packed_chunks": self.packed_chunks,
+            "packed_segments": self.packed_segments,
+            "packed_segments_per_chunk": (
+                self.packed_segments / self.packed_chunks
+                if self.packed_chunks else 0.0),
         }
 
 

@@ -28,6 +28,12 @@ chunked, never whether decoders advance (DESIGN.md §12):
 * ``roundrobin`` — the budget is split evenly (page-multiple floor, at
   least one page each while budget lasts) across all prefilling sequences,
   trading head-of-line TTFT for equal prompt progress.
+* ``packed`` — chunked's head-of-line-with-spill grants, PLUS the
+  ``packs`` marker: the engine packs the whole plan into ONE fixed-shape
+  ``(1, C)`` chunk call with per-lane segment ids (MaxText MLPerf
+  offline-serving style) instead of one kernel call per sequence, so a
+  wave of short prompts shares a chunk instead of each wasting most of one
+  (DESIGN.md §13).
 """
 
 from __future__ import annotations
@@ -58,6 +64,7 @@ __all__ = [
     "ChunkedPrefill",
     "OneShotPrefill",
     "RoundRobinPrefill",
+    "PackedPrefill",
     "SCHEDULER_POLICIES",
     "scheduler_policies",
     "as_scheduler_policy",
@@ -190,6 +197,10 @@ class SchedulerPolicy:
     Called with the shard's step lock held — no locking of its own."""
 
     name = "base"
+    # packing marker: True → the engine executes the WHOLE plan as packed
+    # fixed-shape chunks (one kernel call carrying several segments) via
+    # the packed-prefill path; False → one chunk-call loop per sequence
+    packs = False
 
     def plan(self, prefilling: Sequence, budget: int,
              page_size: int) -> List[Tuple[object, int]]:
@@ -259,9 +270,25 @@ class RoundRobinPrefill(SchedulerPolicy):
         return plan
 
 
+class PackedPrefill(ChunkedPrefill):
+    """Packed multi-prompt prefill: grants exactly like ``chunked``
+    (head-of-line with spill — the grant invariants are identical), but the
+    ``packs`` marker makes the engine pack every granted sequence into one
+    fixed-shape ``(1, C)`` chunk using sequence-indicator segment masks.
+    The budget then buys C tokens of *aggregate* prompt progress per kernel
+    call, not per sequence: a wave of short prompts admits in a single
+    chunk, and the chunk-budget waste a short prompt used to leave as
+    padding lanes is filled by its neighbours (the
+    ``prefill_tokens_wasted`` / ``packed_segments_per_chunk`` counters in
+    ``stats()`` make this observable)."""
+
+    name = "packed"
+    packs = True
+
+
 SCHEDULER_POLICIES = {
     cls.name: cls for cls in (ChunkedPrefill, OneShotPrefill,
-                              RoundRobinPrefill)
+                              RoundRobinPrefill, PackedPrefill)
 }
 
 

@@ -242,6 +242,13 @@ class ServingSession:
     def start(self) -> None:
         self.engine.start()
 
+    def warm(self) -> None:
+        """Pre-compile the packed-prefill segment buckets on every shard
+        (no-op under non-packing schedulers) so jit cost never lands on a
+        live request's latency.  Safe before or after :meth:`start`."""
+        for shard in self.engine.shards:
+            shard.warm_packed()
+
     def close(self, drain: bool = True, timeout: float = 30.0) -> None:
         if self._closed:
             return
@@ -317,7 +324,16 @@ class ServingSession:
                                   for s in shards),
             "smr_retired": sum(s["smr"]["retired"] for s in shards),
             "smr_reclaimed": sum(s["smr"]["reclaimed"] for s in shards),
+            "prefill_chunks": sum(s["prefill_chunks"] for s in shards),
+            "prefill_tokens_wasted": sum(s["prefill_tokens_wasted"]
+                                         for s in shards),
+            "packed_chunks": sum(s["packed_chunks"] for s in shards),
+            "packed_segments": sum(s["packed_segments"] for s in shards),
         }
+        # chunk-weighted mean across shards (NOT a mean of per-shard means)
+        totals["packed_segments_per_chunk"] = (
+            totals["packed_segments"] / totals["packed_chunks"]
+            if totals["packed_chunks"] else 0.0)
         if self.config.shard_smr == "shared":
             # one scheme instance spans every shard: its counters (and the
             # scheme-global awaiting_reclaim each pool reports) would be

@@ -128,6 +128,55 @@ if HAVE_HYPOTHESIS:
                                    rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("num_splits", [None, 1, 2, 3, 4])
+@pytest.mark.parametrize("shape", [
+    # (B, H, Hkv, D, n_phys, page, n_pages)
+    (2, 4, 2, 32, 16, 8, 4),
+    (1, 16, 2, 64, 8, 8, 8),
+    (3, 8, 8, 16, 32, 16, 6),   # n_pages not divisible by splits 4
+])
+def test_paged_attention_split_k_sweep(num_splits, shape):
+    """Flash-decoding split-K: any split factor (including ones that do NOT
+    divide the page count — the last split runs ragged) must reproduce the
+    oracle bit-for-bit after the on-device max/sum combine."""
+    b, h, hkv, d, nphys, page, npg = shape
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (nphys, page, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (nphys, page, hkv, d), jnp.float32)
+    bt = jax.random.randint(ks[3], (b, npg), 0, nphys)
+    cl = jax.random.randint(ks[4], (b,), 1, npg * page + 1)
+    out = paged_attention(q, kp, vp, bt, cl, num_splits=num_splits,
+                          interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, cl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("num_splits", [1, 2, 3])
+def test_paged_attention_split_k_occupancy(num_splits):
+    """Native occupancy × split-K: padded rows (aliasing live rows' pages)
+    stay exactly zero whatever the split factor — every split's partial for
+    a dead row is dead, and the combine must not resurrect it."""
+    b, h, hkv, d, nphys, page, npg = 4, 4, 2, 16, 8, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(12), 5)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (nphys, page, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (nphys, page, hkv, d), jnp.float32)
+    bt = jax.random.randint(ks[3], (b, npg), 0, nphys)
+    bt = bt.at[1].set(bt[0]).at[3].set(bt[2])
+    cl = jax.random.randint(ks[4], (b,), 1, npg * page + 1)
+    occ = jnp.asarray([True, False, True, False])
+    out = np.asarray(paged_attention(q, kp, vp, bt, cl, occupancy=occ,
+                                     num_splits=num_splits, interpret=True),
+                     np.float32)
+    assert np.all(out[~np.asarray(occ)] == 0.0), "padded rows leaked output"
+    assert np.all(np.isfinite(out))
+    want = ref.paged_attention_ref(q, kp, vp, bt, cl, occupancy=occ)
+    np.testing.assert_allclose(out, np.asarray(want, np.float32),
+                               rtol=3e-5, atol=3e-5)
+
+
 @pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
 def test_paged_attention_occupancy_mask(backend):
     """The serving engine's decode-batch padding: rows with occupancy=False
@@ -185,3 +234,70 @@ def test_ops_dispatch():
                             block_q=32, block_k=32)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=3e-5, atol=3e-5)
+
+
+def test_ops_explicit_pallas_raises_on_bad_shapes():
+    """Dispatch honesty: an EXPLICIT backend='pallas*' request whose shapes
+    the kernel cannot take must raise — never silently run the jnp
+    reference (the silent fallback is how 'the TPU run was slow' hides)."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    # seq_len 33 is not divisible by any block_q the wrapper would pick
+    q = jax.random.normal(ks[0], (1, 33, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 33, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 33, 2, 16), jnp.float32)
+    with pytest.raises(ValueError, match="explicitly requested"):
+        ops.flash_attention(q, k, v, backend="pallas_interpret", block_q=32)
+    x = jax.random.normal(ks[0], (1, 33, 4, 8), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 33, 4)))
+    a = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.5)
+    bb = jax.random.normal(ks[1], (1, 33, 1, 8), jnp.float32)
+    with pytest.raises(ValueError, match="explicitly requested"):
+        ops.ssd(x, dt, a, bb, bb, chunk=32, backend="pallas_interpret")
+
+
+def test_ops_default_pallas_warns_once_on_fallback():
+    """When pallas is only the SESSION default, the reference fallback still
+    happens but warns once per (op, reason) — visible, not fatal."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 35, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 35, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 35, 2, 16), jnp.float32)
+    old = ops.default_backend()
+    ops.set_default_backend("pallas_interpret")
+    try:
+        ops._FALLBACKS_WARNED.clear()
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            first = ops.flash_attention(q, k, v, block_q=32)
+        # second identical call: same (op, reason) key — no second warning
+        import warnings as _warnings
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error")
+            again = ops.flash_attention(q, k, v, block_q=32)
+    finally:
+        ops.set_default_backend(old)
+        ops._FALLBACKS_WARNED.clear()
+    np.testing.assert_allclose(np.asarray(first), np.asarray(again))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas_interpret"])
+def test_packed_prefill_ops_backends_agree(backend):
+    """ops.packed_prefill_attention: both backends match the oracle on a
+    mixed chunk (3 segments + padding tail)."""
+    c, h, hkv, d, nphys, page, npg = 16, 4, 2, 16, 12, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    q = jax.random.normal(ks[0], (c, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (nphys, page, hkv, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (nphys, page, hkv, d), jnp.float32)
+    rows = jax.random.randint(ks[3], (3, npg), 0, nphys)
+    lens = (5, 6, 3)
+    seg = jnp.asarray(sum(([i] * n for i, n in enumerate(lens)), [])
+                      + [-1, -1], jnp.int32)
+    pos = jnp.asarray(sum((list(range(page, page + n)) for n in lens), [])
+                      + [0, 0], jnp.int32)
+    ctx = jnp.asarray([page + n for n in lens], jnp.int32)
+    out = np.asarray(ops.packed_prefill_attention(
+        q, kp, vp, rows, seg, pos, ctx, backend=backend), np.float32)
+    want = ref.packed_prefill_attention_ref(q, kp, vp, rows, seg, pos, ctx)
+    np.testing.assert_allclose(out, np.asarray(want, np.float32),
+                               rtol=3e-5, atol=3e-5)
+    assert np.all(out[sum(lens):] == 0.0), "padding lanes leaked output"

@@ -86,7 +86,8 @@ def test_registry_names_snapshot():
                                         "waitfree"]
     assert api.admission_policies() == ["fifo", "priority"]
     assert api.eviction_policies() == ["fifo", "pressure", "lru"]
-    assert api.scheduler_policies() == ["chunked", "oneshot", "roundrobin"]
+    assert api.scheduler_policies() == ["chunked", "oneshot", "roundrobin",
+                                        "packed"]
 
 
 def test_scheme_capability_snapshot():

@@ -1,6 +1,6 @@
 """Serving-policy registries and runtime satellites — no model required:
 admission ordering (fifo/priority), scheduler budget division
-(chunked/oneshot/roundrobin), eviction victim order (fifo/pressure/lru via
+(chunked/oneshot/roundrobin/packed), eviction victim order (fifo/pressure/lru via
 the NM-tree ordered index), ServingConfig validation, PrefixRouter
 placement, BlockPool.reserve, and NMTree.min_key."""
 
@@ -86,7 +86,8 @@ def _fake_seq(prompt_len, filled=0):
 
 
 def test_scheduler_policy_registry():
-    assert scheduler_policies() == ["chunked", "oneshot", "roundrobin"]
+    assert scheduler_policies() == ["chunked", "oneshot", "roundrobin",
+                                   "packed"]
     assert api.scheduler_policies() == scheduler_policies()
     with pytest.raises(ValueError, match="unknown scheduler"):
         as_scheduler_policy("nope")
@@ -110,6 +111,26 @@ def test_chunked_plan_head_of_line_and_spill():
     # below one page: nothing advances (never a misaligned boundary)
     assert pol.plan([a, b], 2, 4) == []
     assert pol.plan([], 16, 4) == []
+
+
+def test_packed_plan_is_chunked_plus_packs_marker():
+    """The packed policy grants exactly like chunked (identical invariants:
+    page-aligned non-finishing grants, sum ≤ budget) — what changes is the
+    ``packs`` flag telling the engine to execute the plan as ONE
+    multi-segment chunk instead of one chunk call per sequence."""
+    pol = as_scheduler_policy("packed")
+    ch = as_scheduler_policy("chunked")
+    a = _fake_seq(24, filled=4)
+    b = _fake_seq(7)
+    for budget in (2, 16, 24, 32):
+        got = pol.plan([a, b], budget, 4)
+        want = ch.plan([a, b], budget, 4)
+        assert [(id(s), g) for s, g in got] == \
+            [(id(s), g) for s, g in want], budget
+    assert pol.packs is True
+    # every other policy keeps the per-sequence loop
+    for name in ("chunked", "oneshot", "roundrobin"):
+        assert as_scheduler_policy(name).packs is False, name
 
 
 def test_oneshot_plan_ignores_budget():
