@@ -171,3 +171,69 @@ def bench_serving(quick=True):
         yield (f"serving/sharded-s{shards},"
                f"{best_dt / max(best_toks, 1) * 1e6:.1f},"
                f"tok_s={best_tok_s:.1f};hits={best_hits}{scale}")
+
+    # fault-tolerance acceptance rows (DESIGN.md §14): the same router-
+    # balanced mix on 2 shards — healthy, then with shard 0 stalled for
+    # roughly the middle third of the run, first with the watchdog off
+    # (stranded queue waits out the stall) and then with migration (the
+    # stalled shard's waiting + live sequences move to the healthy shard
+    # via the SMR-safe handoff).  The acceptance signal is `vs_healthy`
+    # on the stalled-shard row: aggregate throughput with migration must
+    # hold >= 0.8x the healthy baseline, with every request terminal.
+    stall_reqs = 288 if quick else 576
+    prompts_st = [prefixes[i % len(prefixes)] +
+                  list(rng.randint(1, 200, size=4))
+                  for i in range(stall_reqs)]
+
+    def _stall_run(faults, watchdog):
+        session = serving.serve(
+            model, params,
+            serving.ServingConfig(smr="IBR", num_shards=2, num_pages=512,
+                                  page_size=8, max_batch=16,
+                                  max_seq_len=64, watchdog=watchdog,
+                                  heartbeat_timeout_s=0.15,
+                                  watchdog_interval_s=0.03,
+                                  faults=faults))
+        _warmup(session)
+        # the warmup compiles run INSIDE steps (step lock held), so with a
+        # 0.15s heartbeat both shards look degraded right after warmup —
+        # wait for the watchdog to see post-compile beats and re-admit
+        # them before timing, else the wave routes onto one shard
+        deadline = time.perf_counter() + 10.0
+        while time.perf_counter() < deadline and \
+                any(s.degraded for s in session.engine.shards):
+            time.sleep(0.02)
+        st0 = session.stats()["totals"]
+        t0 = time.perf_counter()
+        handles = session.submit_many(prompts_st, max_new_tokens=24)
+        for h in handles:
+            h.wait(timeout=300)
+        dt = time.perf_counter() - t0
+        toks = sum(len(h.out_tokens) for h in handles)
+        terminal = all(h.done.is_set() for h in handles)
+        st = session.stats()["totals"]
+        session.close()
+        # counters as deltas over the timed window (warmup compiles can
+        # legitimately trigger migrations of the probe requests)
+        delta = {k: st[k] - st0.get(k, 0)
+                 for k in ("migrations", "failed_requests")}
+        return dt, toks, terminal, delta
+
+    dt_h, toks_h, term_h, _ = _stall_run(None, "migrate")
+    tok_s_h = toks_h / dt_h
+    yield (f"serving/stalled-healthy,{dt_h / max(toks_h, 1) * 1e6:.1f},"
+           f"tok_s={tok_s_h:.1f};terminal={int(term_h)}")
+    # deterministic trigger: fire after shard 0 completes its warmup
+    # request plus ~a third of its half of the wave; stall one healthy-
+    # baseline-third (floored well past the heartbeat timeout)
+    stall = (serving.FaultSpec(kind="stall", shard=0,
+                               after_done=1 + stall_reqs // 6,
+                               duration_s=max(0.5, dt_h / 3)),)
+    for name, wd in (("stalled-shard-nomig", "off"),
+                     ("stalled-shard", "migrate")):
+        dt, toks, term, st = _stall_run(stall, wd)
+        tok_s = toks / dt
+        yield (f"serving/{name},{dt / max(toks, 1) * 1e6:.1f},"
+               f"tok_s={tok_s:.1f};vs_healthy={tok_s / tok_s_h:.2f}x;"
+               f"migrations={st['migrations']:.0f};"
+               f"failed={st['failed_requests']:.0f};terminal={int(term)}")

@@ -62,6 +62,25 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--clients", type=int, default=3)
+    # fault tolerance (DESIGN.md §14)
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="KIND:K=V,...",
+                    help="schedule a chaos fault (repeatable), e.g. "
+                         "'stall:shard=0,after_done=4,duration_s=2' or "
+                         "'crash:shard=1,at_step=200'; kinds: "
+                         + ", ".join(api.fault_kinds()))
+    ap.add_argument("--watchdog", default="migrate",
+                    choices=["migrate", "observe", "off"],
+                    help="shard watchdog mode: degraded shards lose their "
+                         "router slot and (migrate) their sequences move "
+                         "to healthy shards via the SMR-safe handoff")
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="per-request deadline (expired requests are "
+                         "cancelled through the normal cancel path)")
+    ap.add_argument("--pace-s", type=float, default=0.0,
+                    help="per-client gap between submissions — stretches "
+                         "the run so mid-run faults land under live "
+                         "traffic")
     args = ap.parse_args()
 
     cfg = get_config("tinyllama-1.1b").reduced().replace(dtype="float32")
@@ -74,14 +93,18 @@ def main():
         admission=args.admission, eviction=args.eviction,
         scheduler=args.scheduler, backend=args.backend,
         prefill_chunk_tokens=args.chunk_tokens,
-        prefix_traversal=args.prefix_traversal)
+        prefix_traversal=args.prefix_traversal,
+        watchdog=args.watchdog,
+        default_timeout_s=args.timeout_s,
+        faults=tuple(args.fault) or None)
     with serving.serve(model, params, config) as session:
         res = run_serving_workload(
             session, n_requests=args.requests, clients=args.clients,
             shared_prefix_len=16, tail_len=4,
             distinct_prefixes=max(2, args.shards),
             max_new_tokens=args.max_new, wait_each=True,
-            long_prompts=args.long_prompts, long_prompt_len=192)
+            long_prompts=args.long_prompts, long_prompt_len=192,
+            pace_s=args.pace_s)
         stats = session.stats()
 
     print(f"scheme={args.smr} shards={args.shards} "
@@ -93,6 +116,11 @@ def main():
           f"prefix hits={res.prefix_hits}, "
           f"ttft_p99={res.ttft_p99_s * 1e3:.1f}ms, "
           f"itl_p99={res.itl_p99_s * 1e3:.1f}ms)")
+    if args.fault or res.migrations or res.failed:
+        print(f"faults: migrations={res.migrations} failed={res.failed} "
+              f"cancelled={res.cancelled} "
+              f"heartbeat_misses={res.heartbeat_misses} "
+              f"degraded_steps={res.degraded_steps}")
     print("totals:", stats["totals"])
     for shard in stats["shards"]:
         pc = shard["prefix_cache"]

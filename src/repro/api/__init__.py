@@ -83,6 +83,7 @@ __all__ = [
     "admission_policies",
     "eviction_policies",
     "scheduler_policies",
+    "fault_kinds",
     "scheme_info",
     "structure_info",
     "check",
@@ -110,6 +111,13 @@ def eviction_policies():
 def scheduler_policies():
     """Chunked-prefill scheduler-policy names (registry query)."""
     from ..serving.policies import scheduler_policies as _q
+    return _q()
+
+
+def fault_kinds():
+    """Chaos-injection fault kinds (registry query — the serving fault
+    plan, ``ServingConfig.faults`` / ``serve_paged --fault``)."""
+    from ..serving.faults import fault_kinds as _q
     return _q()
 
 

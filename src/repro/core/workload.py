@@ -218,6 +218,13 @@ class ServingWorkloadResult:
     itl_p99_s: float = 0.0              # the chunked-prefill headline: one
     #                                     admitted long prompt must not push
     #                                     this past ~one chunk's work
+    # fault-tolerance surface (serving sessions with a watchdog; zeros for
+    # duck-typed sessions without the totals counters)
+    failed: int = 0                     # requests terminally failed
+    cancelled: int = 0                  # incl. deadline-expired requests
+    migrations: int = 0                 # completed live handoffs
+    heartbeat_misses: int = 0
+    degraded_steps: int = 0
     session_stats: Dict = field(default_factory=dict)
 
     def row(self) -> str:
@@ -241,6 +248,7 @@ def run_serving_workload(
     prompts: Optional[List[List[int]]] = None,
     long_prompts: int = 0,
     long_prompt_len: int = 0,
+    pace_s: float = 0.0,
 ) -> ServingWorkloadResult:
     """Drive a serving session with concurrent client threads — the serving
     analogue of :func:`run_workload` (one shared request-mix loop instead of
@@ -266,6 +274,13 @@ def run_serving_workload(
     shared-prefix requests, so their prefill lands while other sequences
     decode — the configuration whose TTFT and p99 inter-token latency
     :mod:`benchmarks.bench_serving` reports.
+
+    ``pace_s`` is the fault-schedule mode: each client sleeps that long
+    between submissions, stretching the run so a mid-run fault
+    (``ServingConfig.faults`` — a stalled shard, say) lands while traffic
+    is still ARRIVING, not after everything queued up front.  The result's
+    ``failed``/``cancelled``/``migrations``/``heartbeat_misses``/
+    ``degraded_steps`` fields then show what the watchdog did about it.
     """
     rng = random.Random(seed)
     if prompts is None:
@@ -299,6 +314,8 @@ def run_serving_workload(
                 local.append(h)
                 if wait_each:
                     h.done.wait(timeout=timeout_s)
+                if pace_s:
+                    time.sleep(pace_s)
         except BaseException as e:       # surfaced after join — a silently
             with hlock:                  # dead client would otherwise just
                 errors.append(e)         # shrink the reported request count
@@ -323,9 +340,9 @@ def run_serving_workload(
     tokens = sum(len(h.out_tokens) for h in handles)
     incomplete = sum(0 if h.done.is_set() else 1 for h in handles)
     stats = session.stats() if hasattr(session, "stats") else {}
-    hits = stats.get("totals", {}).get("prefix_hits",
-                                       stats.get("prefix_cache",
-                                                 {}).get("hits", 0))
+    totals = stats.get("totals", {})
+    hits = totals.get("prefix_hits",
+                      stats.get("prefix_cache", {}).get("hits", 0))
     # latency aggregation off the handles' Request timestamps (duck-typed:
     # a session whose handles don't expose ttft()/itl() reports zeros)
     ttfts = sorted(t for t in (h.ttft() for h in handles
@@ -342,5 +359,10 @@ def run_serving_workload(
         ttft_p99_s=_pctl(ttfts, 0.99),
         itl_avg_s=sum(itls) / len(itls) if itls else 0.0,
         itl_p99_s=_pctl(itls, 0.99),
+        failed=int(totals.get("failed", 0)),
+        cancelled=int(totals.get("cancelled", 0)),
+        migrations=int(totals.get("migrations", 0)),
+        heartbeat_misses=int(totals.get("heartbeat_misses", 0)),
+        degraded_steps=int(totals.get("degraded_steps", 0)),
         session_stats=stats,
     )

@@ -88,6 +88,9 @@ class BlockPool:
         self.n_alloc = AtomicInt(0)
         self.n_retired = AtomicInt(0)
         self.n_reclaimed = AtomicInt(0)
+        # cross-domain sequence handoffs (live migration, DESIGN.md §14)
+        self.n_handoff_in = AtomicInt(0)
+        self.n_handoff_out = AtomicInt(0)
 
     # ------------------------------------------------------------ alloc
     def alloc(self, seq_id: Optional[int] = None) -> PageNode:
@@ -155,6 +158,30 @@ class BlockPool:
                     and not page._retired and not page.is_freed:
                 self.smr.retire(page)
 
+    # ------------------------------------------------- cross-domain handoff
+    def import_claim(self, pages: List[PageNode]) -> None:
+        """Target side of an SMR-safe cross-domain sequence handoff
+        (DESIGN.md §14).  ``pages`` are THIS pool's pages, already pinned
+        for the migrating sequence (the prefix-cache lookup pinned them);
+        this records the adoption.  Must happen BEFORE the source pool's
+        :meth:`export_claim` — between the two calls both domains pin the
+        sequence's pages, so there is no window where neither does."""
+        self.n_handoff_in.fetch_add(1)
+
+    def export_claim(self, hit_pages: List[PageNode],
+                     owned_pages: List[PageNode]) -> None:
+        """Source side of the handoff: retire THIS domain's claim on a
+        migrated sequence — owned pages released, admission hit pins
+        dropped.  Safe to run from the watchdog thread: retire defers to
+        this pool's own SMR scheme, and a PageNode never leaves its pool,
+        so the target domain's pins (taken first, on the target's own
+        nodes) are invisible to — and untouchable by — this reclamation."""
+        for pg in owned_pages:
+            self.release(pg)
+        for pg in hit_pages:
+            self.unpin(pg)
+        self.n_handoff_out.fetch_add(1)
+
     def _reclaim(self, node: PageNode) -> None:
         # one SMR instance governs pages AND the index structures that
         # reference them (prefix-cache list nodes); only pages route here
@@ -181,4 +208,6 @@ class BlockPool:
             "retired": self.n_retired.load(),
             "reclaimed": self.n_reclaimed.load(),
             "awaiting_reclaim": self.smr.not_yet_reclaimed(),
+            "handoff_in": self.n_handoff_in.load(),
+            "handoff_out": self.n_handoff_out.load(),
         }

@@ -2,12 +2,15 @@
 
 Sessions (:func:`serve` → :class:`ServingSession` → :class:`RequestHandle`)
 over sharded, SMR-isolated engines; named admission/eviction policies; the
-legacy :class:`PagedServingEngine` kwargs survive one release as
+fault registry (:class:`FaultSpec` / :func:`parse_fault`) and the session
+watchdog behind ``ServingConfig.watchdog`` (DESIGN.md §14); the legacy
+:class:`PagedServingEngine` kwargs survive one release as
 ``DeprecationWarning`` shims over :class:`ServingConfig`.
 """
 
 from .config import ServingConfig
 from .engine import PagedServingEngine, Request
+from .faults import FaultSpec, fault_kinds, parse_fault
 from .policies import (
     admission_policies,
     as_admission_policy,
@@ -23,6 +26,7 @@ from .session import (
     ShardedEngine,
     serve,
 )
+from .watchdog import SessionWatchdog
 
 __all__ = [
     "serve",
@@ -33,6 +37,10 @@ __all__ = [
     "PrefixRouter",
     "Request",
     "PagedServingEngine",
+    "SessionWatchdog",
+    "FaultSpec",
+    "fault_kinds",
+    "parse_fault",
     "admission_policies",
     "eviction_policies",
     "scheduler_policies",

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from .. import api
 
@@ -72,7 +72,37 @@ class ServingConfig:
 
     # -- loop pacing -------------------------------------------------------
     poll_s: float = 0.005               # engine-thread idle sleep
-    janitor_interval_s: float = 0.02    # session janitor sweep period
+    janitor_interval_s: float = 0.02    # pressure-sweep period (watchdog)
+
+    # -- fault tolerance (DESIGN.md §14) -----------------------------------
+    # watchdog mode: "migrate" (default — degraded shards lose their router
+    # slot AND their queued/prefilling/active sequences are live-migrated
+    # to healthy shards), "observe" (degrade + stop routing only), "off"
+    # (PR-6 behavior: a stalled shard strands its requests; the pressure
+    # sweep still runs).
+    watchdog: str = "migrate"
+    # a shard whose engine loop hasn't beaten for this long is degraded.
+    # The default is deliberately generous: a first-traffic jit compile
+    # happens INSIDE one step and must not read as a stall on a slow CI
+    # box — chaos tests and the stalled-shard bench override it downwards.
+    heartbeat_timeout_s: float = 10.0
+    watchdog_interval_s: float = 0.05   # heartbeat-check period
+    # live-sequence steal: step-lock acquisition timeout starts here and
+    # doubles per failed sweep; after max_retries the crash path fails the
+    # stranded handles out instead of letting clients hang.  The total
+    # lock-wait budget is backoff * (2^retries - 1) — ~12.8s at the
+    # defaults, sized to outlast a jit compile (which runs INSIDE a step,
+    # holding the step lock: a shard mid-compile looks exactly like one
+    # wedged in a step, and must not get its requests failed out)
+    migration_backoff_s: float = 0.05
+    migration_max_retries: int = 8
+    # per-request deadline applied when submit() passes no timeout_s;
+    # None = requests never expire (the pre-ISSUE-7 behavior)
+    default_timeout_s: Optional[float] = None
+    # chaos injection: a tuple of FaultSpec (or "kind:k=v,..." strings,
+    # normalized at construction) — the seeded, reproducible fault plan
+    # executed by each shard's engine loop (serving/faults.py)
+    faults: Optional[Tuple] = None
 
     def __post_init__(self):
         from .policies import (  # late: avoids a cycle
@@ -122,6 +152,32 @@ class ServingConfig:
             raise ValueError(
                 f"unknown backend {self.backend!r}; choose from "
                 f"('xla', 'pallas', 'pallas_interpret')")
+        if self.watchdog not in ("migrate", "observe", "off"):
+            raise ValueError(f"unknown watchdog mode {self.watchdog!r}; "
+                             f"choose from ('migrate', 'observe', 'off')")
+        if self.heartbeat_timeout_s <= 0 or self.watchdog_interval_s <= 0:
+            raise ValueError("heartbeat_timeout_s and watchdog_interval_s "
+                             "must be > 0")
+        if self.migration_backoff_s <= 0 or self.migration_max_retries < 1:
+            raise ValueError("need migration_backoff_s > 0 and "
+                             "migration_max_retries >= 1")
+        if self.default_timeout_s is not None and \
+                self.default_timeout_s <= 0:
+            raise ValueError(f"default_timeout_s must be > 0 or None, got "
+                             f"{self.default_timeout_s}")
+        if self.faults is not None:
+            from .faults import FaultSpec, parse_fault  # late: avoids cycle
+            specs = tuple(parse_fault(s) if isinstance(s, str) else s
+                          for s in self.faults)
+            for s in specs:
+                if not isinstance(s, FaultSpec):
+                    raise ValueError(f"faults entries must be FaultSpec or "
+                                     f"'kind:k=v' strings, got {s!r}")
+                if s.shard >= self.num_shards:
+                    raise ValueError(
+                        f"fault {s.kind!r} targets shard {s.shard} but the "
+                        f"session has {self.num_shards} shard(s)")
+            object.__setattr__(self, "faults", specs)
 
     # ---------------------------------------------------------------- utils
     @property
@@ -155,4 +211,8 @@ class ServingConfig:
             "backend": self.backend,
             "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "prefix_traversal": self.prefix_traversal,
+            "watchdog": self.watchdog,
+            "default_timeout_s": self.default_timeout_s,
+            "faults": tuple(f"{s.kind}@{s.shard}" for s in self.faults)
+            if self.faults else (),
         }

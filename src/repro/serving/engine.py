@@ -44,6 +44,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+import traceback
 import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
@@ -59,6 +60,7 @@ from ..models.transformer import _qkv
 from ..runtime.block_pool import BlockPool, PageNode
 from ..runtime.prefix_cache import PrefixCache
 from .config import ServingConfig
+from .faults import build_fault_line
 from .policies import as_admission_policy, as_scheduler_policy
 
 
@@ -67,6 +69,15 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     priority: int = 0               # consumed by the 'priority' admission
+    # per-request deadline: timeout_s resolves at submit() (falling back
+    # to ServingConfig.default_timeout_s); deadline is the absolute
+    # perf_counter stamp — set once, kept across migration (a request
+    # does not get a fresh budget by moving shards)
+    timeout_s: Optional[float] = None
+    deadline: Optional[float] = None
+    # terminal diagnostics (crash tracebacks, migration failures,
+    # deadline expiry) — surfaced by RequestHandle.result()
+    error: Optional[str] = None
     req_id: int = field(default_factory=itertools.count().__next__)
     out_tokens: List[int] = field(default_factory=list)
     done: threading.Event = field(default_factory=threading.Event)
@@ -174,6 +185,17 @@ class _ShardEngine:
         self.prefill_tokens_wasted = 0
         self.packed_chunks = 0
         self.packed_segments = 0
+        # fault tolerance (DESIGN.md §14): the shard's scheduled faults,
+        # its loop heartbeat, and the recovery counters stats() exposes
+        self.fault_line = build_fault_line(config.faults, shard_id)
+        self.beat = 0               # bumped once per run()-loop iteration
+        self.crashed = False        # engine-thread-owned (crash guard)
+        self.degraded = False       # watchdog-owned
+        self.error: Optional[str] = None
+        self.heartbeat_misses = 0
+        self.degraded_steps = 0
+        self.n_migrated_in = 0
+        self.n_migrated_out = 0
 
     # ---------------------------------------------------------- client API
     def _attach_hit(self, req: Request, pages: List[PageNode],
@@ -194,8 +216,18 @@ class _ShardEngine:
         req._hit_pages, req._hit_tokens = pages, n_tok
 
     def _check_open(self):
+        if self.crashed:
+            head = self.error.strip().splitlines()[-1] if self.error else ""
+            raise RuntimeError(f"shard {self.shard_id} crashed ({head}); "
+                               f"no new submissions")
         if self._stop.is_set():
             raise RuntimeError("engine is stopped; no new submissions")
+
+    def _stamp_deadline(self, req: Request) -> None:
+        t = req.timeout_s if req.timeout_s is not None \
+            else self.config.default_timeout_s
+        if t is not None and req.deadline is None:
+            req.deadline = req.t_submit + t
 
     def _validate(self, req: Request) -> None:
         if not req.prompt:
@@ -214,6 +246,7 @@ class _ShardEngine:
         self._check_open()
         self._validate(req)
         req.t_submit = time.perf_counter()
+        self._stamp_deadline(req)
         pages, n_tok = self.prefix_cache.lookup(req.prompt)
         self._attach_hit(req, pages, n_tok)
         with self._wlock:
@@ -247,6 +280,7 @@ class _ShardEngine:
         now = time.perf_counter()
         for req in reqs:
             req.t_submit = now
+            self._stamp_deadline(req)
         hits = self.prefix_cache.lookup_many([r.prompt for r in reqs])
         for req, (pages, n_tok) in zip(reqs, hits):
             self._attach_hit(req, pages, n_tok)
@@ -262,6 +296,53 @@ class _ShardEngine:
     def waiting_count(self) -> int:
         with self._wlock:
             return len(self._waiting)
+
+    # ----------------------------------------------------- migration API
+    # (watchdog-thread entry points; protocol in DESIGN.md §14 and the
+    # serving/watchdog.py module docstring)
+    def steal_waiting(self) -> List[Request]:
+        """Drain a degraded shard's waiting queue.  Queue-lock only —
+        safe whatever the (possibly wedged) engine thread is doing."""
+        with self._wlock:
+            return self.admission.drain(self._waiting)
+
+    def steal_live(self, timeout: float) -> Optional[List["_Seq"]]:
+        """Take ownership of the live (prefilling + active) sequences.
+        Needs the step lock — a shard stalled INSIDE a step still owns
+        its lists and its device buffers; returns ``None`` when the lock
+        cannot be had within ``timeout`` (the watchdog backs off
+        exponentially and eventually fails the handles out)."""
+        if not self._step_lock.acquire(timeout=timeout):
+            return None
+        try:
+            seqs = self._prefilling + self._active
+            self._prefilling = []
+            self._active = []
+            return seqs
+        finally:
+            self._step_lock.release()
+
+    def receive_migrated(self, req: Request) -> Request:
+        """Adopt a migrated request: pin THIS domain's prefix hit for the
+        (replayed) prompt, record the handoff, and enqueue.  The caller
+        retires the SOURCE domain's claim only after this returns — so
+        between lookup-pin here and export there, both domains pin, and
+        at no instant does neither.  ``t_submit``/``deadline`` are kept:
+        migration does not grant a fresh time budget."""
+        self._check_open()
+        self._validate(req)
+        pages, n_tok = self.prefix_cache.lookup(req.prompt)
+        self._attach_hit(req, pages, n_tok)
+        self.pool.import_claim(req._hit_pages)
+        req.status = "waiting"
+        with self._wlock:
+            stopped = self._stop.is_set()  # see submit(): drain-vs-push race
+            if not stopped:
+                self.admission.push(self._waiting, req)
+        if stopped:
+            self._drop_hits([req])
+        self.n_migrated_in += 1
+        return req
 
     # ------------------------------------------------------------- device fns
     def _layer_params(self, i):
@@ -519,6 +600,38 @@ class _ShardEngine:
             k_pages, v_pages
 
     # ------------------------------------------------------------- engine
+    def _fault_dispatch(self) -> None:
+        """Chaos hook immediately before a device dispatch (the ``delay``
+        kind: a slow device, not a dead thread)."""
+        if self.fault_line is not None:
+            self.fault_line.on_dispatch(self)
+
+    def _sweep_deadlines(self) -> None:
+        """Per-request deadlines, enforced through the EXISTING cancel
+        path: waiting requests are purged and failed out immediately (a
+        full decode batch must not hide an expired request until its
+        admission turn), live ones get their ``cancelled`` event set and
+        the step loop reaps them exactly like a client cancel."""
+        now = time.perf_counter()
+        with self._wlock:
+            expired = self.admission.purge(
+                self._waiting,
+                lambda r: r.cancelled.is_set() or
+                (r.deadline is not None and now > r.deadline))
+        for req in expired:
+            if not req.cancelled.is_set():
+                req.error = (f"deadline exceeded after "
+                             f"{now - req.t_submit:.3f}s (waiting)")
+                req.cancelled.set()
+            self._fail_out(req, "cancelled")
+        for seq in self._prefilling + self._active:
+            req = seq.req
+            if req.deadline is not None and now > req.deadline \
+                    and not req.cancelled.is_set():
+                req.error = (f"deadline exceeded after "
+                             f"{now - req.t_submit:.3f}s ({req.status})")
+                req.cancelled.set()
+
     def _fail_out(self, req: Request, status: str) -> None:
         """Drop a request that will never run: give back its hit pins."""
         for pg in req._hit_pages:
@@ -597,6 +710,7 @@ class _ShardEngine:
             n_valid = min(chunk, end - seq.filled)
             buf = np.zeros((1, chunk), np.int32)
             buf[0, :n_valid] = req.prompt[seq.filled:seq.filled + n_valid]
+            self._fault_dispatch()
             tok, self.k_pages, self.v_pages = self._prefill(
                 self.params, self.k_pages, self.v_pages,
                 jnp.asarray(buf), jnp.asarray(seq.page_row),
@@ -727,6 +841,7 @@ class _ShardEngine:
             self.packed_segments += len(members)
             self.prefill_tokens_wasted += chunk - (lane - n_riders)
             total = len(members) + n_riders
+            self._fault_dispatch()
             if flat_path:
                 # ragged key layout: segments' LIVE pages laid end to end,
                 # the page total bucketed to a power of two (≥ 8) — the
@@ -780,6 +895,12 @@ class _ShardEngine:
             self.pool.unpin(pg)
 
     def _finish(self, seq: _Seq, status: str = "done"):
+        if seq.req.done.is_set():
+            # the watchdog already failed this handle out (unstealable
+            # crash path: status/counters stamped, ``cancelled`` set so
+            # we reap it here) — just give the pages back
+            self._release_seq(seq)
+            return
         # cache this sequence's page-aligned prefix (cancelled sequences are
         # not worth caching — their generation was cut short), then release
         # ownership
@@ -853,6 +974,7 @@ class _ShardEngine:
             return self._step_locked()
 
     def _step_locked(self) -> bool:
+        self._sweep_deadlines()
         self._admit()
         if not self._active and not self._prefilling:
             return False
@@ -897,6 +1019,7 @@ class _ShardEngine:
                 ctx[i] = len(seq.tokens)
                 toks[i] = seq.tokens[-1]
                 occ[i] = True
+            self._fault_dispatch()
             decoded, self.k_pages, self.v_pages = self._decode(
                 self.params, self.k_pages, self.v_pages,
                 jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(toks),
@@ -916,6 +1039,10 @@ class _ShardEngine:
                 self._finish(seq, "cancelled" if seq.req.cancelled.is_set()
                              else "done")
         self.steps += 1
+        if self.degraded:
+            # the watchdog flagged us stalled but the loop is advancing:
+            # counted so recovery windows are visible in stats()
+            self.degraded_steps += 1
         return True
 
     # ------------------------------------------------------------ lifecycle
@@ -928,15 +1055,52 @@ class _ShardEngine:
         self._thread.start()
 
     def run(self, poll_s: Optional[float] = None):
-        """Engine loop (the shard thread, or a caller-owned thread)."""
+        """Engine loop (the shard thread, or a caller-owned thread).
+
+        Every iteration bumps ``beat`` — the heartbeat the session
+        watchdog reads — and runs the shard's fault line OUTSIDE the
+        step lock (an injected stall models a descheduled thread
+        *between* steps, so the watchdog can still steal the live
+        sequences).  ANY escape, injected or real, hits the crash
+        guard: every request fails out with the traceback instead of
+        hanging its client (DESIGN.md §14)."""
         sleep_s = self.config.poll_s if poll_s is None else poll_s
         self._run_started.set()
+        if self.fault_line is not None:
+            self.fault_line.on_start(self)
         try:
             while not self._stop.is_set():
+                self.beat += 1      # single-writer; watchdog only reads
+                if self.fault_line is not None:
+                    self.fault_line.before_step(self)
                 if not self.step():
                     time.sleep(sleep_s)
+        except BaseException as exc:  # noqa: BLE001 — the crash guard
+            self._crash(exc)
         finally:
             self._run_done.set()
+
+    def _crash(self, exc: BaseException) -> None:
+        """The engine loop died: fail EVERY request out — waiting,
+        prefilling and active — with the traceback surfaced through
+        ``RequestHandle.result()``, release every page, and leave the
+        pool provably clean.  No client ever hangs on a crashed shard;
+        the watchdog sees ``crashed`` and routes around it (a crashed
+        shard never recovers)."""
+        tb = "".join(traceback.format_exception(type(exc), exc,
+                                                exc.__traceback__))
+        self.error = tb
+        self.crashed = True
+        # the stop flag goes up BEFORE the drain: submit()'s under-lock
+        # re-check must see it, so no late submission strands hit pins
+        self._stop.set()
+        if self.fault_line is not None:
+            self.fault_line.release(self)
+        self._drain(error=tb)
+        free = self.pool.free_count()
+        assert free == self.config.num_pages, \
+            (f"shard {self.shard_id} crash drain leaked pages: "
+             f"{free}/{self.config.num_pages} free")
 
     def stop(self, drain: bool = True, timeout: float = 30.0):
         """Stop the engine and (by default) drain it clean: join the engine
@@ -952,17 +1116,25 @@ class _ShardEngine:
             # legacy mode: the caller owns the run() thread — wait for the
             # loop to acknowledge the stop before tearing state down
             self._run_done.wait(timeout)
+        if self.fault_line is not None:
+            # after the join: anything a fault still holds (reader guard,
+            # exhaustion pages) comes back before the drain accounts pages
+            self.fault_line.release(self)
         if drain:
             self._drain()
 
-    def _drain(self) -> None:
+    def _drain(self, error: Optional[str] = None) -> None:
         with self._step_lock:
             with self._wlock:
                 leftover = self.admission.drain(self._waiting)
             for req in leftover:
+                if error and req.error is None:
+                    req.error = error
                 self._fail_out(req, "cancelled" if req.cancelled.is_set()
                                else "failed")
             for seq in self._prefilling + self._active:
+                if error and seq.req.error is None:
+                    seq.req.error = error
                 self._finish(seq, "failed")
             self._prefilling.clear()
             self._active.clear()
@@ -989,6 +1161,13 @@ class _ShardEngine:
             "packed_segments_per_chunk": (
                 self.packed_segments / self.packed_chunks
                 if self.packed_chunks else 0.0),
+            "beat": self.beat,
+            "degraded": self.degraded,
+            "crashed": self.crashed,
+            "heartbeat_misses": self.heartbeat_misses,
+            "degraded_steps": self.degraded_steps,
+            "migrated_in": self.n_migrated_in,
+            "migrated_out": self.n_migrated_out,
         }
 
 

@@ -104,6 +104,13 @@ class AdmissionPolicy:
         """Remove and return every queued request (shutdown)."""
         raise NotImplementedError
 
+    def purge(self, queue, pred) -> List[object]:
+        """Remove and return every queued request matching ``pred``,
+        preserving the order of the rest (the engine's deadline sweep:
+        expired/cancelled requests must fail out NOW, not whenever a
+        full decode batch finally lets admission pop them)."""
+        raise NotImplementedError
+
 
 class FifoAdmission(AdmissionPolicy):
     name = "fifo"
@@ -123,6 +130,14 @@ class FifoAdmission(AdmissionPolicy):
     def drain(self, queue):
         out = list(queue)
         queue.clear()
+        return out
+
+    def purge(self, queue, pred):
+        out = [req for req in queue if pred(req)]
+        if out:
+            kept = [req for req in queue if not pred(req)]
+            queue.clear()
+            queue.extend(kept)
         return out
 
 
@@ -154,6 +169,14 @@ class PriorityAdmission(AdmissionPolicy):
 
     def drain(self, queue):
         out = [heapq.heappop(queue)[2] for _ in range(len(queue))]
+        return out
+
+    def purge(self, queue, pred):
+        out = [req for _, _, req in queue if pred(req)]
+        if out:
+            kept = [item for item in queue if not pred(item[2])]
+            queue[:] = kept
+            heapq.heapify(queue)
         return out
 
 

@@ -45,7 +45,20 @@ class PrefixRouter:
         self.num_shards = num_shards
         self.page_size = page_size
 
-    def shard_of(self, prompt: Sequence[int]) -> int:
+    def shard_of(self, prompt: Sequence[int],
+                 among: Optional[Sequence[int]] = None) -> int:
+        """Shard for ``prompt``.  ``among`` restricts placement to a subset
+        of shard ids (healthy shards, during degradation) — with ``among``
+        covering all shards the answer is identical to the unrestricted
+        one, so routing is unchanged while every shard is healthy."""
+        if among is not None:
+            if not among:
+                raise ValueError("among must name at least one shard")
+            if len(among) == 1:
+                return among[0]
+            key = _prefix_key(prompt[:self.page_size])
+            mixed = (key * 0x9E3779B97F4A7C15) & ((1 << 64) - 1)
+            return sorted(among)[(mixed >> 32) % len(among)]
         if self.num_shards == 1:
             return 0
         # the FNV key of the first page boundary — identical to the key the
@@ -89,17 +102,27 @@ class RequestHandle:
         return self.req.out_tokens
 
     def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block up to ``timeout`` seconds for the request to reach a
+        terminal status; True if it did.  This is a WAIT bound on the
+        caller's thread only — the request keeps running if it expires.
+        A deadline on the request itself (``submit(..., timeout_s=...)``
+        or ``ServingConfig.default_timeout_s``) is different: when THAT
+        expires the engine cancels the request (terminal status
+        ``cancelled``), releasing its pages."""
         return self.req.done.wait(timeout)
 
     def result(self, timeout: Optional[float] = None) -> List[int]:
         """Block until completion; the generated tokens.  Raises
-        ``TimeoutError`` if the deadline expires and ``RuntimeError`` if the
-        engine failed the request (e.g. drained at shutdown)."""
+        ``TimeoutError`` if ``timeout`` expires and ``RuntimeError`` if the
+        engine failed the request (drained at shutdown, shard crash, or a
+        migration that found no healthy shard — ``req.error`` carries the
+        diagnostic, e.g. the crash traceback)."""
         if not self.req.done.wait(timeout):
             raise TimeoutError(f"request {self.req.req_id} not done")
         if self.req.status == "failed":
-            raise RuntimeError(f"request {self.req.req_id} failed "
-                               f"(engine drained before completion)")
+            detail = f":\n{self.req.error}" if self.req.error \
+                else " (engine drained before completion)"
+            raise RuntimeError(f"request {self.req.req_id} failed{detail}")
         return list(self.req.out_tokens)
 
     def cancel(self) -> None:
@@ -155,9 +178,12 @@ class RequestHandle:
 
 
 class ShardedEngine:
-    """N independent shard engines + a router + a session janitor."""
+    """N independent shard engines + a router + a session watchdog (the
+    PR-4 janitor's pressure sweep, plus heartbeats / degradation / live
+    migration — DESIGN.md §14)."""
 
     def __init__(self, model, params, config: ServingConfig):
+        from .watchdog import SessionWatchdog  # late: session ↔ watchdog
         self.config = config
         # "shared" SMR mode: one scheme instance spans every shard (the
         # pools disambiguate frees per PageNode owner); "per_shard" (the
@@ -169,8 +195,11 @@ class ShardedEngine:
             for i in range(config.num_shards)
         ]
         self.router = PrefixRouter(config.num_shards, config.page_size)
-        self._janitor_stop = threading.Event()
-        self._janitor: Optional[threading.Thread] = None
+        # degraded shard ids (watchdog-maintained): excluded from routing
+        # while degraded, restored on recovery
+        self._degraded: set = set()
+        self._dlock = threading.Lock()
+        self.watchdog = SessionWatchdog(self, config)
         self._started = False
 
     # ------------------------------------------------------------ lifecycle
@@ -180,45 +209,76 @@ class ShardedEngine:
         self._started = True
         for shard in self.shards:
             shard.start()
-        self._janitor = threading.Thread(target=self._janitor_loop,
-                                         name="serving-janitor", daemon=True)
-        self._janitor.start()
-
-    def _janitor_loop(self) -> None:
-        """Session-level pressure sweep: when a shard's pool cannot cover
-        one more admission, shed that shard's eviction quota and help its
-        reclamation — from OUTSIDE the shard's engine thread, so a shard
-        stuck in a long decode still gets pages freed."""
-        interval = self.config.janitor_interval_s
-        while not self._janitor_stop.wait(interval):
-            for shard in self.shards:
-                if shard.pool.free_count() < shard.max_pages:
-                    shard.prefix_cache.pressure_evict()
-                    shard.smr.help_reclaim()
+        self.watchdog.start()
 
     def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
-        self._janitor_stop.set()
-        if self._janitor is not None:
-            self._janitor.join(timeout)
-            self._janitor = None
+        self.watchdog.stop(timeout)
         for shard in self.shards:
             shard.stop(drain=drain, timeout=timeout)
 
+    # ----------------------------------------------------------- degradation
+    def mark_degraded(self, shard_id: int) -> None:
+        with self._dlock:
+            self._degraded.add(shard_id)
+
+    def mark_healthy(self, shard_id: int) -> None:
+        with self._dlock:
+            self._degraded.discard(shard_id)
+
+    def _healthy_ids(self) -> List[int]:
+        with self._dlock:
+            return [i for i in range(len(self.shards))
+                    if i not in self._degraded]
+
+    def _route(self, prompt) -> int:
+        """Prefix-affine placement among the healthy shards.  With every
+        shard healthy this is EXACTLY the unrestricted placement (the
+        restricted formula degenerates to it), so the degradation
+        machinery costs nothing in routing stability.  With no healthy
+        shard left, fall back to unrestricted placement rather than
+        refuse: a degraded-not-crashed shard may still recover, and the
+        watchdog will migrate or fail the request out if it does not."""
+        healthy = self._healthy_ids()
+        if len(healthy) == len(self.shards) or not healthy:
+            return self.router.shard_of(prompt)
+        return self.router.shard_of(prompt, among=healthy)
+
     # ------------------------------------------------------------- traffic
     def submit(self, req: Request) -> int:
-        shard = self.router.shard_of(req.prompt)
-        self.shards[shard].submit(req)
-        return shard
+        shard = self._route(req.prompt)
+        try:
+            self.shards[shard].submit(req)
+            return shard
+        except RuntimeError:
+            # the routed shard crashed/stopped between routing and submit
+            # (or the watchdog hasn't flagged it yet): try the remaining
+            # healthy shards before surfacing the error
+            for alt in self._healthy_ids():
+                if alt == shard:
+                    continue
+                try:
+                    self.shards[alt].submit(req)
+                    return alt
+                except RuntimeError:
+                    continue
+            raise
 
     def submit_many(self, reqs: Sequence[Request]) -> List[int]:
         """Route a whole admission wave, one batched ``submit_many`` per
         involved shard (one guard scope per shard, not per request)."""
-        placement = [self.router.shard_of(r.prompt) for r in reqs]
-        by_shard: Dict[int, List[Request]] = {}
-        for shard, req in zip(placement, reqs):
-            by_shard.setdefault(shard, []).append(req)
+        placement = [self._route(r.prompt) for r in reqs]
+        by_shard: Dict[int, List] = {}
+        for idx, (shard, req) in enumerate(zip(placement, reqs)):
+            by_shard.setdefault(shard, []).append((idx, req))
         for shard, group in by_shard.items():
-            self.shards[shard].submit_many(group)
+            try:
+                self.shards[shard].submit_many([r for _, r in group])
+            except RuntimeError:
+                # shard died mid-wave; its group was NOT enqueued (the
+                # engine rejects atomically) — place each request
+                # individually through the retrying submit()
+                for idx, req in group:
+                    placement[idx] = self.submit(req)
         return placement
 
     def stats(self) -> List[dict]:
@@ -264,33 +324,42 @@ class ServingSession:
         return False
 
     # ------------------------------------------------------------- traffic
-    def _as_request(self, prompt, max_new_tokens: int,
-                    priority: int) -> Request:
+    def _as_request(self, prompt, max_new_tokens: int, priority: int,
+                    timeout_s: Optional[float]) -> Request:
         if isinstance(prompt, Request):
+            if timeout_s is not None and prompt.timeout_s is None:
+                prompt.timeout_s = timeout_s
             return prompt
         return Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
-                       priority=priority)
+                       priority=priority, timeout_s=timeout_s)
 
     def submit(self, prompt: Union[Sequence[int], Request], *,
-               max_new_tokens: int = 16, priority: int = 0) -> RequestHandle:
+               max_new_tokens: int = 16, priority: int = 0,
+               timeout_s: Optional[float] = None) -> RequestHandle:
         """Async submission: returns immediately with a
-        :class:`RequestHandle` (done-event, token stream, cancel)."""
+        :class:`RequestHandle` (done-event, token stream, cancel).
+        ``timeout_s`` is a per-request DEADLINE (falling back to
+        ``ServingConfig.default_timeout_s``): when it expires the engine
+        cancels the request through the normal cancel path — terminal
+        status ``cancelled``, pages released.  Distinct from the wait
+        bound ``RequestHandle.wait(timeout)``, which only bounds the
+        caller's blocking."""
         if self._closed:
             raise RuntimeError("session is closed")
-        req = self._as_request(prompt, max_new_tokens, priority)
+        req = self._as_request(prompt, max_new_tokens, priority, timeout_s)
         shard = self.engine.submit(req)
         with self._lock:
             self._submitted += 1
         return RequestHandle(req, shard)
 
     def submit_many(self, prompts: Sequence[Union[Sequence[int], Request]],
-                    *, max_new_tokens: int = 16,
-                    priority: int = 0) -> List[RequestHandle]:
+                    *, max_new_tokens: int = 16, priority: int = 0,
+                    timeout_s: Optional[float] = None) -> List[RequestHandle]:
         """Batched admission wave: per-shard grouped lookups under one SMR
         guard scope each (DESIGN.md §4)."""
         if self._closed:
             raise RuntimeError("session is closed")
-        reqs = [self._as_request(p, max_new_tokens, priority)
+        reqs = [self._as_request(p, max_new_tokens, priority, timeout_s)
                 for p in prompts]
         placement = self.engine.submit_many(reqs)
         with self._lock:
@@ -329,6 +398,15 @@ class ServingSession:
                                          for s in shards),
             "packed_chunks": sum(s["packed_chunks"] for s in shards),
             "packed_segments": sum(s["packed_segments"] for s in shards),
+            # fault-tolerance counters (DESIGN.md §14): migrations counts
+            # completed handoffs (in == out when no handoff is mid-flight)
+            "migrations": sum(s["migrated_out"] for s in shards),
+            "migrations_in": sum(s["migrated_in"] for s in shards),
+            "heartbeat_misses": sum(s["heartbeat_misses"] for s in shards),
+            "degraded_steps": sum(s["degraded_steps"] for s in shards),
+            "failed_requests": sum(s["failed"] for s in shards),
+            "crashed_shards": sum(1 for s in shards if s["crashed"]),
+            "degraded_shards": sum(1 for s in shards if s["degraded"]),
         }
         # chunk-weighted mean across shards (NOT a mean of per-shard means)
         totals["packed_segments_per_chunk"] = (

@@ -1,0 +1,128 @@
+"""Chaos schedule invariants (satellite c): fault schedules against a
+2-shard session.  Whatever the schedule does — stalls, crashes, pool
+exhaustion, in any order — three invariants must hold:
+
+1. every handle goes terminal (done / failed / cancelled): no hung client;
+2. every request that reports ``done`` is token-exact against the
+   unfaulted reference decode (migration replays are invisible);
+3. after ``close()`` every page of every shard's pool is home: no leak
+   survives the session, whatever was in flight when a fault hit.
+
+The pinned schedules below always run; when the optional ``hypothesis``
+package is present, a property test additionally explores randomized
+schedules under the pinned ``ci`` profile (conftest.py: derandomized, no
+deadline — the example sequence is identical on every box, so a failure
+there is a real schedule, not CI weather)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import FaultSpec, ServingConfig
+
+from test_faults import _settle, _warm_shards
+from test_serving import _reference_greedy
+
+_REF = {}
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("tinyllama-1.1b").reduced().replace(dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(7))
+    return model, params
+
+
+def _ref(model, params, prompt, n_new):
+    key = (tuple(prompt), n_new)
+    if key not in _REF:
+        _REF[key] = _reference_greedy(model, params, prompt, n_new)
+    return _REF[key]
+
+
+def _check_schedule(small_model, faults, salt):
+    """Run one fault schedule; assert the three invariants."""
+    model, params = small_model
+    session = serving.serve(
+        model, params,
+        ServingConfig(smr="IBR", num_shards=2, num_pages=96, page_size=8,
+                      max_batch=4, max_seq_len=64,
+                      heartbeat_timeout_s=0.3, watchdog_interval_s=0.02,
+                      faults=tuple(faults)))
+    rng = np.random.RandomState(1000 + salt)
+    _warm_shards(session, rng)
+    try:
+        _settle(session)
+    except AssertionError:
+        # a schedule can take a shard down before the settle completes:
+        # the invariants below still must hold
+        pass
+    prompts = [list(rng.randint(1, 200, size=n))
+               for n in (9, 12, 8, 15, 10, 11, 9, 13)]
+    handles = [session.submit(p, max_new_tokens=6) for p in prompts]
+    for p, h in zip(prompts, handles):
+        # invariant 1: terminal, always
+        assert h.wait(timeout=300), f"handle hung under schedule {faults}"
+        # invariant 2: done => token-exact (failed/cancelled exempt)
+        if h.req.status == "done":
+            assert h.result() == _ref(model, params, p, 6), \
+                (faults, h.shard, h.req.status)
+        else:
+            assert h.req.status in ("failed", "cancelled"), h.req.status
+            assert h.req.error or h.req.cancelled.is_set()
+    shards = session.engine.shards
+    session.close()
+    # invariant 3: no page outlives the session
+    for s in shards:
+        assert s.pool.free_count() == s.config.num_pages, \
+            (faults, s.shard_id, s.pool.stats())
+
+
+# --------------------------------------------------- pinned (always run)
+_PINNED = [
+    # one shard stalls mid-traffic: migration rescues, nothing fails
+    ("stall-migrate",
+     [FaultSpec(kind="stall", shard=0, after_done=2, duration_s=0.6)], 0),
+    # one shard crashes while the other absorbs the rerouted work
+    ("crash-one",
+     [FaultSpec(kind="crash", shard=1, after_done=2)], 1),
+    # pool exhaustion on one shard + a stall on the other, overlapping
+    ("exhaust-plus-stall",
+     [FaultSpec(kind="pool_exhaust", shard=0, after_done=2,
+                duration_s=0.6),
+      FaultSpec(kind="stall", shard=1, after_done=3, duration_s=0.4)], 2),
+]
+
+
+@pytest.mark.parametrize("faults,salt",
+                         [(f, s) for _, f, s in _PINNED],
+                         ids=[name for name, _, _ in _PINNED])
+def test_pinned_chaos_schedules(small_model, faults, salt):
+    _check_schedule(small_model, faults, salt)
+
+
+# --------------------------------------- randomized (optional hypothesis)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # pragma: no cover
+    pass
+else:
+    _fault = st.builds(
+        FaultSpec,
+        kind=st.sampled_from(["stall", "crash", "pool_exhaust"]),
+        shard=st.integers(0, 1),
+        # counts from 1 (the warmup probe): fires under live traffic
+        after_done=st.integers(2, 4),
+        duration_s=st.sampled_from([0.3, 0.6]),
+    )
+
+    @settings(max_examples=4)
+    @given(faults=st.lists(_fault, min_size=1, max_size=2),
+           salt=st.integers(0, 3))
+    def test_chaos_schedule_invariants(small_model, faults, salt):
+        _check_schedule(small_model, faults, salt)

@@ -32,6 +32,7 @@ API_SURFACE = sorted([
     "capability_matrix",
     "as_policy",
     "default_policy",
+    "fault_kinds",
 ])
 
 CORE_SURFACE = sorted([
@@ -55,6 +56,8 @@ SERVING_SURFACE = sorted([
     "ShardedEngine", "PrefixRouter", "Request", "PagedServingEngine",
     "admission_policies", "eviction_policies", "scheduler_policies",
     "as_admission_policy", "as_eviction_policy", "as_scheduler_policy",
+    # fault tolerance (DESIGN.md §14)
+    "SessionWatchdog", "FaultSpec", "fault_kinds", "parse_fault",
 ])
 
 

@@ -282,7 +282,11 @@ def test_stalled_shard_does_not_block_admission_on_others(small_model):
     session = serving.serve(
         model, params,
         ServingConfig(smr="IBR", num_shards=2, num_pages=64, page_size=8,
-                      max_batch=2, max_seq_len=64),
+                      max_batch=2, max_seq_len=64,
+                      # watchdog off: this test asserts the BLOCKED handle
+                      # stays blocked (PR-6 isolation semantics); migration
+                      # would rescue it and void the assertion
+                      watchdog="off"),
         start=False)
     shard0 = session.engine.shards[0]
     entered = threading.Event()
