@@ -81,6 +81,18 @@ def main():
                     help="per-client gap between submissions — stretches "
                          "the run so mid-run faults land under live "
                          "traffic")
+    # host swap tier + priority preemption (DESIGN.md §15)
+    ap.add_argument("--swap-bytes", type=int, default=0,
+                    help="per-shard host swap arena bytes (0 disables); "
+                         "with --eviction swap, admission pressure "
+                         "preempts lower-priority active sequences into "
+                         "the arena and resumes them bit-identically")
+    ap.add_argument("--priority-class", action="append", default=[],
+                    metavar="NAME:K=V,...",
+                    help="define a priority class (repeatable), e.g. "
+                         "'interactive:priority=10,ttft_slo_s=2' or "
+                         "'batch:priority=0'; requests cycle through the "
+                         "defined classes")
     args = ap.parse_args()
 
     cfg = get_config("tinyllama-1.1b").reduced().replace(dtype="float32")
@@ -96,15 +108,26 @@ def main():
         prefix_traversal=args.prefix_traversal,
         watchdog=args.watchdog,
         default_timeout_s=args.timeout_s,
-        faults=tuple(args.fault) or None)
+        faults=tuple(args.fault) or None,
+        swap_bytes=args.swap_bytes,
+        priority_classes=tuple(args.priority_class) or None)
+    class_names = [serving.parse_priority_class(c).name
+                   for c in args.priority_class]
     with serving.serve(model, params, config) as session:
+        classes = None
+        if class_names:
+            # long-prompt inserts change the count, so size the class list
+            # to the requests the driver will actually submit
+            total = args.requests + args.long_prompts
+            classes = [class_names[i % len(class_names)]
+                       for i in range(total)]
         res = run_serving_workload(
             session, n_requests=args.requests, clients=args.clients,
             shared_prefix_len=16, tail_len=4,
             distinct_prefixes=max(2, args.shards),
             max_new_tokens=args.max_new, wait_each=True,
             long_prompts=args.long_prompts, long_prompt_len=192,
-            pace_s=args.pace_s)
+            pace_s=args.pace_s, priority_classes=classes)
         stats = session.stats()
 
     print(f"scheme={args.smr} shards={args.shards} "
@@ -121,6 +144,14 @@ def main():
               f"cancelled={res.cancelled} "
               f"heartbeat_misses={res.heartbeat_misses} "
               f"degraded_steps={res.degraded_steps}")
+    if args.swap_bytes or res.preemptions:
+        print(f"swap: preemptions={res.preemptions} "
+              f"swapped_out={res.swapped_out} pages "
+              f"swapped_in={res.swapped_in} pages")
+    for name, agg in sorted(res.per_class.items()):
+        print(f"  class {name}: requests={agg['requests']} "
+              f"completed={agg['completed']} cancelled={agg['cancelled']} "
+              f"ttft_p99={agg['ttft_p99_s'] * 1e3:.1f}ms")
     print("totals:", stats["totals"])
     for shard in stats["shards"]:
         pc = shard["prefix_cache"]

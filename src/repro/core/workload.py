@@ -225,6 +225,15 @@ class ServingWorkloadResult:
     migrations: int = 0                 # completed live handoffs
     heartbeat_misses: int = 0
     degraded_steps: int = 0
+    # swap-tier surface (sessions with ServingConfig.swap_bytes; zeros
+    # otherwise)
+    preemptions: int = 0
+    swapped_out: int = 0                # pages spilled to the host arena
+    swapped_in: int = 0                 # pages restored to device
+    # per-priority-class breakdown (requests submitted with a class):
+    # name -> {requests, completed, cancelled, failed, tokens, ttft_avg_s,
+    # ttft_p99_s} — how each SLO class fared under the same contention
+    per_class: Dict[str, Dict[str, float]] = field(default_factory=dict)
     session_stats: Dict = field(default_factory=dict)
 
     def row(self) -> str:
@@ -249,6 +258,9 @@ def run_serving_workload(
     long_prompts: int = 0,
     long_prompt_len: int = 0,
     pace_s: float = 0.0,
+    priority_classes: Optional[List[Optional[str]]] = None,
+    max_new_tokens_per: Optional[List[int]] = None,
+    swallow_errors: bool = False,
 ) -> ServingWorkloadResult:
     """Drive a serving session with concurrent client threads — the serving
     analogue of :func:`run_workload` (one shared request-mix loop instead of
@@ -281,7 +293,15 @@ def run_serving_workload(
     is still ARRIVING, not after everything queued up front.  The result's
     ``failed``/``cancelled``/``migrations``/``heartbeat_misses``/
     ``degraded_steps`` fields then show what the watchdog did about it.
-    """
+
+    ``priority_classes`` / ``max_new_tokens_per`` (each aligned with the
+    final prompt list) give every request its own SLO class and decode
+    budget — the oversubscription mix: long low-priority decoders flooding
+    the pool while short high-SLO requests arrive on top.  The result's
+    ``per_class`` dict then breaks outcomes and TTFT down per class.
+    ``swallow_errors=True`` records submit-time rejections as cancelled
+    instead of raising (an oversubscribed run REJECTING work is a result,
+    not a driver bug)."""
     rng = random.Random(seed)
     if prompts is None:
         prefixes = [[rng.randrange(1, 200) for _ in range(shared_prefix_len)]
@@ -299,18 +319,42 @@ def run_serving_workload(
     else:
         n_requests = len(prompts)
 
+    if priority_classes is not None and \
+            len(priority_classes) != len(prompts):
+        raise ValueError(f"priority_classes has {len(priority_classes)} "
+                         f"entries for {len(prompts)} prompts")
+    if max_new_tokens_per is not None and \
+            len(max_new_tokens_per) != len(prompts):
+        raise ValueError(f"max_new_tokens_per has "
+                         f"{len(max_new_tokens_per)} entries for "
+                         f"{len(prompts)} prompts")
+
     handles: List = []
+    rejected = [0]
     errors: List[BaseException] = []
     hlock = threading.Lock()
     ready = threading.Barrier(clients + 1)
 
     def client(cid: int) -> None:
-        mine = prompts[cid::clients]
+        mine = list(range(cid, len(prompts), clients))
         ready.wait()
         local = []
         try:
-            for prompt in mine:
-                h = session.submit(prompt, max_new_tokens=max_new_tokens)
+            for i in mine:
+                kwargs = {"max_new_tokens": (max_new_tokens_per[i]
+                                             if max_new_tokens_per is not None
+                                             else max_new_tokens)}
+                if priority_classes is not None and \
+                        priority_classes[i] is not None:
+                    kwargs["priority_class"] = priority_classes[i]
+                try:
+                    h = session.submit(prompts[i], **kwargs)
+                except RuntimeError:
+                    if not swallow_errors:
+                        raise
+                    with hlock:
+                        rejected[0] += 1
+                    continue
                 local.append(h)
                 if wait_each:
                     h.done.wait(timeout=timeout_s)
@@ -348,6 +392,30 @@ def run_serving_workload(
     ttfts = sorted(t for t in (h.ttft() for h in handles
                                if hasattr(h, "ttft")) if t is not None)
     itls = sorted(d for h in handles if hasattr(h, "itl") for d in h.itl())
+    # per-priority-class breakdown (handles carrying a classed Request)
+    per_class: Dict[str, Dict[str, float]] = {}
+    for h in handles:
+        cls = getattr(getattr(h, "req", None), "priority_class", None)
+        if cls is None:
+            continue
+        agg = per_class.setdefault(cls, {
+            "requests": 0, "completed": 0, "cancelled": 0, "failed": 0,
+            "tokens": 0, "_ttfts": []})
+        agg["requests"] += 1
+        agg["tokens"] += len(h.out_tokens)
+        if h.status in ("completed", "done"):
+            agg["completed"] += 1
+        elif h.status == "cancelled":
+            agg["cancelled"] += 1
+        elif h.status == "failed":
+            agg["failed"] += 1
+        t = h.ttft() if hasattr(h, "ttft") else None
+        if t is not None:
+            agg["_ttfts"].append(t)
+    for agg in per_class.values():
+        ts2 = sorted(agg.pop("_ttfts"))
+        agg["ttft_avg_s"] = sum(ts2) / len(ts2) if ts2 else 0.0
+        agg["ttft_p99_s"] = _pctl(ts2, 0.99)
     return ServingWorkloadResult(
         requests=len(handles),
         tokens=tokens,
@@ -360,9 +428,13 @@ def run_serving_workload(
         itl_avg_s=sum(itls) / len(itls) if itls else 0.0,
         itl_p99_s=_pctl(itls, 0.99),
         failed=int(totals.get("failed", 0)),
-        cancelled=int(totals.get("cancelled", 0)),
+        cancelled=int(totals.get("cancelled", 0)) + rejected[0],
         migrations=int(totals.get("migrations", 0)),
         heartbeat_misses=int(totals.get("heartbeat_misses", 0)),
         degraded_steps=int(totals.get("degraded_steps", 0)),
+        preemptions=int(totals.get("preemptions", 0)),
+        swapped_out=int(totals.get("swapped_out", 0)),
+        swapped_in=int(totals.get("swapped_in", 0)),
+        per_class=per_class,
         session_stats=stats,
     )

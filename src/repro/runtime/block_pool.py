@@ -165,7 +165,29 @@ class BlockPool:
         for the migrating sequence (the prefix-cache lookup pinned them);
         this records the adoption.  Must happen BEFORE the source pool's
         :meth:`export_claim` — between the two calls both domains pin the
-        sequence's pages, so there is no window where neither does."""
+        sequence's pages, so there is no window where neither does.
+
+        The ordering is VALIDATED, not assumed: every page must belong to
+        this pool and carry a live pin.  A foreign page means the handoff
+        mixed up domains (a PageNode never leaves its pool — adopting one
+        would let this domain's reclamation race the real owner's); a
+        zero pin means the target-pins-first step was skipped and the
+        source's retire could reclaim the page mid-handoff.  Both are
+        protocol violations that used to pass silently."""
+        for pg in pages:
+            if pg.owner is not self:
+                owner_id = id(pg.owner) if pg.owner is not None else None
+                raise ValueError(
+                    f"import_claim: page {pg.page_id} belongs to pool "
+                    f"{owner_id} (not this pool {id(self)}) — a handoff "
+                    f"must pin the TARGET domain's own pages (PageNodes "
+                    f"never cross pools)")
+            if pg.pin_count.load() <= 0:
+                raise ValueError(
+                    f"import_claim: page {pg.page_id} has pin_count="
+                    f"{pg.pin_count.load()} — the target must pin before "
+                    f"the source retires (import-before-export), else the "
+                    f"page can be reclaimed mid-handoff")
         self.n_handoff_in.fetch_add(1)
 
     def export_claim(self, hit_pages: List[PageNode],

@@ -15,6 +15,12 @@ behavior without touching the engine:
   by stamp makes "oldest stamp" an ordered-index min query
   (:meth:`NMTree.min_key`), exactly the ranged-eviction use the prefix-cache
   docstring promised for the tree variant.
+* ``swap`` — ``pressure`` ordering and quota, plus the ``swaps`` marker the
+  serving engine reads: when shedding cache entries still cannot cover an
+  admission, the engine may *preempt* lower-priority active sequences,
+  spilling their K/V pages to the host-side :class:`~repro.runtime.swap
+  .SwapArena` (``ServingConfig.swap_bytes``) and resuming them later
+  bit-identically (DESIGN.md §15).
 
 Policies are *stateful per cache* — ``as_eviction_policy`` constructs a
 fresh instance per name so two shards never share a ring or an index.
@@ -31,6 +37,7 @@ __all__ = [
     "FifoEviction",
     "PressureEviction",
     "LruEviction",
+    "SwapEviction",
     "EVICTION_POLICIES",
     "eviction_policies",
     "as_eviction_policy",
@@ -189,8 +196,23 @@ class LruEviction(EvictionPolicy):
                 return key
 
 
+class SwapEviction(PressureEviction):
+    """``pressure`` escalated to preemption: identical cache-entry ordering
+    and quota, plus the ``swaps`` class marker.  The serving engine checks
+    the marker on its cache's bound policy — when a pressure event STILL
+    cannot cover an admission, it preempts lower-priority active sequences
+    into the host swap arena instead of bouncing the request forever
+    (engine ``_admit``; ordering argument in DESIGN.md §15).  Kept as an
+    eviction policy (not an engine flag) so the overload response is
+    selected exactly where the rest of the pressure response is."""
+
+    name = "swap"
+    swaps = True
+
+
 EVICTION_POLICIES = {
-    cls.name: cls for cls in (FifoEviction, PressureEviction, LruEviction)
+    cls.name: cls for cls in (FifoEviction, PressureEviction, LruEviction,
+                              SwapEviction)
 }
 
 

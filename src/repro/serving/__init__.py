@@ -8,7 +8,7 @@ watchdog behind ``ServingConfig.watchdog`` (DESIGN.md §14); the legacy
 ``DeprecationWarning`` shims over :class:`ServingConfig`.
 """
 
-from .config import ServingConfig
+from .config import PriorityClass, ServingConfig, parse_priority_class
 from .engine import PagedServingEngine, Request
 from .faults import FaultSpec, fault_kinds, parse_fault
 from .policies import (
@@ -31,6 +31,8 @@ from .watchdog import SessionWatchdog
 __all__ = [
     "serve",
     "ServingConfig",
+    "PriorityClass",
+    "parse_priority_class",
     "ServingSession",
     "RequestHandle",
     "ShardedEngine",

@@ -16,7 +16,60 @@ from typing import Dict, Optional, Tuple
 
 from .. import api
 
-__all__ = ["ServingConfig"]
+__all__ = ["ServingConfig", "PriorityClass", "parse_priority_class"]
+
+
+@dataclass(frozen=True)
+class PriorityClass:
+    """One named service tier: its admission priority and (optional)
+    latency SLOs.
+
+    * ``priority`` feeds the ``priority`` admission policy ordering AND
+      the swap tier's preemption rule (a waiting request may only preempt
+      active sequences of *strictly lower* priority — DESIGN.md §15).
+    * ``ttft_slo_s`` is ENFORCED: a request of this class that has not
+      emitted its first token within the SLO is cancelled through the
+      deadline sweep (overload sheds it instead of serving it late).
+      Once the first token exists the TTFT SLO can no longer fire.
+    * ``itl_slo_s`` is OBSERVED: inter-token gaps beyond it bump the
+      ``itl_slo_violations`` stats counter (cancelling a decoding
+      sequence mid-stream for one slow gap would waste its whole KV).
+    """
+
+    name: str
+    priority: int = 0
+    ttft_slo_s: Optional[float] = None
+    itl_slo_s: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("priority class needs a non-empty name")
+        if self.ttft_slo_s is not None and self.ttft_slo_s <= 0:
+            raise ValueError(f"class {self.name!r}: ttft_slo_s must be > 0 "
+                             f"or None, got {self.ttft_slo_s}")
+        if self.itl_slo_s is not None and self.itl_slo_s <= 0:
+            raise ValueError(f"class {self.name!r}: itl_slo_s must be > 0 "
+                             f"or None, got {self.itl_slo_s}")
+
+
+def parse_priority_class(spec: str) -> PriorityClass:
+    """``"name:priority=10,ttft_slo_s=2.5"`` → :class:`PriorityClass`
+    (the CLI surface: ``serve_paged --priority-class``)."""
+    name, _, kvs = spec.partition(":")
+    kwargs = {}
+    if kvs:
+        for part in kvs.split(","):
+            k, _, v = part.partition("=")
+            k = k.strip()
+            if k == "priority":
+                kwargs[k] = int(v)
+            elif k in ("ttft_slo_s", "itl_slo_s"):
+                kwargs[k] = float(v)
+            else:
+                raise ValueError(f"unknown priority-class field {k!r} in "
+                                 f"{spec!r} (priority, ttft_slo_s, "
+                                 f"itl_slo_s)")
+    return PriorityClass(name=name.strip(), **kwargs)
 
 # the engine's historical scheme tuning (frequent scans keep the page pool
 # tight under serving churn); used when smr_kwargs is left empty
@@ -49,9 +102,25 @@ class ServingConfig:
 
     # -- policies ----------------------------------------------------------
     admission: str = "fifo"             # "fifo" | "priority"
-    eviction: str = "fifo"              # "fifo" | "pressure" | "lru"
+    eviction: str = "fifo"              # "fifo" | "pressure" | "lru" |
+    #                                     "swap" (pressure + preemption to
+    #                                     the host arena, DESIGN.md §15)
     scheduler: str = "chunked"          # "chunked" | "oneshot" |
     #                                     "roundrobin" | "packed"
+
+    # -- host swap tier (DESIGN.md §15) ------------------------------------
+    # host-side arena bytes PER SHARD backing the "swap" eviction policy:
+    # when pressure eviction still cannot cover an admission, lower-priority
+    # active sequences are preempted — K/V pages copied device→host into
+    # the arena (copy + manifest recorded BEFORE the device pages are
+    # retired through the SMR), request parked in the "swapped" status, and
+    # resumed later bit-identically via prefill-from-offset.  0 disables
+    # the tier (eviction="swap" then rejects at construction).
+    swap_bytes: int = 0
+    # named service tiers: a tuple of PriorityClass (or "name:k=v,..."
+    # strings, normalized at construction).  submit(priority_class="x")
+    # resolves the request's priority and TTFT/ITL SLOs against this table.
+    priority_classes: Optional[Tuple] = None
 
     # -- device backend ----------------------------------------------------
     # kernel backend for the engine's attention ops (kernels/ops.py):
@@ -148,6 +217,26 @@ class ServingConfig:
         if self.scheduler not in scheduler_policies():
             raise ValueError(f"unknown scheduler policy {self.scheduler!r};"
                              f" choose from {scheduler_policies()}")
+        if self.swap_bytes < 0:
+            raise ValueError(f"swap_bytes must be >= 0, got "
+                             f"{self.swap_bytes}")
+        if self.eviction == "swap" and self.swap_bytes == 0:
+            raise ValueError(
+                "eviction='swap' needs a host arena: set swap_bytes to the "
+                "per-shard host budget (repro.runtime.swap.page_nbytes "
+                "sizes one page)")
+        if self.priority_classes is not None:
+            classes = tuple(parse_priority_class(c) if isinstance(c, str)
+                            else c for c in self.priority_classes)
+            for c in classes:
+                if not isinstance(c, PriorityClass):
+                    raise ValueError(
+                        f"priority_classes entries must be PriorityClass "
+                        f"or 'name:k=v' strings, got {c!r}")
+            names = [c.name for c in classes]
+            if len(set(names)) != len(names):
+                raise ValueError(f"duplicate priority class names: {names}")
+            object.__setattr__(self, "priority_classes", classes)
         if self.backend not in ("xla", "pallas", "pallas_interpret"):
             raise ValueError(
                 f"unknown backend {self.backend!r}; choose from "
@@ -184,6 +273,16 @@ class ServingConfig:
     def max_pages(self) -> int:
         return self.max_seq_len // self.page_size
 
+    def priority_class(self, name: str) -> PriorityClass:
+        """Resolve a class name (``submit(priority_class=...)``); raises
+        ``ValueError`` on an unknown name — at submit, not mid-engine."""
+        for c in (self.priority_classes or ()):
+            if c.name == name:
+                return c
+        known = [c.name for c in (self.priority_classes or ())]
+        raise ValueError(f"unknown priority class {name!r}; configured "
+                         f"classes: {known}")
+
     def resolved_smr_kwargs(self) -> Dict:
         return dict(self.smr_kwargs) if self.smr_kwargs is not None \
             else dict(_DEFAULT_SMR_KWARGS)
@@ -209,6 +308,9 @@ class ServingConfig:
             "eviction": self.eviction,
             "scheduler": self.scheduler,
             "backend": self.backend,
+            "swap_bytes": self.swap_bytes,
+            "priority_classes": tuple(
+                c.name for c in (self.priority_classes or ())),
             "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "prefix_traversal": self.prefix_traversal,
             "watchdog": self.watchdog,

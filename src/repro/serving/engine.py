@@ -59,6 +59,7 @@ from ..models.layers import apply_rope, rms_norm, rope_angles
 from ..models.transformer import _qkv
 from ..runtime.block_pool import BlockPool, PageNode
 from ..runtime.prefix_cache import PrefixCache
+from ..runtime.swap import SwapArena, SwapArenaFullError, SwapChecksumError
 from .config import ServingConfig
 from .faults import build_fault_line
 from .policies import as_admission_policy, as_scheduler_policy
@@ -69,12 +70,19 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     priority: int = 0               # consumed by the 'priority' admission
+    # named priority class (ServingConfig.priority_classes): resolves to
+    # ``priority`` plus per-class TTFT/ITL SLOs at submit() time
+    priority_class: Optional[str] = None
     # per-request deadline: timeout_s resolves at submit() (falling back
     # to ServingConfig.default_timeout_s); deadline is the absolute
     # perf_counter stamp — set once, kept across migration (a request
     # does not get a fresh budget by moving shards)
     timeout_s: Optional[float] = None
     deadline: Optional[float] = None
+    # TTFT SLO deadline (priority-class ttft_slo_s): enforced by the sweep
+    # only while no token has been emitted — once out_times is non-empty
+    # the SLO is either met or already violated, never enforceable
+    ttft_deadline: Optional[float] = None
     # terminal diagnostics (crash tracebacks, migration failures,
     # deadline expiry) — surfaced by RequestHandle.result()
     error: Optional[str] = None
@@ -84,8 +92,12 @@ class Request:
     cancelled: threading.Event = field(default_factory=threading.Event)
     # "waiting" → "prefilling" → "active" → "done" | "cancelled" | "failed"
     # (engine-owned; "prefilling" = pages reserved, prompt chunks still
-    # being ingested under the step budget)
+    # being ingested under the step budget).  A preempted request parks as
+    # "swapped" — K/V pages spilled to the host arena, re-queued — and
+    # goes back through "prefilling" when re-admitted (DESIGN.md §15)
     status: str = "waiting"
+    # times this request was preempted into the host swap arena
+    preemptions: int = 0
     # latency surface: submit() stamp + one perf_counter per emitted token,
     # so TTFT and inter-token latencies are measurable without polling
     t_submit: float = 0.0
@@ -95,6 +107,28 @@ class Request:
     # filled at submit time (client thread): prefix-cache hit
     _hit_pages: List[PageNode] = field(default_factory=list)
     _hit_tokens: int = 0
+    # observed-only ITL SLO (priority class), counted in stats()
+    _itl_slo_s: Optional[float] = None
+    # replay-prompt cursor: out_tokens[:_folded] are already folded into
+    # ``prompt`` by an earlier preemption/migration — folding ALL emitted
+    # tokens again would duplicate them in the replay prompt
+    _folded: int = 0
+    # page-aligned positions currently held by the shard's swap arena
+    _swap_tokens: int = 0
+
+    def fold_emitted(self) -> None:
+        """Fold tokens emitted since the last fold into the replay prompt
+        (prefill-from-offset resume: re-ingesting them through prefill
+        reproduces their K/V bit-identically).  ``max_new_tokens`` shrinks
+        by the same count so the request's total budget is unchanged.
+        Idempotent per token via the ``_folded`` cursor — a request
+        preempted or migrated twice must not fold the first leg's tokens
+        twice."""
+        new = self.out_tokens[self._folded:]
+        if new:
+            self.prompt = list(self.prompt) + new
+            self.max_new_tokens -= len(new)
+            self._folded = len(self.out_tokens)
 
 
 class _Seq:
@@ -173,10 +207,37 @@ class _ShardEngine:
                                        donate_argnums=(1, 2))
         self._packed_flat = jax.jit(self._paged_step_packed_flat,
                                     donate_argnums=(1, 2))
+        # host swap tier (DESIGN.md §15): the arena exists whenever the
+        # config budgets host bytes; PREEMPTION additionally requires the
+        # eviction policy to opt in via its ``swaps`` marker (resolved from
+        # the cache's bound policy so instances work, not just names)
+        self.swap_arena: Optional[SwapArena] = None
+        if config.swap_bytes > 0:
+            self.swap_arena = SwapArena(
+                config.swap_bytes, n_layers=L, page_size=config.page_size,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                dtype=cfg.dtype)
+        self.swap_enabled = self.swap_arena is not None and \
+            getattr(self.prefix_cache.eviction, "swaps", False)
+        # per-page fixed-shape device↔host movers: page id is a traced
+        # scalar, so ONE compile each serves every page.  The gather does
+        # NOT donate (the pool arrays live on); the scatter does (in-place
+        # .at[].set like the decode path)
+        self._gather_page = jax.jit(lambda k, v, pid: (k[:, pid], v[:, pid]))
+        self._scatter_page = jax.jit(
+            lambda k, v, pid, kp, vp: (k.at[:, pid].set(kp),
+                                       v.at[:, pid].set(vp)),
+            donate_argnums=(0, 1))
         self.steps = 0
         self.n_completed = 0
         self.n_cancelled = 0
         self.n_failed = 0
+        # swap tier + SLO counters (stats())
+        self.n_preemptions = 0          # sequences preempted to the arena
+        self.n_resumed = 0              # swapped sequences re-admitted
+        self.n_slo_cancelled = 0        # TTFT SLO expiries (subset of
+        #                                 n_cancelled)
+        self.n_itl_violations = 0       # observed inter-token SLO misses
         # prefill efficiency counters (stats()): every fixed-shape chunk
         # call pays for C lanes — `prefill_tokens_wasted` counts the padded
         # lanes that bought nothing, and the packed pair shows how many
@@ -224,6 +285,15 @@ class _ShardEngine:
             raise RuntimeError("engine is stopped; no new submissions")
 
     def _stamp_deadline(self, req: Request) -> None:
+        if req.priority_class is not None:
+            # class wins over a hand-set priority: the class IS the
+            # scheduling contract (raises ValueError on an unknown name,
+            # still on the client thread)
+            cls = self.config.priority_class(req.priority_class)
+            req.priority = cls.priority
+            if cls.ttft_slo_s is not None and req.ttft_deadline is None:
+                req.ttft_deadline = req.t_submit + cls.ttft_slo_s
+            req._itl_slo_s = cls.itl_slo_s
         t = req.timeout_s if req.timeout_s is not None \
             else self.config.default_timeout_s
         if t is not None and req.deadline is None:
@@ -617,27 +687,44 @@ class _ShardEngine:
             expired = self.admission.purge(
                 self._waiting,
                 lambda r: r.cancelled.is_set() or
-                (r.deadline is not None and now > r.deadline))
+                self._expiry_reason(r, now) is not None)
         for req in expired:
             if not req.cancelled.is_set():
-                req.error = (f"deadline exceeded after "
-                             f"{now - req.t_submit:.3f}s (waiting)")
+                why = self._expiry_reason(req, now)
+                if why.startswith("TTFT"):
+                    self.n_slo_cancelled += 1
+                req.error = f"{why} (waiting)"
                 req.cancelled.set()
             self._fail_out(req, "cancelled")
         for seq in self._prefilling + self._active:
             req = seq.req
-            if req.deadline is not None and now > req.deadline \
-                    and not req.cancelled.is_set():
-                req.error = (f"deadline exceeded after "
-                             f"{now - req.t_submit:.3f}s ({req.status})")
+            why = self._expiry_reason(req, now)
+            if why is not None and not req.cancelled.is_set():
+                if why.startswith("TTFT"):
+                    self.n_slo_cancelled += 1
+                req.error = f"{why} ({req.status})"
                 req.cancelled.set()
 
+    def _expiry_reason(self, req: Request, now: float) -> Optional[str]:
+        """Why this request should be cancelled now, or None.  The TTFT
+        SLO only bites while NO token exists — a swapped request already
+        streamed tokens, so parking it cannot retro-expire its TTFT."""
+        if req.deadline is not None and now > req.deadline:
+            return f"deadline exceeded after {now - req.t_submit:.3f}s"
+        if req.ttft_deadline is not None and not req.out_times \
+                and now > req.ttft_deadline:
+            return (f"TTFT SLO exceeded (class {req.priority_class!r}: "
+                    f"no first token after {now - req.t_submit:.3f}s)")
+        return None
+
     def _fail_out(self, req: Request, status: str) -> None:
-        """Drop a request that will never run: give back its hit pins."""
+        """Drop a request that will never run: give back its hit pins
+        and any host arena slots its swapped K/V still occupies."""
         for pg in req._hit_pages:
             self.pool.unpin(pg)
         req._hit_pages = []
         req._hit_tokens = 0
+        self._release_swap(req)
         req.status = status
         if status == "cancelled":
             self.n_cancelled += 1
@@ -646,12 +733,30 @@ class _ShardEngine:
         req._progress.set()
         req.done.set()
 
+    def _release_swap(self, req: Request) -> None:
+        """Discard the request's swap manifest (terminal paths and
+        migration-away — the tokens themselves are the durable copy)."""
+        if self.swap_arena is not None:
+            self.swap_arena.release(req.req_id)
+        req._swap_tokens = 0
+
     def _admit(self):
         """Admission reserves pages and enqueues — it NEVER runs model work,
         so a 4k-token prompt cannot stall the decode batch here.  The prompt
         is ingested chunk-by-chunk by :meth:`_step_locked` under the
-        scheduler policy's token budget."""
-        while len(self._active) + len(self._prefilling) < self.max_batch:
+        scheduler policy's token budget.
+
+        With the ``swap`` eviction policy, a queue head that outranks the
+        lowest-priority active sequence may PREEMPT it — both for a batch
+        slot and for pages — spilling the victim's K/V to the host arena
+        (DESIGN.md §15)."""
+        while True:
+            if len(self._active) + len(self._prefilling) >= self.max_batch:
+                # batch full: a higher-priority head may still claim a slot
+                # by preempting the lowest-priority active sequence
+                if not self._preempt_for_slot():
+                    return
+                continue
             with self._wlock:
                 req = self.admission.pop(self._waiting)
             if req is None:
@@ -659,41 +764,198 @@ class _ShardEngine:
             if req.cancelled.is_set():
                 self._fail_out(req, "cancelled")
                 continue
-            n_prompt = len(req.prompt)
-            total = n_prompt + req.max_new_tokens
-            n_pages_needed = -(-total // self.page_size)
-            pages = list(req._hit_pages)
-            owned_from = len(pages)
-            ok = True
-            for _ in range(n_pages_needed - len(pages)):
-                pg = self.pool.try_alloc(req.req_id)
-                if pg is None:
-                    ok = False
-                    break
-                pages.append(pg)
-            if not ok:
-                # pool pressure: shed the eviction policy's quota for one
-                # event, help reclamation, requeue ahead of peers
-                for pg in pages[owned_from:]:
-                    self.pool.release(pg)
-                self.prefix_cache.pressure_evict()
-                self.smr.help_reclaim()
-                with self._wlock:
-                    self.admission.requeue(self._waiting, req)
+            if not self._admit_one(req):
                 return
-            page_ids = np.zeros((self.max_pages,), np.int32)
-            for j, pg in enumerate(pages):
-                page_ids[j] = pg.page_id
-            seq = _Seq(req, pages, owned_from, page_ids)
-            req.status = "prefilling"
-            self._prefilling.append(seq)
+
+    def _admit_one(self, req: Request) -> bool:
+        """Reserve this request's pages and enqueue it for prefill;
+        False stops this step's admission wave (pool pressure)."""
+        resume = req.status == "swapped"
+        if resume and not req._hit_pages:
+            # restore prefix-cache hits FIRST: the replay prompt may have
+            # become (partly) cache-resident while the request was parked —
+            # any hit page supersedes the arena copy of the same positions.
+            # Skipped when a failed resume attempt already holds pins
+            # (re-looking-up would double-pin).
+            pages, n_tok = self.prefix_cache.lookup(req.prompt)
+            self._attach_hit(req, pages, n_tok)
+        total = len(req.prompt) + req.max_new_tokens
+        n_pages_needed = -(-total // self.page_size)
+        pages = list(req._hit_pages)
+        owned_from = len(pages)
+        for _ in range(n_pages_needed - len(pages)):
+            pg = self.pool.try_alloc(req.req_id)
+            if pg is None:
+                break
+            pages.append(pg)
+        if len(pages) < n_pages_needed and self.swap_enabled:
+            # eviction pressure cannot be met from finished sequences:
+            # preempt strictly-lower-priority ACTIVE sequences, reclaim
+            # their retired pages into our own context, retry once
+            if self._preempt_for_pages(req, n_pages_needed - len(pages)):
+                self.smr.help_reclaim()
+                for _ in range(n_pages_needed - len(pages)):
+                    pg = self.pool.try_alloc(req.req_id)
+                    if pg is None:
+                        break
+                    pages.append(pg)
+        if len(pages) < n_pages_needed:
+            # pool pressure: shed the eviction policy's quota for one
+            # event, help reclamation, requeue ahead of peers (a swapped
+            # request keeps its hit pins and its arena manifest for the
+            # next attempt)
+            for pg in pages[owned_from:]:
+                self.pool.release(pg)
+            self.prefix_cache.pressure_evict()
+            self.smr.help_reclaim()
+            with self._wlock:
+                self.admission.requeue(self._waiting, req)
+            return False
+        page_ids = np.zeros((self.max_pages,), np.int32)
+        for j, pg in enumerate(pages):
+            page_ids[j] = pg.page_id
+        seq = _Seq(req, pages, owned_from, page_ids)
+        if resume:
+            self._restore_swapped(req, seq)
+        req.status = "prefilling"
+        self._prefilling.append(seq)
+        return True
+
+    # ------------------------------------------------- preemption (swap)
+    def _lowest_victim(self, below: int) -> Optional[_Seq]:
+        """Lowest-priority active sequence STRICTLY below ``below`` —
+        ties broken youngest-first (largest req_id: the sequence that got
+        the least service loses).  Prefilling sequences are never victims
+        (nothing decoded yet; their admission is about to be re-litigated
+        anyway) and neither are cancelled ones (the reaper owns those)."""
+        best = None
+        best_key = None
+        for seq in self._active:
+            req = seq.req
+            if req.cancelled.is_set() or req.priority >= below:
+                continue
+            key = (req.priority, -req.req_id)
+            if best is None or key < best_key:
+                best, best_key = seq, key
+        return best
+
+    def _preempt_for_slot(self) -> bool:
+        """Batch full: preempt the lowest-priority active sequence iff the
+        waiting-queue head strictly outranks it."""
+        if not self.swap_enabled:
+            return False
+        with self._wlock:
+            head = self.admission.peek(self._waiting)
+        if head is None or head.cancelled.is_set():
+            return False
+        victim = self._lowest_victim(head.priority)
+        if victim is None:
+            return False
+        return self._preempt_seq(victim)
+
+    def _preempt_for_pages(self, req: Request, shortfall: int) -> bool:
+        """Preempt strictly-lower-priority active sequences until their
+        OWNED pages cover ``shortfall`` (all-or-nothing per victim: a
+        victim whose spill does not fit the arena stays resident)."""
+        freed = 0
+        any_preempted = False
+        while freed < shortfall:
+            victim = self._lowest_victim(req.priority)
+            if victim is None:
+                return any_preempted
+            owned = len(victim.pages) - victim.owned_from
+            if not self._preempt_seq(victim):
+                return any_preempted     # arena full: stop preempting
+            any_preempted = True
+            freed += owned
+        return True
+
+    def _preempt_seq(self, seq: _Seq) -> bool:
+        """Spill one active sequence to the host arena and park it.
+
+        ORDER (the mirror of migration's import-before-export): the
+        device→host copy completes — np.asarray blocks on the transfer —
+        and the manifest is recorded BEFORE ``_release_seq`` retires the
+        device pages through the SMR, so at no instant does neither tier
+        hold the K/V bytes.  Only full pages spill: the tail positions of
+        a partly-filled page (and the not-yet-written K/V of the latest
+        emitted token) are re-ingested by prefill chunks on resume, which
+        reproduces them bit-identically.  False (victim stays resident,
+        nothing released) when the arena cannot take the spill."""
+        req = seq.req
+        t = len(seq.tokens)
+        # positions 0..t-2 are in pages (the latest token's K/V is written
+        # by the NEXT step); spill the full pages among them
+        aligned = ((t - 1) // self.page_size) * self.page_size
+        if aligned > 0:
+            ks, vs = [], []
+            for j in range(aligned // self.page_size):
+                kp, vp = self._gather_page(self.k_pages, self.v_pages,
+                                           int(seq.page_row[j]))
+                ks.append(np.asarray(kp))   # blocks: copy is complete
+                vs.append(np.asarray(vp))
+            try:
+                self.swap_arena.store(req.req_id, np.stack(ks),
+                                      np.stack(vs), aligned)
+            except SwapArenaFullError:
+                return False
+        # bytes are safe in the arena (or recomputable): NOW retire the
+        # device claim through the normal SMR paths
+        self._active.remove(seq)
+        self._release_seq(seq)
+        req._hit_pages = []
+        req._hit_tokens = 0
+        req.fold_emitted()
+        req._swap_tokens = aligned
+        req.status = "swapped"
+        req.preemptions += 1
+        self.n_preemptions += 1
+        with self._wlock:
+            self.admission.push(self._waiting, req)
+        return True
+
+    def _restore_swapped(self, req: Request, seq: _Seq) -> None:
+        """Copy a resuming sequence's arena pages back into its freshly
+        allocated device pages.  Prefix-cache hits win: arena pages the
+        hit already covers are discarded; the device copy completes
+        (block_until_ready) BEFORE the slots are freed — the swap-in half
+        of the copy-before-free contract.  A checksum failure falls back
+        to recompute-from-tokens (the prompt is authoritative) instead of
+        decoding from corrupt KV."""
+        start = req._hit_tokens          # page-aligned (lookup guarantees)
+        man = self.swap_arena.manifest(req.req_id) \
+            if self.swap_arena is not None else None
+        if man is not None and man.n_tokens > start:
+            from_page = start // self.page_size
+            try:
+                k_np, v_np = self.swap_arena.load(req.req_id, from_page)
+            except SwapChecksumError:
+                seq.filled = start       # recompute everything past the hit
+            else:
+                for i in range(k_np.shape[0]):
+                    pid = int(seq.page_row[from_page + i])
+                    self.k_pages, self.v_pages = self._scatter_page(
+                        self.k_pages, self.v_pages, pid,
+                        jnp.asarray(k_np[i]), jnp.asarray(v_np[i]))
+                jax.block_until_ready(self.k_pages)
+                seq.filled = man.n_tokens
+        self._release_swap(req)
+        self.n_resumed += 1
 
     def _emit(self, seq: _Seq, tok: int) -> None:
         """Append one generated token and wake streamers."""
         seq.tokens.append(tok)
-        seq.req.out_tokens.append(tok)
-        seq.req.out_times.append(time.perf_counter())
-        seq.req._progress.set()
+        req = seq.req
+        now = time.perf_counter()
+        # ITL SLO is OBSERVED, never enforced: a preemption gap between
+        # two tokens counts as a violation (that is the cost being
+        # measured), but the request keeps running
+        if req._itl_slo_s is not None and req.out_times \
+                and now - req.out_times[-1] > req._itl_slo_s:
+            self.n_itl_violations += 1
+        req.out_tokens.append(tok)
+        req.out_times.append(now)
+        req._progress.set()
 
     def _advance_prefill(self, seq: _Seq, grant: int) -> None:
         """Ingest the next ``grant`` prompt tokens of one prefilling
@@ -915,6 +1177,23 @@ class _ShardEngine:
         seq.req.status = status
         seq.req._progress.set()
         seq.req.done.set()
+
+    def warm_swap(self) -> None:
+        """Pre-compile the per-page device↔host movers so the FIRST
+        preemption doesn't pay their jit cost inside a high-priority
+        request's TTFT window.  Gathers page 0 and scatters the identical
+        values straight back (the scatter donation replaces the pool
+        arrays with bit-identical contents) — safe on a live engine,
+        serialised with steps by the step lock.  No-op unless the swap
+        tier is enabled."""
+        if not self.swap_enabled:
+            return
+        with self._step_lock:
+            kp, vp = self._gather_page(self.k_pages, self.v_pages, 0)
+            kp_h, vp_h = np.asarray(kp), np.asarray(vp)
+            self.k_pages, self.v_pages = self._scatter_page(
+                self.k_pages, self.v_pages, 0, kp_h, vp_h)
+            jax.block_until_ready(self.k_pages)
 
     def warm_packed(self) -> None:
         """Pre-compile every packed-prefill segment bucket (1, 2, 4, ...,
@@ -1154,6 +1433,12 @@ class _ShardEngine:
             "completed": self.n_completed,
             "cancelled": self.n_cancelled,
             "failed": self.n_failed,
+            "preemptions": self.n_preemptions,
+            "resumed": self.n_resumed,
+            "slo_cancelled": self.n_slo_cancelled,
+            "itl_slo_violations": self.n_itl_violations,
+            "swap": (self.swap_arena.stats()
+                     if self.swap_arena is not None else None),
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens_wasted": self.prefill_tokens_wasted,
             "packed_chunks": self.packed_chunks,

@@ -95,6 +95,12 @@ class AdmissionPolicy:
     def pop(self, queue) -> Optional[object]:
         raise NotImplementedError
 
+    def peek(self, queue) -> Optional[object]:
+        """The request :meth:`pop` would return, WITHOUT removing it —
+        the engine's preemption check (does the queue head outrank the
+        lowest-priority active sequence?) must not dequeue anything."""
+        raise NotImplementedError
+
     def requeue(self, queue, req) -> None:
         """Pool-pressure path: the request could not be admitted and must
         come back *before* its peers."""
@@ -123,6 +129,9 @@ class FifoAdmission(AdmissionPolicy):
 
     def pop(self, queue):
         return queue.popleft() if queue else None
+
+    def peek(self, queue):
+        return queue[0] if queue else None
 
     def requeue(self, queue, req) -> None:
         queue.appendleft(req)
@@ -162,6 +171,9 @@ class PriorityAdmission(AdmissionPolicy):
 
     def pop(self, queue):
         return heapq.heappop(queue)[2] if queue else None
+
+    def peek(self, queue):
+        return queue[0][2] if queue else None
 
     def requeue(self, queue, req) -> None:
         heapq.heappush(queue, (-getattr(req, "priority", 0),

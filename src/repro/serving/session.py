@@ -90,8 +90,19 @@ class RequestHandle:
     def status(self) -> str:
         """``waiting`` → ``prefilling`` (pages reserved, prompt chunks being
         ingested under the scheduler's token budget) → ``active`` (decoding)
-        → ``done`` | ``cancelled`` | ``failed``."""
+        → ``done`` | ``cancelled`` | ``failed``.  Under the ``swap``
+        eviction policy a request may additionally park as ``swapped``
+        (preempted by a higher priority class: K/V spilled to the host
+        arena, waiting to resume) before going back through
+        ``prefilling``."""
         return self.req.status
+
+    @property
+    def preemptions(self) -> int:
+        """Times this request was preempted to the host swap tier.
+        Tokens already streamed are unaffected — resume continues
+        bit-identically from where decode stopped."""
+        return self.req.preemptions
 
     @property
     def done(self) -> threading.Event:
@@ -303,11 +314,13 @@ class ServingSession:
         self.engine.start()
 
     def warm(self) -> None:
-        """Pre-compile the packed-prefill segment buckets on every shard
-        (no-op under non-packing schedulers) so jit cost never lands on a
-        live request's latency.  Safe before or after :meth:`start`."""
+        """Pre-compile the packed-prefill segment buckets and (when the
+        swap tier is on) the per-page device↔host movers on every shard,
+        so jit cost never lands on a live request's latency.  Safe before
+        or after :meth:`start`."""
         for shard in self.engine.shards:
             shard.warm_packed()
+            shard.warm_swap()
 
     def close(self, drain: bool = True, timeout: float = 30.0) -> None:
         if self._closed:
@@ -325,17 +338,25 @@ class ServingSession:
 
     # ------------------------------------------------------------- traffic
     def _as_request(self, prompt, max_new_tokens: int, priority: int,
-                    timeout_s: Optional[float]) -> Request:
+                    timeout_s: Optional[float],
+                    priority_class: Optional[str] = None) -> Request:
         if isinstance(prompt, Request):
             if timeout_s is not None and prompt.timeout_s is None:
                 prompt.timeout_s = timeout_s
+            if priority_class is not None and prompt.priority_class is None:
+                prompt.priority_class = priority_class
             return prompt
+        if priority_class is not None:
+            # fail unknown names on the caller's thread, before routing
+            self.config.priority_class(priority_class)
         return Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
-                       priority=priority, timeout_s=timeout_s)
+                       priority=priority, timeout_s=timeout_s,
+                       priority_class=priority_class)
 
     def submit(self, prompt: Union[Sequence[int], Request], *,
                max_new_tokens: int = 16, priority: int = 0,
-               timeout_s: Optional[float] = None) -> RequestHandle:
+               timeout_s: Optional[float] = None,
+               priority_class: Optional[str] = None) -> RequestHandle:
         """Async submission: returns immediately with a
         :class:`RequestHandle` (done-event, token stream, cancel).
         ``timeout_s`` is a per-request DEADLINE (falling back to
@@ -343,10 +364,13 @@ class ServingSession:
         cancels the request through the normal cancel path — terminal
         status ``cancelled``, pages released.  Distinct from the wait
         bound ``RequestHandle.wait(timeout)``, which only bounds the
-        caller's blocking."""
+        caller's blocking.  ``priority_class`` names one of
+        ``ServingConfig.priority_classes``: it overrides ``priority`` and
+        attaches the class's TTFT/ITL SLOs (DESIGN.md §15)."""
         if self._closed:
             raise RuntimeError("session is closed")
-        req = self._as_request(prompt, max_new_tokens, priority, timeout_s)
+        req = self._as_request(prompt, max_new_tokens, priority, timeout_s,
+                               priority_class)
         shard = self.engine.submit(req)
         with self._lock:
             self._submitted += 1
@@ -354,12 +378,15 @@ class ServingSession:
 
     def submit_many(self, prompts: Sequence[Union[Sequence[int], Request]],
                     *, max_new_tokens: int = 16, priority: int = 0,
-                    timeout_s: Optional[float] = None) -> List[RequestHandle]:
+                    timeout_s: Optional[float] = None,
+                    priority_class: Optional[str] = None
+                    ) -> List[RequestHandle]:
         """Batched admission wave: per-shard grouped lookups under one SMR
         guard scope each (DESIGN.md §4)."""
         if self._closed:
             raise RuntimeError("session is closed")
-        reqs = [self._as_request(p, max_new_tokens, priority, timeout_s)
+        reqs = [self._as_request(p, max_new_tokens, priority, timeout_s,
+                                 priority_class)
                 for p in prompts]
         placement = self.engine.submit_many(reqs)
         with self._lock:
@@ -407,6 +434,18 @@ class ServingSession:
             "failed_requests": sum(s["failed"] for s in shards),
             "crashed_shards": sum(1 for s in shards if s["crashed"]),
             "degraded_shards": sum(1 for s in shards if s["degraded"]),
+            # swap tier + priority-class SLOs (DESIGN.md §15)
+            "preemptions": sum(s["preemptions"] for s in shards),
+            "resumed": sum(s["resumed"] for s in shards),
+            "slo_cancelled": sum(s["slo_cancelled"] for s in shards),
+            "itl_slo_violations": sum(s["itl_slo_violations"]
+                                      for s in shards),
+            "swapped_out": sum(s["swap"]["swapped_out"] for s in shards
+                               if s["swap"] is not None),
+            "swapped_in": sum(s["swap"]["swapped_in"] for s in shards
+                              if s["swap"] is not None),
+            "swap_bytes_used": sum(s["swap"]["bytes_used"] for s in shards
+                                   if s["swap"] is not None),
         }
         # chunk-weighted mean across shards (NOT a mean of per-shard means)
         totals["packed_segments_per_chunk"] = (

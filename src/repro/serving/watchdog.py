@@ -181,6 +181,10 @@ class SessionWatchdog:
 
         def retire_source():
             source.pool.export_claim(src_hits, src_owned)
+            # a swapped request's arena bytes are redundant once another
+            # domain owns it (the replay prompt recomputes them there) —
+            # discard the manifest so the source arena's slots free up
+            source._release_swap(req)
 
         if req.cancelled.is_set() or \
                 (req.deadline is not None and now > req.deadline):
@@ -192,13 +196,12 @@ class SessionWatchdog:
             req._progress.set()
             req.done.set()
             return
-        emitted = list(req.out_tokens)
-        if emitted:
-            # replay prompt: decode-active sequences replay their emitted
-            # tokens through the target's prefill (deterministic greedy ⇒
-            # the continuation is token-exact)
-            req.prompt = list(req.prompt) + emitted
-            req.max_new_tokens -= len(emitted)
+        # replay prompt: decode-active sequences replay their emitted
+        # tokens through the target's prefill (deterministic greedy ⇒
+        # the continuation is token-exact).  fold_emitted's cursor makes
+        # this idempotent — a request migrated (or preempted) twice must
+        # not fold its first leg's tokens twice.
+        req.fold_emitted()
         targets = self._healthy_targets()
         # prefix-affine placement among the healthy shards only
         order = []

@@ -58,6 +58,8 @@ SERVING_SURFACE = sorted([
     "as_admission_policy", "as_eviction_policy", "as_scheduler_policy",
     # fault tolerance (DESIGN.md §14)
     "SessionWatchdog", "FaultSpec", "fault_kinds", "parse_fault",
+    # host swap tier + priority preemption (DESIGN.md §15)
+    "PriorityClass", "parse_priority_class",
 ])
 
 
@@ -88,7 +90,7 @@ def test_registry_names_snapshot():
     assert api.traversal_policies() == ["optimistic", "scot", "hm",
                                         "waitfree"]
     assert api.admission_policies() == ["fifo", "priority"]
-    assert api.eviction_policies() == ["fifo", "pressure", "lru"]
+    assert api.eviction_policies() == ["fifo", "pressure", "lru", "swap"]
     assert api.scheduler_policies() == ["chunked", "oneshot", "roundrobin",
                                         "packed"]
 

@@ -1,7 +1,8 @@
 """Serving-policy registries and runtime satellites — no model required:
 admission ordering (fifo/priority), scheduler budget division
-(chunked/oneshot/roundrobin/packed), eviction victim order (fifo/pressure/lru via
-the NM-tree ordered index), ServingConfig validation, PrefixRouter
+(chunked/oneshot/roundrobin/packed), eviction victim order (fifo/pressure/lru
+via the NM-tree ordered index; swap in tests/test_swap.py), ServingConfig
+validation, PrefixRouter
 placement, BlockPool.reserve, and NMTree.min_key."""
 
 from types import SimpleNamespace
@@ -30,7 +31,7 @@ from repro.serving import (
 # ----------------------------------------------------------- registries
 def test_policy_registries():
     assert admission_policies() == ["fifo", "priority"]
-    assert eviction_policies() == ["fifo", "pressure", "lru"]
+    assert eviction_policies() == ["fifo", "pressure", "lru", "swap"]
     # the facade exposes the same queries as with traversal policies
     assert api.admission_policies() == admission_policies()
     assert api.eviction_policies() == eviction_policies()
