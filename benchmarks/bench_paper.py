@@ -25,6 +25,17 @@ def _row(name, result):
             f"restarts={result.ds_stats.get('restarts', 0)}")
 
 
+def _median_workload(repeats, **kwargs):
+    """Median-of-N run for the headline throughput figures: the quick-mode
+    samples are short (0.4s) and multithreaded, so single draws jitter
+    ±30-50% under scheduler luck — enough to scramble *scheme ordering*,
+    which is the reproducible signal these rows exist for.  The median
+    resists one unlucky draw without averaging away real contention."""
+    runs = sorted((run_workload(**kwargs) for _ in range(repeats)),
+                  key=lambda r: r.total_ops / r.duration_s)
+    return runs[len(runs) // 2]
+
+
 def fig7_recovery(quick=True):
     """Figure 7: HList with vs without restart recovery (50r-50w)."""
     threads = [2, 4] if quick else [1, 4, 8, 16]
@@ -48,13 +59,15 @@ def fig8_list_throughput(quick=True, workload="50r-50w"):
     threads = [2, 4] if quick else [1, 4, 8, 16]
     ranges = [16, 512] if quick else [16, 512, 10000]
     dur = 0.4 if quick else 3.0
+    reps = 3 if quick else 1
     for structure in ("HMList", "HList"):
         for scheme in SCHEMES:
             for kr in ranges:
                 for t in threads:
-                    r = run_workload(structure=structure, scheme=scheme,
-                                     threads=t, key_range=kr,
-                                     workload=workload, duration_s=dur)
+                    r = _median_workload(reps, structure=structure,
+                                         scheme=scheme, threads=t,
+                                         key_range=kr, workload=workload,
+                                         duration_s=dur)
                     yield _row(
                         f"fig8/{structure}-{scheme}-k{kr}-t{t}-{workload}", r)
 
@@ -64,12 +77,13 @@ def fig9_tree_throughput(quick=True, workload="50r-50w"):
     threads = [2, 4] if quick else [1, 4, 8, 16]
     ranges = [128] if quick else [128, 100000]
     dur = 0.4 if quick else 3.0
+    reps = 3 if quick else 1
     for scheme in SCHEMES:
         for kr in ranges:
             for t in threads:
-                r = run_workload(structure="NMTree", scheme=scheme,
-                                 threads=t, key_range=kr,
-                                 workload=workload, duration_s=dur)
+                r = _median_workload(reps, structure="NMTree", scheme=scheme,
+                                     threads=t, key_range=kr,
+                                     workload=workload, duration_s=dur)
                 yield _row(f"fig9/NMTree-{scheme}-k{kr}-t{t}-{workload}", r)
 
 

@@ -1,0 +1,234 @@
+"""Pool-contention benchmarks: the ISSUE-9 dogfood claim, measured.
+
+Four probes, all following the harness CSV convention
+(``name,us_per_call,derived``; every ``speedup=`` is computed against a
+baseline re-measured in the same process, bench_atomics-style):
+
+* ``freelist-churn-tN`` — N threads hammering ``alloc()``/``free()`` on one
+  shared free list, nobody misbehaving.  Honest GIL caveat, reported as-is:
+  a CPython mutex around ``list.pop`` is a handful of bytecodes, the
+  SMR-guarded pop is dozens, and the GIL serializes both — so the mutex
+  *wins* this row.  The lock-free pool is not bought for quiescent Mops.
+* ``freelist-wedged-peer-t4`` — the row the pool is bought for: the pool-
+  level twin of the serving stalled-shard scenario (the watchdog's reason
+  to exist; the chaos suite wedges shards for 0.2-0.5s).  One of four
+  threads repeatedly wedges *mid-pool-operation* for 0.1s via the chaos
+  seam — a thread descheduled, GC-paused, or plain sick.  Under the mutex
+  it is wedged while HOLDING the lock (there is nowhere else for it to be),
+  and every healthy thread's admission convoys behind it; lock-free it
+  holds one retired stack hint and blocks nobody.  us_per_call counts the
+  three healthy threads' ops — "admission from N shards never serializes
+  on a pool mutex" (ISSUE 9), quantified.
+* ``reserve-seedremove`` — replica of the seed's O(n) ``list.remove``
+  reserve under the pool mutex vs the O(1) state-table CAS (satellite 1),
+  on a pool big enough that the scan shows up.
+* ``pool-wedged-peer-t4`` — the wedged-peer scenario end-to-end through
+  :class:`BlockPool` (PageNode recycling + page-SMR retire included):
+  ``pool_scheme="locked"`` vs the default lock-free ``"VBR"``.
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+from typing import Iterator, List
+
+from repro.core.smr import make_scheme
+from repro.runtime.block_pool import BlockPool
+from repro.runtime.free_list import LockFreeFreeList, LockedFreeList
+
+# The wedged peer: between wedges it behaves (STALL_EVERY quick ops), then
+# it stalls mid-operation for STALL_S.  The serving chaos suite's stall
+# faults wedge a shard for 0.2-0.5s; 0.1s is the modest end of that range.
+STALL_EVERY = 100
+STALL_S = 0.1
+
+
+def _row(name: str, per_call_s: float, extra: str = "") -> str:
+    us = per_call_s * 1e6
+    mops = 1.0 / per_call_s / 1e6
+    derived = f"mops={mops:.4f}" + (f";{extra}" if extra else "")
+    return f"{name},{us:.4f},{derived}"
+
+
+def _make_freelist(kind: str, num_pages: int):
+    if kind == "locked":
+        return LockedFreeList(num_pages)
+    return LockFreeFreeList(
+        num_pages, make_scheme("VBR", num_slots=2,
+                               retire_scan_freq=64, epoch_freq=64))
+
+
+def _churn(n_threads: int, ops_per_thread: int, body,
+           staller_body=None) -> float:
+    """``body(ops)`` in N healthy threads (plus an optional staller that
+    runs until they finish) under an adversarial switch interval; returns
+    seconds per healthy-thread op."""
+    barrier = threading.Barrier(n_threads + 1)
+    done = threading.Event()
+
+    def worker():
+        barrier.wait()
+        body(ops_per_thread)
+        barrier.wait()
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    if staller_body is not None:
+        threads.append(threading.Thread(target=staller_body, args=(done,)))
+    for t in threads:
+        t.start()
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    try:
+        barrier.wait()
+        t0 = time.perf_counter()
+        barrier.wait()
+        wall = time.perf_counter() - t0
+    finally:
+        sys.setswitchinterval(old)
+        done.set()
+        for t in threads:
+            t.join()
+    return wall / (n_threads * ops_per_thread)
+
+
+def _install_staller(fl, stall_s: float):
+    """Arm the chaos seam for ONE designated thread: every STALL_EVERY of
+    its pool ops it wedges for ``stall_s`` mid-operation (mutex held on the
+    locked engine — there is no other place for it to stall; no lock held
+    on the lock-free engine — there is no lock to hold)."""
+    state = {"ident": None, "count": 0}
+
+    def hook():
+        if threading.get_ident() != state["ident"]:
+            return
+        state["count"] += 1
+        if state["count"] % STALL_EVERY == 0:
+            time.sleep(stall_s)
+
+    fl._chaos_stall = hook
+    return state
+
+
+def bench_pool(quick: bool = True) -> Iterator[str]:
+    pages = 256
+    ops = 20_000 if quick else 200_000
+
+    # ---- quiescent churn: the honest GIL baseline ----------------------
+    for n_threads in (1, 4):
+        per_call = {}
+        for kind in ("locked", "lockfree"):
+            fl = _make_freelist(kind, pages)
+
+            def body(n, fl=fl):
+                alloc, free = fl.alloc, fl.free
+                for _ in range(n):
+                    free(alloc())
+
+            per_call[kind] = _churn(n_threads, ops // n_threads, body)
+        yield _row(f"pool/freelist-churn-t{n_threads}-locked",
+                   per_call["locked"])
+        yield _row(
+            f"pool/freelist-churn-t{n_threads}-lockfree-VBR",
+            per_call["lockfree"],
+            f"speedup={per_call['locked'] / per_call['lockfree']:.2f}x")
+
+    # ---- wedged-peer churn: the acceptance row -------------------------
+    healthy_ops = 600 if quick else 1500
+    per_call = {}
+    for kind in ("locked", "lockfree"):
+        fl = _make_freelist(kind, pages)
+        state = _install_staller(fl, STALL_S)
+
+        def body(n, fl=fl):
+            alloc, free = fl.alloc, fl.free
+            for _ in range(n):
+                free(alloc())
+
+        def staller(done, fl=fl, state=state):
+            state["ident"] = threading.get_ident()
+            alloc, free = fl.alloc, fl.free
+            while not done.is_set():
+                free(alloc())
+
+        per_call[kind] = _churn(3, healthy_ops, body, staller_body=staller)
+    yield _row("pool/freelist-wedged-peer-t4-locked", per_call["locked"])
+    yield _row(
+        "pool/freelist-wedged-peer-t4-lockfree-VBR", per_call["lockfree"],
+        f"speedup={per_call['locked'] / per_call['lockfree']:.2f}x")
+
+    # ---- reserve: seed O(n) list.remove vs O(1) state CAS --------------
+    big = 4096
+    n_res = (ops // 4) if quick else ops
+    seed = _SeedListReserve(big)
+    fast = _make_freelist("lockfree", big)
+    # a low id: the seed scans ~the whole free list per remove (ids were
+    # seeded ascending; the engine's historical reserve target was the
+    # scratch page, id 0)
+    t0 = time.perf_counter()
+    for _ in range(n_res):
+        seed.reserve(7)
+        seed.unreserve(7)
+    t_seed = (time.perf_counter() - t0) / (2 * n_res)
+    t0 = time.perf_counter()
+    for _ in range(n_res):
+        fast.reserve(7)
+        fast.unreserve(7)
+    t_fast = (time.perf_counter() - t0) / (2 * n_res)
+    yield _row("pool/reserve-seedremove-4096", t_seed)
+    yield _row("pool/reserve-statecas-4096", t_fast,
+               f"speedup={t_seed / t_fast:.2f}x")
+
+    # ---- wedged-peer scenario end-to-end through BlockPool -------------
+    per_call = {}
+    for pool_scheme in ("locked", "VBR"):
+        smr = make_scheme("EBR", retire_scan_freq=16, epoch_freq=16)
+        pool = BlockPool(smr, pages, pool_scheme=pool_scheme)
+        state = _install_staller(pool._free, STALL_S)
+
+        def body(n, pool=pool):
+            alloc, release = pool.try_alloc, pool.release
+            for _ in range(n):
+                node = alloc()
+                if node is not None:
+                    release(node)
+                else:
+                    pool.smr.help_reclaim()
+
+        def staller(done, pool=pool, state=state):
+            state["ident"] = threading.get_ident()
+            while not done.is_set():
+                node = pool.try_alloc()
+                if node is not None:
+                    pool.release(node)
+
+        per_call[pool_scheme] = _churn(3, healthy_ops, body,
+                                       staller_body=staller)
+    yield _row("pool/pool-wedged-peer-t4-locked", per_call["locked"])
+    yield _row("pool/pool-wedged-peer-t4-lockfree-VBR", per_call["VBR"],
+               f"speedup={per_call['locked'] / per_call['VBR']:.2f}x")
+
+
+class _SeedListReserve:
+    """Replica of the seed's reserve path: free ids in a plain list,
+    reserve = O(n) ``list.remove`` under the pool mutex (the ISSUE-9 seed's
+    runtime/block_pool.py:118)."""
+
+    def __init__(self, num_pages: int):
+        self._free_ids: List[int] = list(range(num_pages))
+        self._reserved: List[int] = []
+        self._lock = threading.Lock()
+
+    def reserve(self, pid: int) -> None:
+        with self._lock:
+            self._free_ids.remove(pid)
+            self._reserved.append(pid)
+
+    def unreserve(self, pid: int) -> None:
+        with self._lock:
+            self._reserved.remove(pid)
+            self._free_ids.append(pid)
+
+
+ALL = {"pool": bench_pool}

@@ -40,7 +40,7 @@ def main() -> None:
                     help="paper-scale grid (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench families "
-                         "(atomics,batch,paper,kernels,serving)")
+                         "(atomics,batch,pool,paper,kernels,serving)")
     ap.add_argument("--workload", default="50r-50w",
                     choices=["50r-50w", "90r-10w", "0r-100w"],
                     help="workload mix for fig8/fig9 (appendix figures)")
@@ -56,7 +56,7 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else \
-        {"atomics", "batch", "paper", "kernels", "serving"}
+        {"atomics", "batch", "pool", "paper", "kernels", "serving"}
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -78,6 +78,11 @@ def main() -> None:
         from .bench_batch import bench_batch
         for row in bench_batch(quick=quick):
             emit("batch", row)
+
+    if "pool" in only:
+        from .bench_pool import bench_pool
+        for row in bench_pool(quick=quick):
+            emit("pool", row)
 
     if "paper" in only:
         from . import bench_paper as bp

@@ -15,7 +15,18 @@ from .atomics import (
     SmrNode,
     UseAfterFreeError,
 )
-from .smr import EBR, HE, HP, IBR, NR, SCHEMES, Hyaline1S, SmrScheme, make_scheme
+from .smr import (
+    EBR,
+    HE,
+    HP,
+    IBR,
+    NR,
+    SCHEMES,
+    VBR,
+    Hyaline1S,
+    SmrScheme,
+    make_scheme,
+)
 from .structures import (
     CarefulHM,
     HarrisList,
@@ -42,6 +53,7 @@ __all__ = [
     "HE",
     "HP",
     "IBR",
+    "VBR",
     "NR",
     "Hyaline1S",
     "SmrScheme",

@@ -7,6 +7,7 @@ from .hp import HP
 from .hyaline import Hyaline1S
 from .ibr import IBR
 from .nr import NR
+from .vbr import VBR
 
 SCHEMES = {
     "NR": NR,
@@ -15,6 +16,7 @@ SCHEMES = {
     "HE": HE,
     "IBR": IBR,
     "HLN": Hyaline1S,
+    "VBR": VBR,
 }
 
 
@@ -36,6 +38,7 @@ __all__ = [
     "HP",
     "HE",
     "IBR",
+    "VBR",
     "Hyaline1S",
     "SCHEMES",
     "make_scheme",

@@ -26,7 +26,9 @@ import threading
 from typing import Callable, List, Optional
 
 from ..core.atomics import AtomicInt, Recycler, SmrNode
+from ..core.smr import SCHEMES
 from ..core.smr.base import SmrScheme
+from .free_list import FreeListEmpty, LockFreeFreeList, LockedFreeList
 
 
 class PageNode(SmrNode):
@@ -70,15 +72,49 @@ class OutOfPagesError(RuntimeError):
     pass
 
 
-class BlockPool:
-    """Free-list + SMR-deferred reuse of KV pages."""
+def _make_free_list(num_pages: int, pool_scheme: str):
+    """Negotiate the free-list engine from ``pool_scheme``.
 
-    def __init__(self, smr: SmrScheme, num_pages: int):
+    ``"locked"`` is the mutex fallback; any other name must be a registered
+    SMR scheme that actually reclaims (``reclaims=True``) — the free list
+    retires a stack cell per pop, and a never-reclaiming scheme (NR) would
+    leak a cell per alloc.  The scheme instance is dedicated to the list
+    (small slot count, eager scan) so its reservations never interact with
+    the caller's open guards."""
+    if pool_scheme == "locked":
+        return LockedFreeList(num_pages)
+    cls = SCHEMES.get(pool_scheme.upper())
+    if cls is None:
+        raise ValueError(
+            f"unknown pool_scheme {pool_scheme!r}: choose a reclaiming SMR "
+            f"scheme ({sorted(SCHEMES)}) or 'locked'")
+    if not cls.reclaims:
+        raise ValueError(
+            f"pool_scheme {cls.name!r} never reclaims (reclaims=False) — "
+            f"free-list cells would leak one per alloc; choose a "
+            f"reclaims=True scheme (api.schemes(reclaims=True)) or 'locked'")
+    smr = cls(num_slots=2, retire_scan_freq=32, epoch_freq=32)
+    return LockFreeFreeList(num_pages, smr)
+
+
+class BlockPool:
+    """Free-list + SMR-deferred reuse of KV pages.
+
+    ``pool_scheme`` picks the free-list engine (DESIGN.md §16): any
+    ``reclaims=True`` SMR scheme name builds a :class:`LockFreeFreeList`
+    under a dedicated instance of that scheme (default ``"VBR"`` — alloc/
+    free/reserve never take a mutex), while ``"locked"`` keeps the seed's
+    mutex list (with O(1) set-based reserve).  The scheme governing the
+    *pages* (``smr``) is independent of — and unchanged by — this choice.
+    """
+
+    def __init__(self, smr: SmrScheme, num_pages: int,
+                 pool_scheme: str = "VBR"):
         self.smr = smr
         self.num_pages = num_pages
-        self._free_ids: List[int] = list(range(num_pages))
-        self._reserved_ids: List[int] = []
-        self._lock = threading.Lock()
+        self._free = _make_free_list(num_pages, pool_scheme)
+        self.pool_scheme = "locked" if pool_scheme == "locked" \
+            else pool_scheme.upper()
         self._recycler = Recycler(PageNode)
         # reclamation path: when the SMR scheme frees a PageNode, its id
         # returns to the free list (of the pool that owns it — the dispatch
@@ -94,12 +130,13 @@ class BlockPool:
 
     # ------------------------------------------------------------ alloc
     def alloc(self, seq_id: Optional[int] = None) -> PageNode:
-        with self._lock:
-            if not self._free_ids:
-                raise OutOfPagesError(
-                    f"pool exhausted ({self.num_pages} pages; "
-                    f"{self.smr.not_yet_reclaimed()} awaiting reclamation)")
-            pid = self._free_ids.pop()
+        try:
+            pid = self._free.alloc()
+        except FreeListEmpty:
+            raise OutOfPagesError(
+                f"pool exhausted ({self.num_pages} pages; "
+                f"{self.smr.not_yet_reclaimed()} awaiting reclamation)"
+            ) from None
         node = self._recycler.alloc(pid)
         node.owner = self
         self.smr.alloc_stamp(node)
@@ -112,21 +149,15 @@ class BlockPool:
         page that padded batch rows write to).  The id never becomes a
         :class:`PageNode`, is excluded from ``free``/accounting, and comes
         back via :meth:`unreserve`.  Raises ``ValueError`` if the id is not
-        currently free."""
-        with self._lock:
-            try:
-                self._free_ids.remove(page_id)
-            except ValueError:
-                raise ValueError(
-                    f"page {page_id} is not free (cannot reserve)") from None
-            self._reserved_ids.append(page_id)
+        currently free.  O(1): a state-table CAS on the lock-free path, a
+        set membership check on the locked fallback — never a scan of the
+        free list."""
+        self._free.reserve(page_id)
         return page_id
 
     def unreserve(self, page_id: int) -> None:
         """Return a :meth:`reserve`-d id to the free list."""
-        with self._lock:
-            self._reserved_ids.remove(page_id)
-            self._free_ids.append(page_id)
+        self._free.unreserve(page_id)
 
     def try_alloc(self, seq_id: Optional[int] = None) -> Optional[PageNode]:
         try:
@@ -211,21 +242,21 @@ class BlockPool:
         pid = node.page_id
         self.n_reclaimed.fetch_add(1)
         self._recycler.free(node)  # poisons; resurrected on next alloc
-        with self._lock:
-            self._free_ids.append(pid)
+        # Raises ValueError on a double-free: a page id returning to the
+        # list while already free means two retires raced for one alloc —
+        # a protocol violation, surfaced instead of silently duplicating
+        # the id (mirror of the import_claim hardening).
+        self._free.free(pid)
 
     # ------------------------------------------------------------- stats
     def free_count(self) -> int:
-        with self._lock:
-            return len(self._free_ids)
+        return self._free.free_count()
 
     def stats(self):
-        with self._lock:
-            free = len(self._free_ids)
-            reserved = len(self._reserved_ids)
-        return {
-            "free": free,
-            "reserved": reserved,
+        stats = {
+            "pool_scheme": self.pool_scheme,
+            "free": self._free.free_count(),
+            "reserved": self._free.reserved_count(),
             "alloc": self.n_alloc.load(),
             "retired": self.n_retired.load(),
             "reclaimed": self.n_reclaimed.load(),
@@ -233,3 +264,5 @@ class BlockPool:
             "handoff_in": self.n_handoff_in.load(),
             "handoff_out": self.n_handoff_out.load(),
         }
+        stats.update(self._free.stats())
+        return stats

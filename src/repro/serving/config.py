@@ -90,6 +90,12 @@ class ServingConfig:
     smr: str = "IBR"                    # scheme registry name
     smr_kwargs: Optional[Dict] = None   # None → the serving default tuning
     shard_smr: str = "per_shard"        # "per_shard" | "shared"
+    # free-list engine for each shard's BlockPool (DESIGN.md §16): any
+    # reclaims=True scheme name runs alloc/free/reserve lock-free on a
+    # Treiber stack under a dedicated instance of that scheme; "locked"
+    # falls back to the pre-ISSUE-9 mutex list.  Independent of `smr`
+    # (which governs the pages/index structures, not the free list).
+    pool_scheme: str = "VBR"
 
     # -- shape (per shard) -------------------------------------------------
     num_shards: int = 1
@@ -185,6 +191,13 @@ class ServingConfig:
             raise ValueError(
                 f"scheme {self.smr!r} never reclaims — the page pool would "
                 f"leak dry; choose from {api.schemes(reclaims=True)}")
+        if self.pool_scheme != "locked":
+            # raises ValueError on an unknown scheme name
+            if not api.scheme_info(self.pool_scheme).reclaims:
+                raise ValueError(
+                    f"pool_scheme {self.pool_scheme!r} never reclaims — "
+                    f"free-list cells would leak one per alloc; choose "
+                    f"from {api.schemes(reclaims=True)} or 'locked'")
         if self.shard_smr not in ("per_shard", "shared"):
             raise ValueError("shard_smr must be 'per_shard' or 'shared', "
                              f"got {self.shard_smr!r}")
@@ -299,6 +312,7 @@ class ServingConfig:
         return {
             "smr": self.smr,
             "shard_smr": self.shard_smr,
+            "pool_scheme": self.pool_scheme,
             "num_shards": self.num_shards,
             "num_pages": self.num_pages,
             "page_size": self.page_size,

@@ -168,7 +168,8 @@ class _ShardEngine:
         self.max_pages = config.max_pages
         # SMR domain: per-shard fresh instance unless the session shares one
         self.smr = smr if smr is not None else config.build_scheme()
-        self.pool = BlockPool(self.smr, config.num_pages)
+        self.pool = BlockPool(self.smr, config.num_pages,
+                              pool_scheme=config.pool_scheme)
         self.prefix_cache = PrefixCache(
             self.smr, self.pool, config.page_size,
             max_entries=config.prefix_cache_entries,

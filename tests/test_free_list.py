@@ -1,0 +1,234 @@
+"""ISSUE 9: VBR scheme behavior + the lock-free BlockPool free list.
+
+The pool's own safety property — every page id allocated exactly once at a
+time, ids conserved across arbitrary alloc/free/reserve churn — is hammered
+from multiple threads with a tiny switch interval, the same adversarial
+setup the SCOT safety tests use.
+"""
+
+import sys
+import threading
+
+import pytest
+
+from repro.core.smr import VBR, make_scheme
+from repro.runtime.block_pool import BlockPool, OutOfPagesError
+from repro.runtime.free_list import (
+    FreeListEmpty,
+    LockFreeFreeList,
+    LockedFreeList,
+)
+
+ENGINES = ["lockfree", "locked"]
+
+
+def _make_list(kind, num_pages):
+    if kind == "locked":
+        return LockedFreeList(num_pages)
+    return LockFreeFreeList(num_pages, make_scheme("VBR", retire_scan_freq=4,
+                                                   epoch_freq=4))
+
+
+# --------------------------------------------------------------------- VBR
+def test_vbr_rollback_counter():
+    """A version-clock advance between checkpoint and read sends protect
+    down the rollback slow path, counted in stats()["rollbacks"]."""
+    from repro.core.atomics import AtomicRef
+
+    smr = VBR()
+    src = AtomicRef(None)
+    with smr.guard() as c:
+        assert smr.protect_ref(src, 0, c) is None  # fast path: no rollback
+        before = smr.stats()["rollbacks"]
+        smr.era.fetch_add(1)                       # clock moves past checkpoint
+        assert smr.protect_ref(src, 0, c) is None
+        after = smr.stats()["rollbacks"]
+    assert after == before + 1
+    # the rolled-forward checkpoint covers the new version: fast path again
+    with smr.guard() as c:
+        smr.protect_ref(src, 0, c)
+        n = smr.stats()["rollbacks"]
+        smr.protect_ref(src, 0, c)
+        assert smr.stats()["rollbacks"] == n
+
+
+def test_vbr_eager_scan_default():
+    # VBR reclaims eagerly: tighter retire-scan cadence than the base/IBR
+    # default of 128 (DESIGN.md §16)
+    assert VBR().retire_scan_freq < make_scheme("IBR").retire_scan_freq
+
+
+# -------------------------------------------------------- free-list basics
+@pytest.mark.parametrize("kind", ENGINES)
+def test_alloc_free_roundtrip(kind):
+    fl = _make_list(kind, 4)
+    pids = [fl.alloc() for _ in range(4)]
+    assert sorted(pids) == [0, 1, 2, 3]
+    with pytest.raises(FreeListEmpty):
+        fl.alloc()
+    for pid in pids:
+        fl.free(pid)
+    assert fl.free_count() == 4
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+def test_double_free_is_protocol_violation(kind):
+    fl = _make_list(kind, 4)
+    pid = fl.alloc()
+    fl.free(pid)
+    with pytest.raises(ValueError, match="double-free"):
+        fl.free(pid)
+    assert fl.free_count() == 4  # the violation did not corrupt accounting
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+def test_free_of_reserved_id_rejected(kind):
+    fl = _make_list(kind, 4)
+    fl.reserve(2)
+    with pytest.raises(ValueError, match="reserved"):
+        fl.free(2)
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+def test_reserve_contract(kind):
+    fl = _make_list(kind, 4)
+    fl.reserve(1)
+    with pytest.raises(ValueError, match="not free"):
+        fl.reserve(1)            # already reserved
+    pid = fl.alloc()
+    with pytest.raises(ValueError, match="not free"):
+        fl.reserve(pid)          # allocated
+    with pytest.raises(ValueError, match="not free"):
+        fl.reserve(99)           # out of range
+    with pytest.raises(ValueError, match="not reserved"):
+        fl.unreserve(pid)
+    fl.unreserve(1)
+    assert fl.free_count() == 3  # pages 0..3 minus the one allocated
+
+
+@pytest.mark.parametrize("kind", ENGINES)
+def test_alloc_skips_stale_hints_after_reserve(kind):
+    """Reserving burns the page's stack hint lazily: alloc must discard
+    stale hints and still find every genuinely free page."""
+    fl = _make_list(kind, 4)
+    for pid in range(4):
+        fl.reserve(pid)
+    with pytest.raises(FreeListEmpty):
+        fl.alloc()
+    fl.unreserve(2)
+    assert fl.alloc() == 2
+    with pytest.raises(FreeListEmpty):
+        fl.alloc()
+
+
+def test_lockfree_sweep_claim_covers_hintless_free_pages():
+    # reserve/unreserve churn leaves stale hints; after enough of it the
+    # stack and state table disagree transiently — the state-table sweep
+    # must still find a free page rather than reporting empty
+    fl = _make_list("lockfree", 2)
+    for _ in range(50):
+        fl.reserve(0)
+        fl.unreserve(0)
+    got = sorted(fl.alloc() for _ in range(2))
+    assert got == [0, 1]
+
+
+# ------------------------------------------------------- pool integration
+def test_pool_scheme_negotiation():
+    smr = make_scheme("EBR")
+    assert BlockPool(smr, 4).pool_scheme == "VBR"          # default
+    assert BlockPool(smr, 4, pool_scheme="ebr").pool_scheme == "EBR"
+    assert BlockPool(smr, 4, pool_scheme="locked").pool_scheme == "locked"
+    with pytest.raises(ValueError, match="never reclaims"):
+        BlockPool(smr, 4, pool_scheme="NR")
+    with pytest.raises(ValueError, match="unknown pool_scheme"):
+        BlockPool(smr, 4, pool_scheme="mutex2000")
+
+
+def test_pool_stats_carry_engine():
+    smr = make_scheme("EBR")
+    pool = BlockPool(smr, 4)
+    s = pool.stats()
+    assert s["pool_scheme"] == "VBR"
+    assert "pool_cas_retries" in s and "pool_stale_hints" in s
+    locked = BlockPool(make_scheme("EBR"), 4, pool_scheme="locked")
+    assert locked.stats()["pool_scheme"] == "locked"
+
+
+def test_serving_config_pool_scheme_validation():
+    from repro.serving import ServingConfig
+
+    assert ServingConfig().pool_scheme == "VBR"
+    assert ServingConfig(pool_scheme="locked").summary()["pool_scheme"] == \
+        "locked"
+    with pytest.raises(ValueError, match="never reclaims"):
+        ServingConfig(pool_scheme="NR")
+    with pytest.raises(ValueError):
+        ServingConfig(pool_scheme="nonesuch")
+
+
+# ----------------------------------------------------------------- hammer
+@pytest.mark.parametrize("pool_scheme", ["VBR", "locked"])
+def test_pool_churn_hammer(pool_scheme):
+    """4 threads of alloc/release/reserve/unreserve churn on one BlockPool:
+    no page id is ever held by two owners at once, protocol errors never
+    fire spuriously, and after the dust settles free == num_pages."""
+    num_pages = 32
+    smr = make_scheme("EBR", retire_scan_freq=4, epoch_freq=4)
+    pool = BlockPool(smr, num_pages, pool_scheme=pool_scheme)
+    claimed = [False] * num_pages   # GIL-atomic single-element ops
+    stop = threading.Event()
+    errors = []
+
+    def churn(seed):
+        rng = __import__("random").Random(seed)
+        held = []
+        try:
+            while not stop.is_set():
+                r = rng.random()
+                if r < 0.55 and len(held) < 8:
+                    node = pool.try_alloc(seq_id=seed)
+                    if node is not None:
+                        pid = node.page_id
+                        if claimed[pid]:
+                            raise AssertionError(
+                                f"page {pid} allocated twice concurrently")
+                        claimed[pid] = True
+                        held.append(node)
+                elif r < 0.9 and held:
+                    node = held.pop(rng.randrange(len(held)))
+                    claimed[node.page_id] = False
+                    pool.release(node)
+                else:
+                    pid = rng.randrange(num_pages)
+                    try:
+                        pool.reserve(pid)
+                    except ValueError:
+                        continue    # legitimately not free right now
+                    pool.unreserve(pid)
+        except BaseException as e:  # noqa: BLE001 - surface to main thread
+            errors.append(e)
+        finally:
+            for node in held:
+                claimed[node.page_id] = False
+                pool.release(node)
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    try:
+        threads = [threading.Thread(target=churn, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        import time
+        time.sleep(2.0)
+        stop.set()
+        for t in threads:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+    assert not errors, errors[0]
+    smr.flush()                     # reclaim retired PageNodes
+    assert pool.free_count() == num_pages
+    st = pool.stats()
+    assert st["reserved"] == 0
+    assert st["alloc"] > 0

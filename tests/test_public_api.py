@@ -40,7 +40,7 @@ CORE_SURFACE = sorted([
     "AtomicFlaggedRef", "AtomicInt", "AtomicMarkableRef", "AtomicRef",
     "Recycler", "SmrNode", "UseAfterFreeError",
     # schemes
-    "EBR", "HE", "HP", "IBR", "NR", "Hyaline1S", "SmrScheme",
+    "EBR", "HE", "HP", "IBR", "VBR", "NR", "Hyaline1S", "SmrScheme",
     "SCHEMES", "make_scheme",
     # structures
     "HarrisList", "HarrisMichaelList", "NMTree", "SkipList",
@@ -84,7 +84,7 @@ def test_core_surface_snapshot():
 
 
 def test_registry_names_snapshot():
-    assert api.schemes() == ["NR", "EBR", "HP", "HE", "IBR", "HLN"]
+    assert api.schemes() == ["NR", "EBR", "HP", "HE", "IBR", "HLN", "VBR"]
     assert api.structures() == ["HList", "HMList", "NMTree", "SkipList",
                                 "HashMap"]
     assert api.traversal_policies() == ["optimistic", "scot", "hm",
@@ -101,6 +101,9 @@ def test_scheme_capability_snapshot():
                           "cumulative_protection": False, "reclaims": True,
                           "batch_hints": "flat"}
     assert caps["IBR"] == {"name": "IBR", "robust": True,
+                           "cumulative_protection": True, "reclaims": True,
+                           "batch_hints": "all"}
+    assert caps["VBR"] == {"name": "VBR", "robust": True,
                            "cumulative_protection": True, "reclaims": True,
                            "batch_hints": "all"}
     assert caps["NR"]["reclaims"] is False

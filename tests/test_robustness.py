@@ -59,7 +59,7 @@ def test_ebr_unbounded_under_stall():
     assert big > 4000, f"EBR should leak ~all churn under a stall, got {big}"
 
 
-@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN", "VBR"])
 def test_robust_schemes_bounded_under_stall(scheme):
     small = _garbage_under_stall(scheme, churn_ops=1000)
     big = _garbage_under_stall(scheme, churn_ops=4000)
@@ -69,7 +69,7 @@ def test_robust_schemes_bounded_under_stall(scheme):
     assert big < small + 1200, (small, big)
 
 
-@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN", "VBR"])
 def test_robust_schemes_reclaim_after_stall_clears(scheme):
     smr = make_scheme(scheme, retire_scan_freq=4, epoch_freq=4)
     ds = HarrisList(smr)

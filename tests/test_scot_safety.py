@@ -62,7 +62,7 @@ def _hammer(ds, key_range, duration_s, threads=4, switch=1e-6):
     return caught[0] if caught else None
 
 
-@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN", "VBR"])
 def test_harris_without_scot_is_unsafe(scheme):
     """Reproduces Figure 1: optimistic traversal + robust SMR without SCOT
     touches reclaimed memory.  (Probabilistic: generous deadline, aggressive
@@ -76,7 +76,7 @@ def test_harris_without_scot_is_unsafe(scheme):
     )
 
 
-@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN", "VBR"])
 def test_harris_with_scot_is_safe(scheme):
     smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
     ds = HarrisList(smr, scot=True)
@@ -92,7 +92,7 @@ def test_harris_ebr_safe_without_scot():
     assert err is None
 
 
-@pytest.mark.parametrize("scheme", ["HP", "IBR"])
+@pytest.mark.parametrize("scheme", ["HP", "IBR", "VBR"])
 def test_nmtree_without_scot_is_unsafe(scheme):
     """The second (unresolved-before-this-paper) NM-tree bug [3]."""
     smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
@@ -103,7 +103,7 @@ def test_nmtree_without_scot_is_unsafe(scheme):
     )
 
 
-@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN"])
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "HLN", "VBR"])
 def test_nmtree_with_scot_is_safe(scheme):
     smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
     ds = NMTree(smr, scot=True)
@@ -127,7 +127,7 @@ def test_skiplist_with_scot_is_safe(scheme):
 
 def test_recovery_equivalent_safety():
     """§3.2.1 recovery (ring buffer) preserves safety under IBR/HLN."""
-    for scheme in ["IBR", "HLN"]:
+    for scheme in ["IBR", "HLN", "VBR"]:
         smr = make_scheme(scheme, retire_scan_freq=1, epoch_freq=1)
         ds = HarrisList(smr, scot=True, recovery=True, recovery_depth=8)
         err = _hammer(ds, key_range=16, duration_s=2.0)

@@ -9,7 +9,7 @@ from repro.core.atomics import AtomicMarkableRef, SmrNode
 from repro.core.structures.node import ListNode
 
 ALL = sorted(SCHEMES)
-ROBUST = ["HP", "HE", "IBR", "HLN"]
+ROBUST = ["HP", "HE", "IBR", "HLN", "VBR"]
 
 
 @pytest.mark.parametrize("name", ALL)
@@ -94,7 +94,7 @@ def test_stats_accounting(name):
         assert s["reclaimed"] == 0  # leaks by design
 
 
-@pytest.mark.parametrize("name", ["EBR", "HE", "IBR", "HLN"])
+@pytest.mark.parametrize("name", ["EBR", "HE", "IBR", "HLN", "VBR"])
 def test_era_clock_advances(name):
     smr = make_scheme(name, epoch_freq=2)
     e0 = smr.era.load()

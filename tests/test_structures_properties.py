@@ -18,7 +18,7 @@ from repro.core.structures.hm_list import HarrisMichaelList
 from repro.core.structures.nm_tree import NMTree
 from repro.core.structures.skiplist import SkipList
 
-SCHEMES = ["NR", "EBR", "HP", "HE", "IBR", "HLN"]
+SCHEMES = ["NR", "EBR", "HP", "HE", "IBR", "HLN", "VBR"]
 
 ops_strategy = st.lists(
     st.tuples(st.sampled_from(["insert", "delete", "search"]),

@@ -42,7 +42,7 @@ def _expected_legal(structure: str, scheme: str, policy: str) -> bool:
     }[structure]
     if policy not in supported:
         return False
-    robust = scheme in {"HP", "HE", "IBR", "HLN"}
+    robust = scheme in {"HP", "HE", "IBR", "HLN", "VBR"}
     if policy == "optimistic" and robust:
         return False  # the Figure-1 pair
     return True
@@ -119,10 +119,11 @@ def test_allow_unsafe_escape_hatch():
 
 
 def test_capability_queries():
-    assert api.schemes(robust=True) == ["HP", "HE", "IBR", "HLN"]
+    assert api.schemes(robust=True) == ["HP", "HE", "IBR", "HLN", "VBR"]
     assert api.schemes(cumulative_protection=False) == ["HP", "HE"]
     assert api.schemes(reclaims=False) == ["NR"]
-    assert api.schemes(batch_hints="all") == ["NR", "EBR", "IBR", "HLN"]
+    assert api.schemes(batch_hints="all") == ["NR", "EBR", "IBR", "HLN",
+                                              "VBR"]
     assert api.structures(policy="waitfree") == ["HList", "NMTree",
                                                  "HashMap"]
     assert api.structures(policy="hm") == ["HMList", "HashMap"]
@@ -204,7 +205,7 @@ def test_stalled_writer_does_not_block_tree_reader(scheme):
     assert tree.search(21)
 
 
-@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR"])
+@pytest.mark.parametrize("scheme", ["HP", "HE", "IBR", "VBR"])
 def test_waitfree_policy_safety_hammer(scheme):
     """The wait-free fast path + anchor recovery + careful escalation never
     touch reclaimed memory under adversarial interleaving."""
