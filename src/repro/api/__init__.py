@@ -83,6 +83,7 @@ __all__ = [
     "admission_policies",
     "eviction_policies",
     "scheduler_policies",
+    "sampling_policies",
     "fault_kinds",
     "scheme_info",
     "structure_info",
@@ -111,6 +112,13 @@ def eviction_policies():
 def scheduler_policies():
     """Chunked-prefill scheduler-policy names (registry query)."""
     from ..serving.policies import scheduler_policies as _q
+    return _q()
+
+
+def sampling_policies():
+    """Serving sampling-policy names (registry query — the replay-exact
+    on-device sampling registry, DESIGN.md §17)."""
+    from ..serving.sampling import sampling_policies as _q
     return _q()
 
 

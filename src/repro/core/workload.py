@@ -261,6 +261,7 @@ def run_serving_workload(
     priority_classes: Optional[List[Optional[str]]] = None,
     max_new_tokens_per: Optional[List[int]] = None,
     swallow_errors: bool = False,
+    sampling=None,
 ) -> ServingWorkloadResult:
     """Drive a serving session with concurrent client threads — the serving
     analogue of :func:`run_workload` (one shared request-mix loop instead of
@@ -301,7 +302,13 @@ def run_serving_workload(
     ``per_class`` dict then breaks outcomes and TTFT down per class.
     ``swallow_errors=True`` records submit-time rejections as cancelled
     instead of raising (an oversubscribed run REJECTING work is a result,
-    not a driver bug)."""
+    not a driver bug).
+
+    ``sampling`` is passed through to every ``submit`` call (a policy
+    name like ``"temperature"`` or a ``SamplingPolicy`` instance).  A
+    shared instance shares its seed across requests, which is fine —
+    the counter PRNG keys on absolute position per request, so every
+    request is still individually replay-exact."""
     rng = random.Random(seed)
     if prompts is None:
         prefixes = [[rng.randrange(1, 200) for _ in range(shared_prefix_len)]
@@ -347,6 +354,8 @@ def run_serving_workload(
                 if priority_classes is not None and \
                         priority_classes[i] is not None:
                     kwargs["priority_class"] = priority_classes[i]
+                if sampling is not None:
+                    kwargs["sampling"] = sampling
                 try:
                     h = session.submit(prompts[i], **kwargs)
                 except RuntimeError:

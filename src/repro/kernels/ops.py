@@ -150,6 +150,34 @@ def packed_prefill_attention(q, k_pages, v_pages, page_rows, seg_ids,
     return _packed_xla(q, k_pages, v_pages, page_rows, seg_ids, positions)
 
 
+def sample_tokens(logits, temperature, top_k, top_p, seed, position, *,
+                  stream=ref.STREAM_TARGET, backend: Optional[str] = None):
+    """Fused replay-exact token sampling: logits (B,V) + per-row operands
+    (B,) → (tokens (B,) i32, logprobs (B,) f32).  ``temperature <= 0`` rows
+    are exact ``argmax(logits)`` (logprob 0) — bit-identical to the
+    pre-sampling engine.  Randomness is the stateless counter PRNG keyed by
+    ``(seed, position, stream)`` (see :mod:`repro.kernels.ref`), which is
+    what makes swap/migration replay reproduce tokens without RNG state.
+
+    There is no Pallas variant: the math is a handful of (B,V) jnp ops that
+    fuse into the enclosing jit (the engine's decode/prefill device fns stay
+    one dispatch), so both backends share the reference formulation."""
+    del backend  # single formulation; kept for dispatch-signature parity
+    return ref.sample_tokens_ref(logits, temperature, top_k, top_p, seed,
+                                 position, stream=stream)
+
+
+def spec_verify_rows(p_dist, q_dist, draft_toks, n_draft, seed, base_pos, *,
+                     backend: Optional[str] = None):
+    """Fused speculative-decode rejection sampling (batched rows); see
+    :func:`repro.kernels.ref.spec_verify_ref` for the accept rule, residual
+    construction and replay-keying contract.  Like :func:`sample_tokens`
+    this is pure jnp fused into the caller's jit on every backend."""
+    del backend
+    return ref.spec_verify_rows_ref(p_dist, q_dist, draft_toks, n_draft,
+                                    seed, base_pos)
+
+
 def ssd(x, dt, a, b, c, *, chunk=128, d_skip=None,
         backend: Optional[str] = None):
     kind, interpret = _resolve(backend)

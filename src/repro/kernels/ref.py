@@ -118,6 +118,160 @@ def packed_prefill_attention_ref(q, k_pages, v_pages, page_rows, seg_ids,
     return out.reshape(c, h, d).astype(q.dtype)
 
 
+# ------------------------------------------------------------- sampling
+#
+# Replay-exact token selection (DESIGN.md §17).  All randomness is drawn
+# from a stateless counter-based PRNG keyed by (request_seed,
+# absolute_token_position, stream) — no RNG state advances between steps,
+# so ANY resume path (swap scatter, migration replay, watchdog steal) that
+# re-enters decode at position t draws exactly what the uninterrupted run
+# drew at t.  Streams keep the independent draws of one position apart:
+#   0 = target sample   1 = draft proposal
+#   2 = accept uniform  3 = residual / bonus sample
+
+STREAM_TARGET, STREAM_DRAFT, STREAM_ACCEPT, STREAM_RESIDUAL = 0, 1, 2, 3
+
+_TINY = 1e-30  # log(_TINY) ~ -69 << the float32 gumbel range (~[-3, 17]),
+               # so a one-hot distribution samples its hot index exactly
+
+
+def sample_key_ref(seed, position, stream):
+    """(seed, position, stream) → PRNG key, via a fold_in chain off a fixed
+    base.  Pure function of its inputs: the replay keystone."""
+    k = jax.random.PRNGKey(0)
+    k = jax.random.fold_in(k, jnp.asarray(seed, jnp.uint32))
+    k = jax.random.fold_in(k, jnp.asarray(position, jnp.uint32))
+    return jax.random.fold_in(k, jnp.asarray(stream, jnp.uint32))
+
+
+def filtered_dist_ref(logits, temperature, top_k, top_p):
+    """One row's post-filter sampling distribution, (V,) → (V,) float32.
+
+    temperature <= 0 is the greedy sentinel: the distribution is exactly
+    one-hot at argmax(logits).  Otherwise logits/temperature are top-k
+    masked (keep values >= the k-th largest; top_k == 0 keeps all), then
+    top-p nucleus masked (sorted by probability, keep while the cumulative
+    mass *before* a token is < top_p — the most likely token always
+    survives), then softmaxed."""
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    greedy = jnp.asarray(temperature, jnp.float32) <= 0.0
+    safe_t = jnp.where(greedy, 1.0, jnp.asarray(temperature, jnp.float32))
+    scaled = logits / safe_t
+    k = jnp.clip(jnp.asarray(top_k, jnp.int32), 0, v)
+    kth = jnp.where(
+        k > 0,
+        jnp.sort(scaled)[::-1][jnp.maximum(k - 1, 0)],
+        -jnp.inf)
+    masked = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    probs = jax.nn.softmax(masked)
+    order = jnp.argsort(-probs)
+    sp = probs[order]
+    before = jnp.cumsum(sp) - sp          # mass strictly before each token
+    keep = jnp.zeros((v,), bool).at[order].set(
+        before < jnp.asarray(top_p, jnp.float32))
+    dist = jax.nn.softmax(jnp.where(keep, masked, -jnp.inf))
+    onehot = jax.nn.one_hot(jnp.argmax(logits), v, dtype=jnp.float32)
+    return jnp.where(greedy, onehot, dist)
+
+
+def gumbel_pick_ref(dist, key):
+    """Gumbel-max sample from a probability vector → (token, logprob).
+
+    For a one-hot dist the log-prob gap (~69 nats) dwarfs the float32
+    gumbel range, so the hot index wins deterministically — greedy rows and
+    degenerate residuals stay exact without a separate code path."""
+    logp = jnp.log(jnp.maximum(dist, _TINY))
+    tok = jnp.argmax(logp + jax.random.gumbel(key, dist.shape)).astype(
+        jnp.int32)
+    return tok, logp[tok]
+
+
+def sample_token_ref(logits, temperature, top_k, top_p, seed, position,
+                     stream=STREAM_TARGET):
+    """One row: logits (V,) + per-request operands → (token i32 (),
+    logprob f32 ()).  temperature <= 0 short-circuits to argmax(logits)
+    (bit-identical to the pre-sampling engine) with logprob 0."""
+    greedy = jnp.asarray(temperature, jnp.float32) <= 0.0
+    dist = filtered_dist_ref(logits, temperature, top_k, top_p)
+    tok, lp = gumbel_pick_ref(dist, sample_key_ref(seed, position, stream))
+    tok = jnp.where(greedy, jnp.argmax(logits).astype(jnp.int32), tok)
+    return tok, jnp.where(greedy, 0.0, lp)
+
+
+def sample_tokens_ref(logits, temperature, top_k, top_p, seed, position,
+                      stream=STREAM_TARGET):
+    """Batched :func:`sample_token_ref`: logits (B,V), operands (B,) →
+    (tokens (B,) i32, logprobs (B,) f32)."""
+    return jax.vmap(
+        lambda lg, t, k, p, s, pos: sample_token_ref(lg, t, k, p, s, pos,
+                                                     stream))(
+        logits, temperature, top_k, top_p, seed, position)
+
+
+def spec_verify_ref(p_dist, q_dist, draft_toks, n_draft, seed, base_pos):
+    """Rejection-sample one row of speculative decode (fixed shape).
+
+    p_dist:     (k+1, V) target distributions; p_dist[j] predicts the token
+                at absolute position base_pos + j
+    q_dist:     (k, V) draft proposal distributions (same positions)
+    draft_toks: (k,) the draft's proposed tokens
+    n_draft:    () i32 — how many proposals are live this round (rows past
+                n_draft are forced-rejected; n_draft == 0 degenerates to a
+                plain sampled decode step from p_dist[0])
+    base_pos:   () i32 — absolute position of the first emitted token
+    Returns (tokens (k+1,) i32, n_emit () i32, logprobs (k+1,) f32).
+
+    Accept rule: u_j * q_j(tok) < p_j(tok) with u_j ~ U[0,1) keyed
+    (seed, base_pos + j, STREAM_ACCEPT).  On the first rejection at j the
+    replacement is drawn from normalize(max(p_j - q_j, 0)) (falling back to
+    p_j when the residual is empty, i.e. q_j == p_j); if all n_draft
+    proposals are accepted the bonus token is drawn from p_dist[n_draft].
+    Both cases collapse to one formula by treating the q of the first
+    non-live row as zero.  The correction draw is keyed
+    (seed, base_pos + j, STREAM_RESIDUAL) — a pure position function, so
+    speculative replay is as resume-exact as plain sampling."""
+    k = q_dist.shape[0]
+    v = q_dist.shape[1]
+    j_idx = jnp.arange(k)
+    p_at = p_dist[j_idx, draft_toks]
+    q_at = q_dist[j_idx, draft_toks]
+    u = jax.vmap(lambda j: jax.random.uniform(
+        sample_key_ref(seed, base_pos + j, STREAM_ACCEPT)))(j_idx)
+    live = j_idx < n_draft
+    acc = (u * q_at < p_at) & live
+    # first rejected index (k if all k live rows accepted): argmin over the
+    # accept flags with a False sentinel appended finds the first False
+    j_rej = jnp.argmin(jnp.concatenate([acc, jnp.zeros((1,), bool)]))
+    j_rej = jnp.minimum(j_rej, n_draft).astype(jnp.int32)
+    # correction/bonus distribution at j_rej: residual when a live draft was
+    # rejected there, p itself when j_rej == n_draft (bonus / plain decode)
+    q_pad = jnp.concatenate([q_dist, jnp.zeros((1, v), jnp.float32)])
+    q_row = jnp.where((j_rej < n_draft), q_pad[j_rej], jnp.zeros((v,)))
+    resid = jnp.maximum(p_dist[j_rej] - q_row, 0.0)
+    mass = jnp.sum(resid)
+    corr_dist = jnp.where(mass > 0.0, resid / jnp.maximum(mass, _TINY),
+                          p_dist[j_rej])
+    corr_tok, corr_lp = gumbel_pick_ref(
+        corr_dist, sample_key_ref(seed, base_pos + j_rej, STREAM_RESIDUAL))
+    # emitted tokens: accepted prefix of the draft, then the correction
+    toks = jnp.concatenate([draft_toks, jnp.zeros((1,), jnp.int32)])
+    toks = jnp.where(jnp.arange(k + 1) == j_rej, corr_tok, toks)
+    lps = jnp.concatenate([jnp.log(jnp.maximum(p_at, _TINY)),
+                           jnp.zeros((1,), jnp.float32)])
+    lps = jnp.where(jnp.arange(k + 1) == j_rej, corr_lp, lps)
+    return toks.astype(jnp.int32), j_rej + 1, lps
+
+
+def spec_verify_rows_ref(p_dist, q_dist, draft_toks, n_draft, seed,
+                         base_pos):
+    """Batched :func:`spec_verify_ref`: p (B,k+1,V), q (B,k,V),
+    draft_toks (B,k), n_draft/seed/base_pos (B,) →
+    (tokens (B,k+1), n_emit (B,), logprobs (B,k+1))."""
+    return jax.vmap(spec_verify_ref)(p_dist, q_dist, draft_toks, n_draft,
+                                     seed, base_pos)
+
+
 # ------------------------------------------------------------------ SSD
 
 

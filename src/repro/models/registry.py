@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import jax
+
 from ..configs.base import ModelConfig
 from .encdec import WhisperEncDec
 from .hybrid import Zamba2LM
@@ -19,3 +21,44 @@ def build_model(cfg: ModelConfig):
     if cfg.family == "encdec":
         return WhisperEncDec(cfg)
     raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def derive_draft(model, params, spec_draft: str = "auto",
+                 n_layers: int = 0):
+    """Derive a speculative-decoding DRAFT model from a served target.
+
+    ``spec_draft="auto"`` (the only mode, engine v1) slices the target:
+    the draft shares the target's embedding, final norm and lm_head and
+    keeps the FIRST ``n_layers`` transformer blocks (default: half the
+    target's, minimum 1).  No training, no second checkpoint — the sliced
+    params are VIEWS of the target's arrays (the blocks pytree is indexed
+    ``p[:n]``), so the draft costs no extra parameter memory and the
+    proposals correlate well enough with the target for a useful accept
+    rate.  Returns ``(draft_model, draft_params)``.
+
+    Dense family only, like the serving engine itself; targets that
+    front-load non-attention layers (``first_dense_layers``) are rejected
+    rather than sliced into a different architecture."""
+    cfg = model.cfg
+    if spec_draft != "auto":
+        raise ValueError(f"unknown spec_draft {spec_draft!r}; engine v1 "
+                         f"only derives drafts ('auto')")
+    if cfg.family != "dense":
+        raise ValueError(f"spec drafts require a dense target, got family "
+                         f"{cfg.family!r}")
+    if getattr(cfg, "first_dense_layers", 0):
+        raise ValueError("spec drafts cannot slice a model with "
+                         "first_dense_layers != 0")
+    n = n_layers if n_layers > 0 else max(1, cfg.n_layers // 2)
+    if n > cfg.n_layers:
+        raise ValueError(f"spec_draft_layers ({n}) exceeds the target's "
+                         f"n_layers ({cfg.n_layers})")
+    dcfg = cfg.replace(n_layers=n)
+    dparams = {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "lm_head": params["lm_head"],
+        "blocks": jax.tree_util.tree_map(lambda p: p[:n],
+                                         params["blocks"]),
+    }
+    return build_model(dcfg), dparams

@@ -18,9 +18,15 @@ resume the inverse holds: the host→device copy completes before
 :meth:`SwapArena.release` returns the slots to the free list.
 
 The arena is engine-thread-owned in the serving stack (preempt and
-resume both happen under the shard's step lock), but all mutating entry
-points take the arena lock anyway — the watchdog discards manifests of
+resume both happen under the shard's step lock), but the manifest table
+takes the arena lock anyway — the watchdog discards manifests of
 requests it migrates away, and stats() may be read from any thread.
+Slot allocation itself goes through the same negotiated free-list
+engine as the device pool (``scheme=`` mirrors
+``ServingConfig.pool_scheme``): under a reclaiming SMR scheme the
+alloc/free path is lock-free, and the free list's state table turns a
+double-release or slot-accounting bug into an immediate ``ValueError``
+instead of silent slot aliasing.
 """
 
 from __future__ import annotations
@@ -31,6 +37,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from .block_pool import _make_free_list
+from .free_list import FreeListEmpty
 
 __all__ = [
     "SwapArena",
@@ -82,7 +91,8 @@ class SwapArena:
     (both K and V planes, all layers)."""
 
     def __init__(self, swap_bytes: int, *, n_layers: int, page_size: int,
-                 n_kv_heads: int, head_dim: int, dtype="float32"):
+                 n_kv_heads: int, head_dim: int, dtype="float32",
+                 scheme: str = "locked"):
         self.page_size = page_size
         self.slot_nbytes = page_nbytes(n_layers, page_size, n_kv_heads,
                                        head_dim, dtype)
@@ -99,9 +109,14 @@ class SwapArena:
         # memory — the numpy stand-in for pinned host allocations
         self._k = np.zeros(shape, np.dtype(dtype))
         self._v = np.zeros(shape, np.dtype(dtype))
-        self._free: List[int] = list(range(self.num_slots))
+        # slot allocator: the same negotiated free-list engine as the
+        # device pool — "locked" keeps a mutex list, any reclaims=True
+        # SMR scheme name gives lock-free alloc/free with a per-slot
+        # state table that hard-fails double-release
+        self._free = _make_free_list(self.num_slots, scheme)
+        self.scheme = self._free.kind
         self._manifests: Dict[int, SwapManifest] = {}
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()      # manifest table only
         # counters (stats())
         self.n_swapped_out = 0          # pages stored, cumulative
         self.n_swapped_in = 0           # pages loaded back, cumulative
@@ -132,13 +147,28 @@ class SwapArena:
                 raise ValueError(f"sequence {seq_key} already has a "
                                  f"manifest (resume must load or discard "
                                  f"it first)")
-            if len(self._free) < n_pages:
-                raise SwapArenaFullError(
-                    f"arena full: {n_pages} slots needed, "
-                    f"{len(self._free)}/{self.num_slots} free")
-            slots = [self._free.pop() for _ in range(n_pages)]
-            man = SwapManifest(seq_key=seq_key, n_tokens=n_tokens,
-                               slots=slots)
+        # slot claims go through the free list (lock-free under an SMR
+        # scheme); all-or-nothing is kept by rolling back partial claims
+        slots: List[int] = []
+        try:
+            for _ in range(n_pages):
+                slots.append(self._free.alloc())
+        except FreeListEmpty:
+            for slot in slots:
+                self._free.free(slot)
+            raise SwapArenaFullError(
+                f"arena full: {n_pages} slots needed, "
+                f"{self._free.free_count()}/{self.num_slots} free") \
+                from None
+        man = SwapManifest(seq_key=seq_key, n_tokens=n_tokens,
+                           slots=slots)
+        with self._lock:
+            if seq_key in self._manifests:
+                for slot in slots:
+                    self._free.free(slot)
+                raise ValueError(f"sequence {seq_key} already has a "
+                                 f"manifest (resume must load or discard "
+                                 f"it first)")
             self._manifests[seq_key] = man
         for i, slot in enumerate(slots):
             self._k[slot] = k_pages[i]
@@ -184,24 +214,27 @@ class SwapArena:
         manifest exists."""
         with self._lock:
             man = self._manifests.pop(seq_key, None)
-            if man is None:
-                return False
-            self._free.extend(man.slots)
+        if man is None:
+            return False
+        for slot in man.slots:
+            # the free list's state table raises on double-free, so a
+            # slot-accounting bug surfaces here instead of aliasing a
+            # later sequence's bytes into a still-mapped slot
+            self._free.free(slot)
         return True
 
     # ------------------------------------------------------------- stats
     def slots_used(self) -> int:
-        with self._lock:
-            return self.num_slots - len(self._free)
+        return self.num_slots - self._free.free_count()
 
     def bytes_used(self) -> int:
         return self.slots_used() * self.slot_nbytes
 
     def stats(self) -> Dict[str, int]:
+        used = self.num_slots - self._free.free_count()
         with self._lock:
-            used = self.num_slots - len(self._free)
             seqs = len(self._manifests)
-        return {
+        out = {
             "slots": self.num_slots,
             "slots_used": used,
             "bytes_used": used * self.slot_nbytes,
@@ -210,3 +243,7 @@ class SwapArena:
             "swapped_in": self.n_swapped_in,
             "checksum_failures": self.n_checksum_failures,
         }
+        # lock-free engines expose CAS-contention counters; "locked" has none
+        for k, v in self._free.stats().items():
+            out[k.replace("pool_", "arena_")] = v
+        return out

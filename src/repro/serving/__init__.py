@@ -19,6 +19,16 @@ from .policies import (
     eviction_policies,
     scheduler_policies,
 )
+from .sampling import (
+    SAMPLING_POLICIES,
+    GreedySampling,
+    SamplingPolicy,
+    TemperatureSampling,
+    TopKSampling,
+    TopPSampling,
+    as_sampling_policy,
+    sampling_policies,
+)
 from .session import (
     PrefixRouter,
     RequestHandle,
@@ -49,4 +59,12 @@ __all__ = [
     "as_admission_policy",
     "as_eviction_policy",
     "as_scheduler_policy",
+    "SamplingPolicy",
+    "GreedySampling",
+    "TemperatureSampling",
+    "TopKSampling",
+    "TopPSampling",
+    "SAMPLING_POLICIES",
+    "sampling_policies",
+    "as_sampling_policy",
 ]

@@ -137,6 +137,19 @@ class ServingConfig:
     # used by tests).  One flag flips the whole engine onto the TPU path.
     backend: str = "xla"
 
+    # -- speculative decoding (DESIGN.md §17) ------------------------------
+    # draft depth per round: 0 disables speculation (every token comes
+    # from the plain sampled decode step).  With spec_k > 0 each engine
+    # round runs a draft proposal (spec_k tokens) plus ONE packed-chunk
+    # verify call with fused on-device rejection sampling — every round
+    # emits between 1 and spec_k+1 tokens per active row.
+    spec_k: int = 0
+    # draft construction: "auto" slices the served target (shared
+    # embed/lm_head, first half of the blocks — models/registry.derive_draft)
+    spec_draft: str = "auto"
+    # layers kept by the sliced draft; 0 → half the target's (minimum 1)
+    spec_draft_layers: int = 0
+
     # -- chunked prefill ---------------------------------------------------
     # per-step prefill token budget: each engine step advances at most this
     # many prompt tokens before the batched decode runs, so admitting a long
@@ -250,6 +263,15 @@ class ServingConfig:
             if len(set(names)) != len(names):
                 raise ValueError(f"duplicate priority class names: {names}")
             object.__setattr__(self, "priority_classes", classes)
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0 (0 = off), got "
+                             f"{self.spec_k}")
+        if self.spec_draft != "auto":
+            raise ValueError(f"unknown spec_draft {self.spec_draft!r}; "
+                             f"engine v1 only derives drafts ('auto')")
+        if self.spec_draft_layers < 0:
+            raise ValueError(f"spec_draft_layers must be >= 0 (0 = half "
+                             f"the target), got {self.spec_draft_layers}")
         if self.backend not in ("xla", "pallas", "pallas_interpret"):
             raise ValueError(
                 f"unknown backend {self.backend!r}; choose from "
@@ -325,6 +347,9 @@ class ServingConfig:
             "swap_bytes": self.swap_bytes,
             "priority_classes": tuple(
                 c.name for c in (self.priority_classes or ())),
+            "spec_k": self.spec_k,
+            "spec_draft": self.spec_draft,
+            "spec_draft_layers": self.spec_draft_layers,
             "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "prefix_traversal": self.prefix_traversal,
             "watchdog": self.watchdog,

@@ -55,6 +55,7 @@ import numpy as np
 
 from ..core.smr.base import SmrScheme
 from ..kernels import ops
+from ..kernels import ref as kref
 from ..models.layers import apply_rope, rms_norm, rope_angles
 from ..models.transformer import _qkv
 from ..runtime.block_pool import BlockPool, PageNode
@@ -63,6 +64,7 @@ from ..runtime.swap import SwapArena, SwapArenaFullError, SwapChecksumError
 from .config import ServingConfig
 from .faults import build_fault_line
 from .policies import as_admission_policy, as_scheduler_policy
+from .sampling import SamplingPolicy, as_sampling_policy
 
 
 @dataclass
@@ -86,8 +88,16 @@ class Request:
     # terminal diagnostics (crash tracebacks, migration failures,
     # deadline expiry) — surfaced by RequestHandle.result()
     error: Optional[str] = None
+    # named sampling policy (or instance): resolved to a SamplingPolicy by
+    # _validate() on the caller thread.  None → greedy (bit-identical to
+    # the pre-sampling engine).  The policy carries the per-request seed,
+    # stop sequences and the logprobs flag (DESIGN.md §17)
+    sampling: Optional[object] = None
     req_id: int = field(default_factory=itertools.count().__next__)
     out_tokens: List[int] = field(default_factory=list)
+    # sampled-token log-probabilities under the FILTERED distribution, one
+    # per out_tokens entry — recorded only when sampling.logprobs is set
+    out_logprobs: List[float] = field(default_factory=list)
     done: threading.Event = field(default_factory=threading.Event)
     cancelled: threading.Event = field(default_factory=threading.Event)
     # "waiting" → "prefilling" → "active" → "done" | "cancelled" | "failed"
@@ -115,20 +125,42 @@ class Request:
     _folded: int = 0
     # page-aligned positions currently held by the shard's swap arena
     _swap_tokens: int = 0
+    # ITL gap accounting (DESIGN.md §17): set by preemption/migration, the
+    # next _emit() marks the incoming inter-token interval as a service
+    # gap — excluded from RequestHandle.itl() and the ITL-SLO observation,
+    # reported separately via gaps()/stats()
+    _gap_pending: bool = False
+    _gap_marks: List[int] = field(default_factory=list)
+    # a stop sequence matched the emitted suffix: generation halts with
+    # status "done" (the matched tokens are included in out_tokens)
+    _stop_hit: bool = False
 
     def fold_emitted(self) -> None:
-        """Fold tokens emitted since the last fold into the replay prompt
-        (prefill-from-offset resume: re-ingesting them through prefill
-        reproduces their K/V bit-identically).  ``max_new_tokens`` shrinks
-        by the same count so the request's total budget is unchanged.
-        Idempotent per token via the ``_folded`` cursor — a request
-        preempted or migrated twice must not fold the first leg's tokens
-        twice."""
+        """Fold tokens emitted since the last fold into the replay prompt.
+
+        This IS the teacher-forcing mechanism every resume path relies on:
+        folded tokens are re-ingested as PROMPT tokens by prefill (their
+        K/V reproduced from the recorded ids, never re-sampled), so the
+        emitted stream is force-fed on replay whatever the sampling policy
+        — the engine does not depend on greedy determinism here.  Fresh
+        positions after the fold re-enter the sampler with the same
+        (seed, absolute_position) PRNG key the uninterrupted run would
+        have used, which is the second half of the replay-exactness
+        argument (DESIGN.md §17).  ``max_new_tokens`` shrinks by the same
+        count so the request's total budget is unchanged.  Idempotent per
+        token via the ``_folded`` cursor — a request preempted or migrated
+        twice must not fold the first leg's tokens twice."""
         new = self.out_tokens[self._folded:]
         if new:
             self.prompt = list(self.prompt) + new
             self.max_new_tokens -= len(new)
             self._folded = len(self.out_tokens)
+
+    def next_position(self) -> int:
+        """Absolute position (in the request's original prompt + output
+        stream) of the NEXT token to be sampled — invariant under
+        fold_emitted(), the counter-PRNG's replay coordinate."""
+        return len(self.prompt) + len(self.out_tokens) - self._folded
 
 
 class _Seq:
@@ -208,16 +240,36 @@ class _ShardEngine:
                                        donate_argnums=(1, 2))
         self._packed_flat = jax.jit(self._paged_step_packed_flat,
                                     donate_argnums=(1, 2))
+        # speculative decoding (ROADMAP item 5): a sliced-parameter draft
+        # proposes spec_k tokens per round; the target verifies them in ONE
+        # packed chunk call with fused on-device rejection sampling.  The
+        # draft runs as a pure function of the recorded token stream (its
+        # cache is rebuilt inside the propose call each round), so draft
+        # behavior — and with it the accept pattern and the emitted stream
+        # — is replay-exact by construction (DESIGN.md §17)
+        self.spec_k = config.spec_k
+        self.draft_cfg = None
+        self.draft_params = None
+        if self.spec_k > 0:
+            from ..models.registry import derive_draft
+            draft_model, self.draft_params = derive_draft(
+                model, params, config.spec_draft, config.spec_draft_layers)
+            self.draft_cfg = draft_model.cfg
+            self._draft_propose = jax.jit(self._draft_propose_fn)
+            self._spec_verify = jax.jit(self._spec_verify_fn,
+                                        donate_argnums=(1, 2))
         # host swap tier (DESIGN.md §15): the arena exists whenever the
         # config budgets host bytes; PREEMPTION additionally requires the
         # eviction policy to opt in via its ``swaps`` marker (resolved from
         # the cache's bound policy so instances work, not just names)
         self.swap_arena: Optional[SwapArena] = None
         if config.swap_bytes > 0:
+            # the arena's slot allocator negotiates the same scheme as the
+            # BlockPool free list (lock-free by default, "locked" fallback)
             self.swap_arena = SwapArena(
                 config.swap_bytes, n_layers=L, page_size=config.page_size,
                 n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-                dtype=cfg.dtype)
+                dtype=cfg.dtype, scheme=config.pool_scheme)
         self.swap_enabled = self.swap_arena is not None and \
             getattr(self.prefix_cache.eviction, "swaps", False)
         # per-page fixed-shape device↔host movers: page id is a traced
@@ -239,6 +291,14 @@ class _ShardEngine:
         self.n_slo_cancelled = 0        # TTFT SLO expiries (subset of
         #                                 n_cancelled)
         self.n_itl_violations = 0       # observed inter-token SLO misses
+        # ITL gap accounting: intervals spanning a preemption park or a
+        # migration stall, excluded from itl() and the SLO observation
+        self.n_gap_intervals = 0
+        self.gap_seconds = 0.0
+        # speculative decoding counters (stats()): accept_rate =
+        # draft_accepted / draft_proposed
+        self.n_draft_proposed = 0
+        self.n_draft_accepted = 0
         # prefill efficiency counters (stats()): every fixed-shape chunk
         # call pays for C lanes — `prefill_tokens_wasted` counts the padded
         # lanes that bought nothing, and the packed pair shows how many
@@ -301,6 +361,10 @@ class _ShardEngine:
             req.deadline = req.t_submit + t
 
     def _validate(self, req: Request) -> None:
+        # resolve the sampling policy HERE, on the caller thread: an
+        # unknown name raises at submit()/receive_migrated() time, never
+        # inside the step loop (idempotent — instances pass through)
+        req.sampling = as_sampling_policy(req.sampling)
         if not req.prompt:
             raise ValueError(f"request {req.req_id} has an empty prompt "
                              f"(need >= 1 token to prefill)")
@@ -421,7 +485,7 @@ class _ShardEngine:
                                       self.params["blocks"])
 
     def _paged_prefill(self, params, k_pages, v_pages, tokens, page_ids,
-                       start, n_valid):
+                       start, n_valid, sampf, sampi):
         """Ingest ONE fixed-size prefill chunk into the owned pages.
 
         tokens: (1, C) — prompt[start : start+n_valid] zero-padded to the
@@ -437,8 +501,14 @@ class _ShardEngine:
         step, so chunk N resumes bit-identically from chunk N-1's boundary
         whether that boundary came from a cache hit or an earlier chunk).
         Padded lanes scatter out of bounds (dropped) and are causally
-        invisible.  Returns the greedy next token after position
-        start+n_valid-1 — meaningful only on the final chunk."""
+        invisible.
+
+        sampf (2,) f32 [temperature, top_p] and sampi (2,) i32
+        [top_k, seed] are the request's sampling operands; the next token
+        after position start+n_valid-1 is sampled ON DEVICE at absolute
+        position start+n_valid (the counter-PRNG replay coordinate) —
+        meaningful only on the final chunk.  Returns (token, logprob,
+        k_pages, v_pages)."""
         cfg = self.cfg
         c = tokens.shape[1]
         hkv, dh = cfg.n_kv_heads, cfg.head_dim
@@ -487,15 +557,19 @@ class _ShardEngine:
             x = x + ff @ p["ffn"]["wo"]
         x = rms_norm(x, params["final_norm"])
         logits = x[0, n_valid - 1] @ params["lm_head"]
-        # greedy argmax ON DEVICE: the engine only ever consumes the next
-        # token id, so ship one int32 to the host instead of a vocab-sized
-        # logits row (the host-side np.argmax was a GIL-held cost on every
-        # step — it capped multi-shard thread scaling)
-        return jnp.argmax(logits).astype(jnp.int32), k_pages, v_pages
+        # fused sampling ON DEVICE: the engine only ever consumes the next
+        # token id (+ its logprob), so ship two scalars to the host instead
+        # of a vocab-sized logits row (the host-side np.argmax was a
+        # GIL-held cost on every step — it capped multi-shard thread
+        # scaling).  temperature <= 0 is exact argmax (greedy bit-compat)
+        tok, lp = ops.sample_tokens(
+            logits[None, :], sampf[0:1], sampi[0:1], sampf[1:2],
+            sampi[1:2], (start + n_valid)[None])
+        return tok[0], lp[0], k_pages, v_pages
 
     def _paged_prefill_packed(self, params, k_pages, v_pages, tokens,
                               seg_ids, positions, page_rows, seg_ctx,
-                              emit_lanes):
+                              emit_lanes, sampf, sampi, spos):
         """Ingest ONE packed multi-segment chunk (the ``packed`` scheduler).
 
         tokens: (1, L) — several sequences' prompt slices laid end to end
@@ -519,8 +593,12 @@ class _ShardEngine:
         emit_lanes (S,): the lane holding each segment's LAST token when
         the segment emits from this chunk (prompt completing, or a decode
         rider), else L (sentinel — clamped on device, ignored on host).
-        Returns (S,) greedy next tokens so every emitting segment streams
-        its token from the same call."""
+        sampf (S, 2) f32 [temperature, top_p], sampi (S, 2) i32
+        [top_k, seed] and spos (S,) i32 — each segment's sampling operands
+        and the absolute position its next token is sampled AT (the
+        counter-PRNG replay coordinate).  Returns ((S,) tokens,
+        (S,) logprobs) so every emitting segment streams its token from
+        the same call."""
         cfg = self.cfg
         c = tokens.shape[1]
         valid = seg_ids >= 0
@@ -556,11 +634,12 @@ class _ShardEngine:
         # the head matmul off the chunk's critical path
         lanes = jnp.clip(emit_lanes, 0, c - 1)
         logits = x[0, lanes] @ params["lm_head"]         # (S, V)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
-            k_pages, v_pages
+        toks, lps = ops.sample_tokens(logits, sampf[:, 0], sampi[:, 0],
+                                      sampf[:, 1], sampi[:, 1], spos)
+        return toks, lps, k_pages, v_pages
 
     def _paged_step_packed_flat(self, params, k_pages, v_pages, lanes,
-                                pages, emit_lanes):
+                                pages, emit_lanes, sampf, sampi, spos):
         """XLA-backend variant of the fused packed step with a RAGGED key
         layout: the host lays every segment's live pages end to end into
         one flat page list, so attention cost is proportional to the
@@ -576,8 +655,8 @@ class _ShardEngine:
         its first token's absolute position, page_seg -1 for bucket
         padding.  P is bucketed to a power of two; shared physical pages
         appear once per owning segment, each under its own page_seg.
-        emit_lanes: (max_batch,) as in the rectangle path.  Returns
-        (max_batch,) greedy next tokens."""
+        emit_lanes / sampf / sampi / spos: (max_batch,·) as in the
+        rectangle path.  Returns ((max_batch,) tokens, logprobs)."""
         cfg = self.cfg
         hkv, dh = cfg.n_kv_heads, cfg.head_dim
         g = cfg.n_heads // hkv
@@ -626,17 +705,24 @@ class _ShardEngine:
         x = rms_norm(x, params["final_norm"])
         lanes_e = jnp.clip(emit_lanes, 0, c - 1)
         logits = x[0, lanes_e] @ params["lm_head"]       # (max_batch, V)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
-            k_pages, v_pages
+        toks, lps = ops.sample_tokens(logits, sampf[:, 0], sampi[:, 0],
+                                      sampf[:, 1], sampi[:, 1], spos)
+        return toks, lps, k_pages, v_pages
 
     def _paged_decode_step(self, params, k_pages, v_pages, block_tables,
-                           ctx_lens, tokens, occ):
+                           ctx_lens, tokens, occ, sampf, sampi):
         """One token for every occupied batch row.  ctx_lens INCLUDE the new
         token; its K/V is written at position ctx_lens-1.  ``occ`` (B,) bool
         marks real sequences: padded rows scatter out of bounds (dropped —
         they can never write a page, reused or otherwise) and their
         attention output is masked to zero, so padding needs no reserved
-        scratch page and is inert whatever the pool does with page ids."""
+        scratch page and is inert whatever the pool does with page ids.
+
+        sampf (B, 2) f32 [temperature, top_p] / sampi (B, 2) i32
+        [top_k, seed]: per-row sampling operands; the next token is
+        sampled at absolute position ctx_lens (the counter-PRNG replay
+        coordinate — ctx_lens already counts the incoming token, so the
+        sampled token will sit at stream index ctx_lens)."""
         cfg = self.cfg
         b = tokens.shape[0]
         x = jnp.take(params["embed"], tokens, axis=0)[:, None, :]  # (B,1,D)
@@ -666,9 +752,190 @@ class _ShardEngine:
             x = x + ff @ p["ffn"]["wo"]
         x = rms_norm(x, params["final_norm"])
         logits = x[:, 0] @ params["lm_head"]
-        # greedy argmax on device (see _paged_prefill): (B,) token ids out
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), \
-            k_pages, v_pages
+        # fused sampling on device (see _paged_prefill): two (B,) arrays out
+        toks, lps = ops.sample_tokens(logits, sampf[:, 0], sampi[:, 0],
+                                      sampf[:, 1], sampi[:, 1], ctx_lens)
+        return toks, lps, k_pages, v_pages
+
+    def _draft_propose_fn(self, dparams, tok_buf, ctx, sampf, sampi):
+        """Draft model: propose spec_k tokens per batch row, as a PURE
+        function of the recorded token stream.
+
+        tok_buf (B, S_max) i32 — each row's full recorded stream (prompt +
+        emitted tokens), zero-padded; ctx (B,) i32 its length.  The draft
+        has NO persistent KV cache: every round re-prefills the stream
+        densely, reads the hidden state at ctx-1, then runs spec_k-1
+        incremental steps against the just-built cache.  That costs a
+        re-prefill per round but buys the replay property outright: draft
+        proposals depend only on (recorded stream, seed, position), never
+        on which schedule of preemptions/migrations built a cache — so the
+        accept pattern and the emitted stream are resume-exact by
+        construction (DESIGN.md §17).
+
+        sampf (B, 2) f32 [temperature, top_p] / sampi (B, 2) i32
+        [top_k, seed]: the draft proposes through the SAME filter as the
+        target (q and p supported on the same candidate set keeps the
+        rejection-sampling correctness argument clean) and draws with keys
+        (seed, ctx + j, STREAM_DRAFT).  Greedy rows propose exact argmax,
+        which makes spec-greedy ≡ plain-greedy token for token.
+
+        Returns (d_toks (B, spec_k) i32, q_dists (B, spec_k, V) f32) where
+        slot j is the proposal for absolute position ctx + j."""
+        dcfg = self.draft_cfg
+        kd = self.spec_k
+        b, s = tok_buf.shape
+        hkv, dh = dcfg.n_kv_heads, dcfg.head_dim
+        g = dcfg.n_heads // hkv
+        scale = 1.0 / (dh ** 0.5)
+        n_l = dcfg.n_layers
+        sk = s + kd                     # prefill keys + incremental writes
+        bidx = jnp.arange(b)
+        x = jnp.take(dparams["embed"], tok_buf, axis=0)      # (B, S, D)
+        pos = jnp.arange(s, dtype=jnp.int32)
+        angles = rope_angles(jnp.broadcast_to(pos[None, :], (b, s)),
+                             dcfg.head_dim, dcfg.rope_theta)
+        causal = pos[None, :] <= pos[:, None]                # (S, S)
+        k_cache = jnp.zeros((n_l, b, sk, hkv, dh), jnp.float32)
+        v_cache = jnp.zeros((n_l, b, sk, hkv, dh), jnp.float32)
+        for i in range(n_l):
+            p = jax.tree_util.tree_map(lambda t: t[i], dparams["blocks"])
+            h = rms_norm(x, p["ln1"])
+            q, k, v = _qkv(p["attn"], dcfg, h)
+            q = apply_rope(q, angles)
+            k = apply_rope(k, angles)
+            kf = k.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
+            k_cache = k_cache.at[i, :, :s].set(kf)
+            v_cache = v_cache.at[i, :, :s].set(vf)
+            qf = q.reshape(b, s, hkv, g, dh).astype(jnp.float32) * scale
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)
+            sc = jnp.where(causal[None, None, None], sc, -jnp.inf)
+            pr = jax.nn.softmax(sc, axis=-1)
+            out = jnp.einsum("bkgqs,bskd->bqkgd", pr, vf).astype(x.dtype)
+            x = x + out.reshape(b, s, -1) @ p["attn"]["wo"]
+            h = rms_norm(x, p["ln2"])
+            ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
+            x = x + ff @ p["ffn"]["wo"]
+        xf = rms_norm(x, dparams["final_norm"])
+        # rows past their ctx are garbage but unread: only the hidden state
+        # at ctx-1 leaves the prefill (clamped for empty padding rows)
+        hidden = xf[bidx, jnp.maximum(ctx - 1, 0)]           # (B, D)
+        d_toks, q_dists = [], []
+        for j in range(kd):
+            logits = hidden @ dparams["lm_head"]             # (B, V)
+            qd = jax.vmap(kref.filtered_dist_ref)(
+                logits, sampf[:, 0], sampi[:, 0], sampf[:, 1])
+            keys = jax.vmap(kref.sample_key_ref, in_axes=(0, 0, None))(
+                sampi[:, 1], ctx + j, kref.STREAM_DRAFT)
+            tok, _ = jax.vmap(kref.gumbel_pick_ref)(qd, keys)
+            tok = jnp.where(sampf[:, 0] <= 0.0,
+                            jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                            tok)
+            d_toks.append(tok)
+            q_dists.append(qd)
+            if j == kd - 1:
+                break
+            # incremental draft step: feed the proposal at position ctx+j
+            pj = ctx + j                                     # (B,)
+            xs = jnp.take(dparams["embed"], tok, axis=0)[:, None, :]
+            ang = rope_angles(pj[:, None], dcfg.head_dim, dcfg.rope_theta)
+            kmask = jnp.arange(sk, dtype=jnp.int32)[None, :] <= pj[:, None]
+            for i in range(n_l):
+                p = jax.tree_util.tree_map(lambda t: t[i],
+                                           dparams["blocks"])
+                h = rms_norm(xs, p["ln1"])
+                q, k, v = _qkv(p["attn"], dcfg, h)
+                q = apply_rope(q, ang)
+                k = apply_rope(k, ang)
+                k_cache = k_cache.at[i, bidx, pj].set(
+                    k[:, 0].astype(jnp.float32))
+                v_cache = v_cache.at[i, bidx, pj].set(
+                    v[:, 0].astype(jnp.float32))
+                qf = q[:, 0].reshape(b, hkv, g, dh).astype(jnp.float32) \
+                    * scale
+                sc = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache[i])
+                sc = jnp.where(kmask[:, None, None, :], sc, -jnp.inf)
+                pr = jax.nn.softmax(sc, axis=-1)
+                out = jnp.einsum("bkgs,bskd->bkgd", pr,
+                                 v_cache[i]).astype(xs.dtype)
+                xs = xs + out.reshape(b, 1, -1) @ p["attn"]["wo"]
+                h = rms_norm(xs, p["ln2"])
+                ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * \
+                    (h @ p["ffn"]["wi_up"])
+                xs = xs + ff @ p["ffn"]["wo"]
+            hidden = rms_norm(xs, dparams["final_norm"])[:, 0]
+        return jnp.stack(d_toks, axis=1), jnp.stack(q_dists, axis=1)
+
+    def _spec_verify_fn(self, params, k_pages, v_pages, x_last, d_toks,
+                        ctx, nd, occ, rows, sampf, sampi, q_dists):
+        """Target verify: score every draft chain in ONE packed chunk call
+        and rejection-sample on device.
+
+        Lane layout: LV = max_batch * (spec_k + 1) lanes; lane i*(k+1)+j
+        holds row i's token j (j == 0 → x_last, the latest emitted token
+        whose K/V is not yet written; j >= 1 → d_toks[i, j-1]) at absolute
+        position ctx[i] - 1 + j.  Dead lanes (j > nd[i], or unoccupied
+        rows) get seg -1 / out-of-bounds scatter, exactly like packed
+        prefill padding.  The j == 0 lane REWRITES position ctx-1 each
+        round — the write is bit-identical to what the plain decode step
+        would have written there, and it restores cross-run page
+        exactness after a restore-from-swap.
+
+        The target's K/V for accepted positions lands in the pages as a
+        side effect (lanes j = 0..nd at positions ctx-1..ctx+nd-1); the
+        correction/bonus token's K/V is NOT written — the next round's
+        x_last lane writes it, preserving the engine invariant that the
+        latest token's K/V is written by the step that consumes it.
+
+        Returns (toks (B, k+1), n_emit (B,), lps (B, k+1), k_pages,
+        v_pages); n_emit is zeroed for unoccupied rows."""
+        cfg = self.cfg
+        kd = self.spec_k
+        b = x_last.shape[0]
+        lanes_per = kd + 1
+        lv = b * lanes_per
+        pgsz = self.page_size
+        lane_row = jnp.arange(lv, dtype=jnp.int32) // lanes_per   # (LV,)
+        lane_j = jnp.arange(lv, dtype=jnp.int32) % lanes_per      # (LV,)
+        tok_grid = jnp.concatenate([x_last[:, None], d_toks], axis=1)
+        toks = tok_grid[lane_row, lane_j][None, :]                # (1, LV)
+        positions = ctx[lane_row] - 1 + lane_j                    # (LV,)
+        live = (lane_j <= nd[lane_row]) & occ[lane_row]
+        seg_ids = jnp.where(live, lane_row, -1)
+        page_of = rows[lane_row, positions // pgsz]
+        upd_page = jnp.where(live, page_of, k_pages.shape[1])
+        slot_of = positions % pgsz
+        seg_ctx = jnp.where(occ, ctx + nd, 0)                     # (B,)
+        x = jnp.take(params["embed"], toks, axis=0)               # (1,LV,D)
+        angles = rope_angles(positions[None, :], cfg.head_dim,
+                             cfg.rope_theta)
+        for i in range(cfg.n_layers):
+            p = self._layer_params(i)
+            h = rms_norm(x, p["ln1"])
+            q, k, v = _qkv(p["attn"], cfg, h)
+            q = apply_rope(q, angles)
+            k = apply_rope(k, angles)
+            k_pages = k_pages.at[i, upd_page, slot_of].set(
+                k[0].astype(k_pages.dtype), mode="drop")
+            v_pages = v_pages.at[i, upd_page, slot_of].set(
+                v[0].astype(v_pages.dtype), mode="drop")
+            out = ops.packed_prefill_attention(
+                q[0], k_pages[i], v_pages[i], rows, seg_ids,
+                positions, seg_ctx, backend=self.config.backend)
+            x = x + out.reshape(1, lv, -1) @ p["attn"]["wo"]
+            h = rms_norm(x, p["ln2"])
+            ff = jax.nn.silu(h @ p["ffn"]["wi_gate"]) * (h @ p["ffn"]["wi_up"])
+            x = x + ff @ p["ffn"]["wo"]
+        x = rms_norm(x, params["final_norm"])
+        logits = x[0] @ params["lm_head"]                         # (LV, V)
+        p_dists = jax.vmap(kref.filtered_dist_ref)(
+            logits, sampf[lane_row, 0], sampi[lane_row, 0],
+            sampf[lane_row, 1])
+        p_dists = p_dists.reshape(b, lanes_per, -1)               # (B,k+1,V)
+        toks_o, n_emit, lps = ops.spec_verify_rows(
+            p_dists, q_dists, d_toks, nd, sampi[:, 1], ctx)
+        n_emit = jnp.where(occ, n_emit, 0)
+        return toks_o, n_emit, lps, k_pages, v_pages
 
     # ------------------------------------------------------------- engine
     def _fault_dispatch(self) -> None:
@@ -909,6 +1176,7 @@ class _ShardEngine:
         req.fold_emitted()
         req._swap_tokens = aligned
         req.status = "swapped"
+        req._gap_pending = True     # next emit closes a service-gap interval
         req.preemptions += 1
         self.n_preemptions += 1
         with self._wlock:
@@ -943,19 +1211,37 @@ class _ShardEngine:
         self._release_swap(req)
         self.n_resumed += 1
 
-    def _emit(self, seq: _Seq, tok: int) -> None:
+    def _emit(self, seq: _Seq, tok: int, lp: float = 0.0) -> None:
         """Append one generated token and wake streamers."""
         seq.tokens.append(tok)
         req = seq.req
         now = time.perf_counter()
-        # ITL SLO is OBSERVED, never enforced: a preemption gap between
-        # two tokens counts as a violation (that is the cost being
-        # measured), but the request keeps running
-        if req._itl_slo_s is not None and req.out_times \
+        if req._gap_pending and req.out_times:
+            # the incoming interval spans a preemption park or a migration
+            # stall: mark it as a SERVICE GAP — excluded from itl() and
+            # the ITL-SLO observation (the SLO observes decode cadence),
+            # reported separately via RequestHandle.gaps() and stats().
+            # The mark indexes the timestamp that CLOSES the gap interval
+            req._gap_marks.append(len(req.out_times))
+            self.n_gap_intervals += 1
+            self.gap_seconds += now - req.out_times[-1]
+        elif req._itl_slo_s is not None and req.out_times \
                 and now - req.out_times[-1] > req._itl_slo_s:
+            # ITL SLO is OBSERVED, never enforced: the request keeps running
             self.n_itl_violations += 1
+        req._gap_pending = False
         req.out_tokens.append(tok)
         req.out_times.append(now)
+        if req.sampling is not None and req.sampling.logprobs:
+            req.out_logprobs.append(float(lp))
+        # host-side stop-sequence match against the emitted suffix (the
+        # matched tokens stay in the output; generation halts with "done")
+        if req.sampling is not None and req.sampling.stop:
+            for s in req.sampling.stop:
+                if len(req.out_tokens) >= len(s) and \
+                        tuple(req.out_tokens[-len(s):]) == s:
+                    req._stop_hit = True
+                    break
         req._progress.set()
 
     def _advance_prefill(self, seq: _Seq, grant: int) -> None:
@@ -965,40 +1251,60 @@ class _ShardEngine:
         The final chunk's logits yield the first generated token (streamed
         immediately) and move the sequence to decoding."""
         req = seq.req
+        sp = req.sampling
+        sampf = jnp.asarray([sp.temperature, sp.top_p], jnp.float32)
+        sampi = jnp.asarray([sp.top_k, sp.seed], jnp.int32)
         n_prompt = len(req.prompt)
         chunk = self.config.prefill_chunk_tokens
         end = min(seq.filled + grant, n_prompt)
-        tok = None
+        tok = lp = None
         while seq.filled < end:
             n_valid = min(chunk, end - seq.filled)
             buf = np.zeros((1, chunk), np.int32)
             buf[0, :n_valid] = req.prompt[seq.filled:seq.filled + n_valid]
             self._fault_dispatch()
-            tok, self.k_pages, self.v_pages = self._prefill(
+            tok, lp, self.k_pages, self.v_pages = self._prefill(
                 self.params, self.k_pages, self.v_pages,
                 jnp.asarray(buf), jnp.asarray(seq.page_row),
-                jnp.int32(seq.filled), jnp.int32(n_valid))
+                jnp.int32(seq.filled), jnp.int32(n_valid),
+                sampf, sampi)
             seq.filled += n_valid
             self.prefill_chunks += 1
             self.prefill_tokens_wasted += chunk - n_valid
         if seq.filled == n_prompt:
             # final chunk: its last-position logits ARE the first token
-            self._finish_prefill(seq, int(tok))
+            self._finish_prefill(seq, int(tok), float(lp))
         # intermediate chunks never sync with the device (tok is dropped
         # untouched), so chunking adds no host round-trips
 
-    def _finish_prefill(self, seq: _Seq, tok: int) -> None:
+    def _finish_prefill(self, seq: _Seq, tok: int, lp: float = 0.0) -> None:
         """A sequence's prompt is fully in pages and its first token is in
         hand: stream it and move the sequence to decoding (or straight to
         done — a max_new_tokens=1 request used to overshoot to 2 because
         activation skipped the limit check and the same step's decode
-        emitted before its own)."""
+        emitted before its own).
+
+        In SPECULATIVE mode the chunk's sampled token is DISCARDED and
+        nothing is emitted here: every token — including the first —
+        comes out of a spec round, so a freshly admitted request and a
+        resumed one take the exact same emission path (the first fresh
+        position is drawn via accept/residual streams either way, which
+        is what keeps the accept pattern replay-exact; DESIGN.md §17).
+        The sequence just activates with ``new_tokens = 0``."""
         req = seq.req
-        self._emit(seq, tok)
-        seq.new_tokens = 1
         self._prefilling.remove(seq)
+        if self.spec_k > 0:
+            seq.new_tokens = 0
+            if req.cancelled.is_set():
+                self._finish(seq, "cancelled")
+            else:
+                req.status = "active"
+                self._active.append(seq)
+            return
+        self._emit(seq, tok, lp)
+        seq.new_tokens = 1
         if seq.new_tokens >= req.max_new_tokens \
-                or req.cancelled.is_set():
+                or req.cancelled.is_set() or req._stop_hit:
             self._finish(seq, "cancelled" if req.cancelled.is_set()
                          else "done")
         else:
@@ -1024,10 +1330,10 @@ class _ShardEngine:
         other's dispatch latency.  The lane axis is C + max_batch wide so
         riders never eat into the prefill token budget (active +
         prefilling share max_batch, so segments always fit).  Riders ride
-        the FIRST chunk only; returns their next tokens as an (n_riders,)
-        array, or None when the plan was empty (caller falls back to the
-        dedicated decode batch, which is cheaper than a mostly-empty
-        packed chunk).
+        the FIRST chunk only; returns their (next tokens, logprobs) pair
+        of (n_riders,) arrays, or None when the plan was empty (caller
+        falls back to the dedicated decode batch, which is cheaper than a
+        mostly-empty packed chunk).
 
         The segment axis is BUCKETED to the next power of two above the
         actual segment count (1/2/4/.../max_batch) before the device call:
@@ -1054,6 +1360,11 @@ class _ShardEngine:
             rows = np.zeros((n_segs, self.max_pages), np.int32)
             ctxs = np.zeros((n_segs,), np.int32)
             emit = np.full((n_segs,), lanes_max, np.int32)  # not finishing
+            # per-segment sampling operands + the absolute position each
+            # emitting segment samples AT (the counter-PRNG coordinate)
+            sampf = np.zeros((n_segs, 2), np.float32)
+            sampi = np.zeros((n_segs, 2), np.int32)
+            spos = np.zeros((n_segs,), np.int32)
             seg_pages = []       # (page_row, n_live_pages) per segment
             members = []
             lane = 0
@@ -1071,6 +1382,10 @@ class _ShardEngine:
                 slot[lane:lane + take] = pos % pgsz
                 rows[si] = seq.page_row
                 ctxs[si] = seq.filled + take
+                sp = seq.req.sampling
+                sampf[si] = (sp.temperature, sp.top_p)
+                sampi[si] = (sp.top_k, sp.seed)
+                spos[si] = seq.filled + take
                 seg_pages.append((seq.page_row,
                                   -(-(seq.filled + take) // pgsz)))
                 if seq.filled + take == len(seq.req.prompt):
@@ -1095,6 +1410,10 @@ class _ShardEngine:
                     slot[lane] = (ctx - 1) % pgsz
                     rows[si] = seq.page_row
                     ctxs[si] = ctx
+                    sp = seq.req.sampling
+                    sampf[si] = (sp.temperature, sp.top_p)
+                    sampi[si] = (sp.top_k, sp.seed)
+                    spos[si] = ctx
                     seg_pages.append((seq.page_row, -(-ctx // pgsz)))
                     emit[si] = lane
                     n_riders += 1
@@ -1121,35 +1440,119 @@ class _ShardEngine:
                     pages[2, off:off + n] = np.arange(n) * pgsz
                     off += n
                 lanes = np.stack([toks[0], segs, poss, upd, slot])
-                out_toks, self.k_pages, self.v_pages = self._packed_flat(
-                    self.params, self.k_pages, self.v_pages,
-                    jnp.asarray(lanes), jnp.asarray(pages),
-                    jnp.asarray(emit))
+                out_toks, out_lps, self.k_pages, self.v_pages = \
+                    self._packed_flat(
+                        self.params, self.k_pages, self.v_pages,
+                        jnp.asarray(lanes), jnp.asarray(pages),
+                        jnp.asarray(emit), jnp.asarray(sampf),
+                        jnp.asarray(sampi), jnp.asarray(spos))
             else:
                 # power-of-2 segment bucket: pay for the segments actually
                 # present, not max_batch (seg ids are compact, so a prefix
                 # slice of the per-segment operands is sufficient)
                 n_b = min(n_segs, 1 << max(0, total - 1).bit_length())
-                out_toks, self.k_pages, self.v_pages = \
+                out_toks, out_lps, self.k_pages, self.v_pages = \
                     self._prefill_packed(
                         self.params, self.k_pages, self.v_pages,
                         jnp.asarray(toks), jnp.asarray(segs),
                         jnp.asarray(poss), jnp.asarray(rows[:n_b]),
-                        jnp.asarray(ctxs[:n_b]), jnp.asarray(emit[:n_b]))
+                        jnp.asarray(ctxs[:n_b]), jnp.asarray(emit[:n_b]),
+                        jnp.asarray(sampf[:n_b]), jnp.asarray(sampi[:n_b]),
+                        jnp.asarray(spos[:n_b]))
             finishing = any(emit[si] < lanes_max
                             for si in range(len(members)))
             # only a chunk that emits tokens (some prompt completed, or
             # decode riders aboard) syncs with the device
-            out_np = np.asarray(out_toks) \
-                if finishing or n_riders else None
+            out_np = lps_np = None
+            if finishing or n_riders:
+                out_np = np.asarray(out_toks)
+                lps_np = np.asarray(out_lps)
             for si, (seq, take) in enumerate(members):
                 seq.filled += take
                 if emit[si] < lanes_max:
-                    self._finish_prefill(seq, int(out_np[si]))
+                    self._finish_prefill(seq, int(out_np[si]),
+                                         float(lps_np[si]))
             if n_riders:
-                rider_toks = out_np[len(members):len(members) + n_riders]
+                rider_toks = (
+                    out_np[len(members):len(members) + n_riders],
+                    lps_np[len(members):len(members) + n_riders])
             first = False
         return rider_toks
+
+    def _spec_round(self) -> None:
+        """One speculative round for the whole active batch: the draft
+        proposes up to spec_k tokens per row, the target verifies every
+        chain in ONE packed chunk call with fused on-device rejection
+        sampling, and each row emits its accepted prefix plus the
+        correction/bonus token — always ≥ 1 token per row per round, so
+        spec decode can never be slower than plain decode in tokens per
+        device sync (two dispatches, one sync).
+
+        Per-row draft depth ``nd = min(spec_k, remaining - 1, capacity -
+        ctx)``: the round never emits past ``max_new_tokens`` and never
+        scatters K/V past the page run.  Both bounds are INVARIANT under
+        ``fold_emitted()`` (remaining = max_new - new_tokens and capacity
+        - ctx are conserved by the fold), so a resumed request sees the
+        same nd schedule — hence the same accept pattern and tokens — as
+        the uninterrupted run (DESIGN.md §17)."""
+        batch = list(self._active)
+        b = self.max_batch
+        kd = self.spec_k
+        s_max = self.max_pages * self.page_size
+        tok_buf = np.zeros((b, s_max), np.int32)
+        ctx = np.ones((b,), np.int32)
+        nd = np.zeros((b,), np.int32)
+        occ = np.zeros((b,), bool)
+        rows = np.zeros((b, self.max_pages), np.int32)
+        x_last = np.zeros((b,), np.int32)
+        sampf = np.zeros((b, 2), np.float32)
+        sampi = np.zeros((b, 2), np.int32)
+        for i, seq in enumerate(batch):
+            t = len(seq.tokens)
+            tok_buf[i, :t] = seq.tokens
+            ctx[i] = t
+            remaining = seq.req.max_new_tokens - seq.new_tokens
+            capacity = len(seq.pages) * self.page_size
+            nd[i] = max(0, min(kd, remaining - 1, capacity - t))
+            occ[i] = True
+            rows[i] = seq.page_row
+            x_last[i] = seq.tokens[-1]
+            sp = seq.req.sampling
+            sampf[i] = (sp.temperature, sp.top_p)
+            sampi[i] = (sp.top_k, sp.seed)
+        self._fault_dispatch()
+        d_toks, q_dists = self._draft_propose(
+            self.draft_params, jnp.asarray(tok_buf), jnp.asarray(ctx),
+            jnp.asarray(sampf), jnp.asarray(sampi))
+        self._fault_dispatch()
+        # d_toks/q_dists stay on device between the two dispatches — the
+        # only host sync in the round is reading the verdict below
+        toks_o, n_emit, lps, self.k_pages, self.v_pages = self._spec_verify(
+            self.params, self.k_pages, self.v_pages, jnp.asarray(x_last),
+            d_toks, jnp.asarray(ctx), jnp.asarray(nd), jnp.asarray(occ),
+            jnp.asarray(rows), jnp.asarray(sampf), jnp.asarray(sampi),
+            q_dists)
+        toks_np = np.asarray(toks_o)
+        n_np = np.asarray(n_emit)
+        lps_np = np.asarray(lps)
+        done = []
+        for i, seq in enumerate(batch):
+            req = seq.req
+            self.n_draft_proposed += int(nd[i])
+            self.n_draft_accepted += int(n_np[i]) - 1
+            for j in range(int(n_np[i])):
+                if seq.new_tokens >= req.max_new_tokens \
+                        or req.cancelled.is_set() or req._stop_hit:
+                    break
+                self._emit(seq, int(toks_np[i, j]), float(lps_np[i, j]))
+                seq.new_tokens += 1
+            if seq.new_tokens >= req.max_new_tokens \
+                    or req.cancelled.is_set() or req._stop_hit:
+                done.append(seq)
+        for seq in done:
+            self._active.remove(seq)
+            self._finish(seq, "cancelled" if seq.req.cancelled.is_set()
+                         else "done")
 
     def _release_seq(self, seq: _Seq) -> None:
         for pg in seq.pages[seq.owned_from:]:
@@ -1220,15 +1623,18 @@ class _ShardEngine:
                              jnp.int32),
                     jnp.zeros((lanes_max,), jnp.int32)])
                 emit = jnp.full((self.max_batch,), lanes_max, jnp.int32)
+                sampf = jnp.zeros((self.max_batch, 2), jnp.float32)
+                sampi = jnp.zeros((self.max_batch, 2), jnp.int32)
+                spos = jnp.zeros((self.max_batch,), jnp.int32)
                 p_b, p_top = 8, self.max_batch * self.max_pages
                 while True:
                     pages = jnp.stack([
                         jnp.zeros((p_b,), jnp.int32),
                         jnp.full((p_b,), -1, jnp.int32),
                         jnp.zeros((p_b,), jnp.int32)])
-                    out, self.k_pages, self.v_pages = self._packed_flat(
+                    out, _, self.k_pages, self.v_pages = self._packed_flat(
                         self.params, self.k_pages, self.v_pages, lanes,
-                        pages, emit)
+                        pages, emit, sampf, sampi, spos)
                     jax.block_until_ready(out)
                     if p_b >= p_top:
                         break
@@ -1237,16 +1643,46 @@ class _ShardEngine:
             # pallas backends: one jit variant per segment bucket
             n_b = 1
             while True:
-                out, self.k_pages, self.v_pages = self._prefill_packed(
+                out, _, self.k_pages, self.v_pages = self._prefill_packed(
                     self.params, self.k_pages, self.v_pages, toks,
                     segs, poss,
                     jnp.zeros((n_b, self.max_pages), jnp.int32),
                     jnp.zeros((n_b,), jnp.int32),
-                    jnp.full((n_b,), lanes_max, jnp.int32))
+                    jnp.full((n_b,), lanes_max, jnp.int32),
+                    jnp.zeros((n_b, 2), jnp.float32),
+                    jnp.zeros((n_b, 2), jnp.int32),
+                    jnp.zeros((n_b,), jnp.int32))
                 jax.block_until_ready(out)
                 if n_b >= self.max_batch:
                     break
                 n_b = min(self.max_batch, n_b * 2)
+
+    def warm_spec(self) -> None:
+        """Pre-compile the speculative round's two dispatches
+        (draft-propose + verify) with an all-padding batch so the first
+        real round doesn't pay their jit cost inside a request's latency
+        window.  ``occ`` is all-False: every verify lane is dead, its K/V
+        scatter drops, and ``n_emit`` comes back zero, so this is a pure
+        jit-cache warm — safe on a live engine (step lock).  No-op unless
+        speculative decoding is enabled."""
+        if not self.spec_k:
+            return
+        b = self.max_batch
+        s_max = self.max_pages * self.page_size
+        with self._step_lock:
+            sampf = jnp.zeros((b, 2), jnp.float32)
+            sampi = jnp.zeros((b, 2), jnp.int32)
+            ctx = jnp.ones((b,), jnp.int32)
+            d_toks, q_dists = self._draft_propose(
+                self.draft_params, jnp.zeros((b, s_max), jnp.int32), ctx,
+                sampf, sampi)
+            out, n_emit, _, self.k_pages, self.v_pages = self._spec_verify(
+                self.params, self.k_pages, self.v_pages,
+                jnp.zeros((b,), jnp.int32), d_toks, ctx,
+                jnp.zeros((b,), jnp.int32), jnp.zeros((b,), bool),
+                jnp.zeros((b, self.max_pages), jnp.int32), sampf, sampi,
+                q_dists)
+            jax.block_until_ready(out)
 
     def step(self) -> bool:
         """One engine iteration; returns False when idle."""
@@ -1276,8 +1712,12 @@ class _ShardEngine:
             if getattr(self.scheduler, "packs", False):
                 # packed path: the WHOLE plan rides one fixed-shape chunk,
                 # and the step's decode batch rides it too (fused step) —
-                # sequences activated DURING this call decode next step
-                batch_seqs = list(self._active)
+                # sequences activated DURING this call decode next step.
+                # Under SPECULATIVE decoding the active set never rides:
+                # every emission must come from the spec round's streams
+                # (accept/residual), not a schedule-dependent mix with
+                # plain TARGET draws (DESIGN.md §17)
+                batch_seqs = [] if self.spec_k else list(self._active)
                 decoded = self._advance_packed(plan, batch_seqs)
             else:
                 for seq, grant in plan:
@@ -1289,30 +1729,41 @@ class _ShardEngine:
         # fused packed chunk already produced this step's decode tokens,
         # consume those instead of a second device call.
         if decoded is None and self._active:
-            batch_seqs = list(self._active)
-            bt = np.zeros((self.max_batch, self.max_pages), np.int32)
-            ctx = np.ones((self.max_batch,), np.int32)
-            toks = np.zeros((self.max_batch,), np.int32)
-            occ = np.zeros((self.max_batch,), bool)
-            for i, seq in enumerate(batch_seqs):
-                bt[i, :] = seq.page_row
-                ctx[i] = len(seq.tokens)
-                toks[i] = seq.tokens[-1]
-                occ[i] = True
-            self._fault_dispatch()
-            decoded, self.k_pages, self.v_pages = self._decode(
-                self.params, self.k_pages, self.v_pages,
-                jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(toks),
-                jnp.asarray(occ))
-            decoded = np.asarray(decoded)
+            if self.spec_k:
+                # speculative mode replaces the dedicated decode step
+                # entirely: one draft-propose + one verify per round
+                self._spec_round()
+            else:
+                batch_seqs = list(self._active)
+                bt = np.zeros((self.max_batch, self.max_pages), np.int32)
+                ctx = np.ones((self.max_batch,), np.int32)
+                toks = np.zeros((self.max_batch,), np.int32)
+                occ = np.zeros((self.max_batch,), bool)
+                sampf = np.zeros((self.max_batch, 2), np.float32)
+                sampi = np.zeros((self.max_batch, 2), np.int32)
+                for i, seq in enumerate(batch_seqs):
+                    bt[i, :] = seq.page_row
+                    ctx[i] = len(seq.tokens)
+                    toks[i] = seq.tokens[-1]
+                    occ[i] = True
+                    sp = seq.req.sampling
+                    sampf[i] = (sp.temperature, sp.top_p)
+                    sampi[i] = (sp.top_k, sp.seed)
+                self._fault_dispatch()
+                toks_d, lps_d, self.k_pages, self.v_pages = self._decode(
+                    self.params, self.k_pages, self.v_pages,
+                    jnp.asarray(bt), jnp.asarray(ctx), jnp.asarray(toks),
+                    jnp.asarray(occ), jnp.asarray(sampf),
+                    jnp.asarray(sampi))
+                decoded = (np.asarray(toks_d), np.asarray(lps_d))
         if decoded is not None:
-            next_toks = decoded
+            next_toks, next_lps = decoded
             done = []
             for i, seq in enumerate(batch_seqs):
-                self._emit(seq, int(next_toks[i]))
+                self._emit(seq, int(next_toks[i]), float(next_lps[i]))
                 seq.new_tokens += 1
                 if seq.new_tokens >= seq.req.max_new_tokens \
-                        or seq.req.cancelled.is_set():
+                        or seq.req.cancelled.is_set() or seq.req._stop_hit:
                     done.append(seq)
             for seq in done:
                 self._active.remove(seq)
@@ -1438,6 +1889,12 @@ class _ShardEngine:
             "resumed": self.n_resumed,
             "slo_cancelled": self.n_slo_cancelled,
             "itl_slo_violations": self.n_itl_violations,
+            "gap_intervals": self.n_gap_intervals,
+            "gap_seconds": self.gap_seconds,
+            "draft_proposed": self.n_draft_proposed,
+            "draft_accepted": self.n_draft_accepted,
+            "accept_rate": (self.n_draft_accepted / self.n_draft_proposed
+                            if self.n_draft_proposed else 0.0),
             "swap": (self.swap_arena.stats()
                      if self.swap_arena is not None else None),
             "prefill_chunks": self.prefill_chunks,

@@ -159,9 +159,29 @@ class RequestHandle:
         """Inter-token latencies (seconds between consecutive emitted
         tokens); empty until two tokens exist.  The scheduler's contract is
         that each entry is bounded by one prefill chunk's work, never one
-        prompt's."""
+        prompt's.  Intervals spanning a preemption park or a migration
+        stall are EXCLUDED — a swapped request's park time is queueing,
+        not decode cadence, and it used to pollute itl_p99 as one giant
+        inter-token latency.  The excluded gaps are reported by
+        :meth:`gaps` (DESIGN.md §17)."""
         ts = self.req.out_times
-        return [b - a for a, b in zip(ts, ts[1:])]
+        marks = set(self.req._gap_marks)
+        return [b - a for i, (a, b) in enumerate(zip(ts, ts[1:]), start=1)
+                if i not in marks]
+
+    def gaps(self) -> List[float]:
+        """Service-gap durations (seconds): each inter-token interval that
+        spanned a swap preemption or a live migration, in emission order.
+        ``sum(gaps())`` is the request's total parked/stalled time after
+        its first token."""
+        ts = self.req.out_times
+        return [ts[i] - ts[i - 1] for i in self.req._gap_marks]
+
+    def logprobs(self) -> List[float]:
+        """Sampled-token log-probabilities under each step's FILTERED
+        distribution, one per generated token.  Empty unless the request's
+        sampling policy set ``logprobs=True`` (greedy rows report 0.0)."""
+        return list(self.req.out_logprobs)
 
     # ------------------------------------------------------------- stream
     def tokens(self, poll_s: float = 0.05) -> Iterator[int]:
@@ -314,12 +334,14 @@ class ServingSession:
         self.engine.start()
 
     def warm(self) -> None:
-        """Pre-compile the packed-prefill segment buckets and (when the
-        swap tier is on) the per-page device↔host movers on every shard,
-        so jit cost never lands on a live request's latency.  Safe before
-        or after :meth:`start`."""
+        """Pre-compile the packed-prefill segment buckets, the
+        speculative-decoding propose/verify dispatches (when ``spec_k`` is
+        on), and (when the swap tier is on) the per-page device↔host
+        movers on every shard, so jit cost never lands on a live request's
+        latency.  Safe before or after :meth:`start`."""
         for shard in self.engine.shards:
             shard.warm_packed()
+            shard.warm_spec()
             shard.warm_swap()
 
     def close(self, drain: bool = True, timeout: float = 30.0) -> None:
@@ -339,24 +361,28 @@ class ServingSession:
     # ------------------------------------------------------------- traffic
     def _as_request(self, prompt, max_new_tokens: int, priority: int,
                     timeout_s: Optional[float],
-                    priority_class: Optional[str] = None) -> Request:
+                    priority_class: Optional[str] = None,
+                    sampling=None) -> Request:
         if isinstance(prompt, Request):
             if timeout_s is not None and prompt.timeout_s is None:
                 prompt.timeout_s = timeout_s
             if priority_class is not None and prompt.priority_class is None:
                 prompt.priority_class = priority_class
+            if sampling is not None and prompt.sampling is None:
+                prompt.sampling = sampling
             return prompt
         if priority_class is not None:
             # fail unknown names on the caller's thread, before routing
             self.config.priority_class(priority_class)
         return Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
                        priority=priority, timeout_s=timeout_s,
-                       priority_class=priority_class)
+                       priority_class=priority_class, sampling=sampling)
 
     def submit(self, prompt: Union[Sequence[int], Request], *,
                max_new_tokens: int = 16, priority: int = 0,
                timeout_s: Optional[float] = None,
-               priority_class: Optional[str] = None) -> RequestHandle:
+               priority_class: Optional[str] = None,
+               sampling=None) -> RequestHandle:
         """Async submission: returns immediately with a
         :class:`RequestHandle` (done-event, token stream, cancel).
         ``timeout_s`` is a per-request DEADLINE (falling back to
@@ -366,11 +392,17 @@ class ServingSession:
         bound ``RequestHandle.wait(timeout)``, which only bounds the
         caller's blocking.  ``priority_class`` names one of
         ``ServingConfig.priority_classes``: it overrides ``priority`` and
-        attaches the class's TTFT/ITL SLOs (DESIGN.md §15)."""
+        attaches the class's TTFT/ITL SLOs (DESIGN.md §15).
+        ``sampling`` names a sampling policy (``"greedy"`` /
+        ``"temperature"`` / ``"top_k"`` / ``"top_p"``) or passes a
+        :class:`~repro.serving.sampling.SamplingPolicy` instance carrying
+        the per-request seed, stop sequences and logprobs flag; ``None``
+        is greedy — bit-identical to the pre-sampling engine
+        (DESIGN.md §17)."""
         if self._closed:
             raise RuntimeError("session is closed")
         req = self._as_request(prompt, max_new_tokens, priority, timeout_s,
-                               priority_class)
+                               priority_class, sampling)
         shard = self.engine.submit(req)
         with self._lock:
             self._submitted += 1
@@ -379,14 +411,14 @@ class ServingSession:
     def submit_many(self, prompts: Sequence[Union[Sequence[int], Request]],
                     *, max_new_tokens: int = 16, priority: int = 0,
                     timeout_s: Optional[float] = None,
-                    priority_class: Optional[str] = None
-                    ) -> List[RequestHandle]:
+                    priority_class: Optional[str] = None,
+                    sampling=None) -> List[RequestHandle]:
         """Batched admission wave: per-shard grouped lookups under one SMR
         guard scope each (DESIGN.md §4)."""
         if self._closed:
             raise RuntimeError("session is closed")
         reqs = [self._as_request(p, max_new_tokens, priority, timeout_s,
-                                 priority_class)
+                                 priority_class, sampling)
                 for p in prompts]
         placement = self.engine.submit_many(reqs)
         with self._lock:
@@ -440,6 +472,11 @@ class ServingSession:
             "slo_cancelled": sum(s["slo_cancelled"] for s in shards),
             "itl_slo_violations": sum(s["itl_slo_violations"]
                                       for s in shards),
+            "gap_intervals": sum(s["gap_intervals"] for s in shards),
+            "gap_seconds": sum(s["gap_seconds"] for s in shards),
+            # speculative decoding (DESIGN.md §17)
+            "draft_proposed": sum(s["draft_proposed"] for s in shards),
+            "draft_accepted": sum(s["draft_accepted"] for s in shards),
             "swapped_out": sum(s["swap"]["swapped_out"] for s in shards
                                if s["swap"] is not None),
             "swapped_in": sum(s["swap"]["swapped_in"] for s in shards
@@ -451,6 +488,10 @@ class ServingSession:
         totals["packed_segments_per_chunk"] = (
             totals["packed_segments"] / totals["packed_chunks"]
             if totals["packed_chunks"] else 0.0)
+        # proposal-weighted accept rate (NOT a mean of per-shard rates)
+        totals["accept_rate"] = (
+            totals["draft_accepted"] / totals["draft_proposed"]
+            if totals["draft_proposed"] else 0.0)
         if self.config.shard_smr == "shared":
             # one scheme instance spans every shard: its counters (and the
             # scheme-global awaiting_reclaim each pool reports) would be

@@ -14,9 +14,12 @@ Migration protocol (the cross-domain reclamation exercise from ROADMAP
 item 2; ordering proved safe in DESIGN.md §14):
 
 1. the replay prompt is the request's host-side token stream (prompt +
-   tokens already emitted) — greedy decode is deterministic, so replaying
-   prefill on the target reproduces the un-migrated continuation
-   token-for-token; KV page *contents* never cross domains;
+   tokens already emitted, ``Request.fold_emitted``) — emitted tokens are
+   TEACHER-FORCED: the target re-ingests the recorded ids as prompt
+   tokens and never re-samples them, and every FRESH position draws from
+   the stateless counter PRNG keyed by (request seed, absolute position),
+   so the continuation is token-exact under ANY sampling policy, not just
+   greedy (DESIGN.md §17); KV page *contents* never cross domains;
 2. the TARGET shard pins its own prefix-cache hit for the replay prompt
    (``_ShardEngine.receive_migrated`` → ``BlockPool.import_claim``) and
    enqueues the request — pages re-pinned in the target domain FIRST;
@@ -197,11 +200,17 @@ class SessionWatchdog:
             req.done.set()
             return
         # replay prompt: decode-active sequences replay their emitted
-        # tokens through the target's prefill (deterministic greedy ⇒
-        # the continuation is token-exact).  fold_emitted's cursor makes
+        # tokens through the target's prefill — the recorded ids are
+        # teacher-forced as prompt tokens (never re-sampled), and fresh
+        # positions re-enter the counter PRNG at the same (seed, absolute
+        # position) keys, so the continuation is token-exact under any
+        # sampling policy (DESIGN.md §17).  fold_emitted's cursor makes
         # this idempotent — a request migrated (or preempted) twice must
         # not fold its first leg's tokens twice.
         req.fold_emitted()
+        # the next token after adoption closes a migration-stall gap, not
+        # an inter-token latency: mark it for the ITL gap accounting
+        req._gap_pending = True
         targets = self._healthy_targets()
         # prefix-affine placement among the healthy shards only
         order = []

@@ -33,6 +33,7 @@ API_SURFACE = sorted([
     "as_policy",
     "default_policy",
     "fault_kinds",
+    "sampling_policies",
 ])
 
 CORE_SURFACE = sorted([
@@ -60,6 +61,10 @@ SERVING_SURFACE = sorted([
     "SessionWatchdog", "FaultSpec", "fault_kinds", "parse_fault",
     # host swap tier + priority preemption (DESIGN.md §15)
     "PriorityClass", "parse_priority_class",
+    # replay-exact on-device sampling + speculative decoding (§17)
+    "SamplingPolicy", "GreedySampling", "TemperatureSampling",
+    "TopKSampling", "TopPSampling", "SAMPLING_POLICIES",
+    "sampling_policies", "as_sampling_policy",
 ])
 
 
@@ -93,6 +98,8 @@ def test_registry_names_snapshot():
     assert api.eviction_policies() == ["fifo", "pressure", "lru", "swap"]
     assert api.scheduler_policies() == ["chunked", "oneshot", "roundrobin",
                                         "packed"]
+    assert api.sampling_policies() == ["greedy", "temperature", "top_k",
+                                       "top_p"]
 
 
 def test_scheme_capability_snapshot():
